@@ -1,0 +1,29 @@
+"""Paper Fig. 3(c): quantitative comparison of the four BL routing schemes
+(+ D1b reference), including the full transient tRC per scheme."""
+
+from __future__ import annotations
+
+import jax
+
+from .common import emit, timeit
+
+
+def main():
+    from repro.core.report import fig3_routing_comparison
+    dt, rows = timeit(fig3_routing_comparison, True, repeats=1, warmup=0)
+    n = len(rows)
+    print("# tech scheme CBL(fF) margin(mV) pitch(um) BLSA(um2) manuf tRC(ns)")
+    for r in rows:
+        print(f"# {r['tech']:4s} {r['scheme']:9s} {r['cbl_ff']:7.2f} "
+              f"{r['margin_mv']:8.1f} {r['hcb_pitch_um']:7.3f} "
+              f"{r['blsa_area_um2']:7.3f} {str(r['manufacturable']):5s} "
+              f"{r['trc_ns']:6.2f}")
+    sel = {r["scheme"]: r for r in rows if r["tech"] == "si"}
+    derived = (f"si_sel_strap_cbl={sel['sel_strap']['cbl_ff']:.2f}fF;"
+               f"margin={sel['sel_strap']['margin_mv']:.0f}mV;"
+               f"pitch={sel['sel_strap']['hcb_pitch_um']:.2f}um")
+    emit("fig3_routing_comparison", dt / n * 1e6, derived)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Paper Fig. 9: (a) stack height vs density, (b) sense margin vs density
+with FBE+RH, (c) spec table vs D1b."""
+
+from __future__ import annotations
+
+from .common import emit, timeit
+
+
+def main():
+    from repro.core.report import (fig9a_stack_height,
+                                   fig9b_margin_vs_density,
+                                   fig9c_spec_table)
+
+    dt, rows_a = timeit(fig9a_stack_height, repeats=2)
+    at = [r for r in rows_a if abs(r["density_gb_mm2"] - 2.5) < 0.3]
+    emit("fig9a_stack_height", dt * 1e6,
+         ";".join(f"{r['tech']}@{r['density_gb_mm2']:.1f}= "
+                  f"{r['layers']}L/{r['height_um']:.1f}um" for r in at[:2]))
+
+    dt, rows_b = timeit(fig9b_margin_vs_density, repeats=2)
+    print("# tech density(Gb/mm2) layers margin(mV) margin+FBE/RH(mV) func")
+    for r in rows_b:
+        print(f"# {r['tech']:4s} {r['density_gb_mm2']:6.2f} {r['layers']:4d} "
+              f"{r['margin_mv']:7.1f} {r['margin_with_fbe_rh_mv']:7.1f} "
+              f"{r['functional']}")
+    si26 = [r for r in rows_b if r["tech"] == "si"
+            and abs(r["density_gb_mm2"] - 2.5) < 0.3]
+    emit("fig9b_margin_vs_density", dt * 1e6,
+         f"si_margin_w_disturb@2.5Gb={si26[0]['margin_with_fbe_rh_mv']:.0f}mV"
+         if si26 else "n/a")
+
+    dt, spec = timeit(fig9c_spec_table, True, repeats=1, warmup=0)
+    r = spec["ratios"]
+    emit("fig9c_spec_table", dt * 1e6,
+         f"density_x={r['density_x']:.2f};tRC_speedup={r['trc_speedup_aos']:.2f};"
+         f"Ewr_red={100 * r['write_energy_reduction']:.0f}%;"
+         f"Erd_red={100 * r['read_energy_reduction']:.0f}%")
+
+
+if __name__ == "__main__":
+    main()

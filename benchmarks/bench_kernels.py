@@ -1,0 +1,56 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp oracle vs jit'd
+oracle.  On CPU the jit'd oracle is the fast path; the Pallas numbers
+validate correctness/compileability, not speed (interpret mode is a
+Python interpreter — TPU is the performance target)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .common import emit, timeit
+
+
+def main():
+    from repro.kernels import ref
+    from repro.kernels.rc_transient import rc_multistep_pallas
+    from repro.kernels.strap_gather import strap_attend_pallas
+
+    rng = np.random.default_rng(0)
+    b, n, t = 256, 6, 400
+    c = jnp.asarray(rng.uniform(1, 5, (b, n)), jnp.float32)
+    g = jnp.asarray(rng.uniform(0.05, 0.2, (b, n - 1)), jnp.float32)
+    z = jnp.zeros((b, n), jnp.float32)
+    v0 = jnp.asarray(rng.uniform(0, 1.1, (b, n)), jnp.float32)
+    ramp = jnp.ones((t,), jnp.float32)
+
+    jit_ref = jax.jit(lambda *a: ref.rc_multistep_ref(*a, dt=0.02))
+    dt_ref, _ = timeit(lambda: jit_ref(c, g, z, z, v0, ramp).block_until_ready())
+    emit("rc_multistep_jit_ref_b256_t400", dt_ref * 1e6,
+         f"steps_per_s={b * t / dt_ref:,.0f}")
+    dt_pl, _ = timeit(lambda: rc_multistep_pallas(c, g, z, z, v0, ramp, 0.02,
+                                                  interpret=True),
+                      repeats=1)
+    emit("rc_multistep_pallas_interp", dt_pl * 1e6,
+         f"vs_ref_x={dt_pl / dt_ref:.1f};target=TPU")
+
+    bq, p, page, hkv, d, hq, gg = 4, 32, 64, 8, 128, 32, 4
+    q = jnp.asarray(rng.normal(size=(bq, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(bq, p, page, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(bq, p, page, hkv, d)), jnp.float32)
+    ids = jnp.asarray(np.stack([rng.permutation(p // gg)[: p // gg]
+                                for _ in range(bq)]), jnp.int32)
+    jit_sa = jax.jit(lambda *a: ref.strap_attend_ref(*a, pages_per_strap=gg))
+    dt_sa, _ = timeit(lambda: jit_sa(q, k, v, ids).block_until_ready())
+    toks = p * page
+    emit("strap_attend_jit_ref_2k_ctx", dt_sa * 1e6,
+         f"ctx={toks};tok_reads_per_s={bq * toks / dt_sa:,.0f}")
+    dt_sap, _ = timeit(lambda: strap_attend_pallas(q, k, v, ids, gg,
+                                                   interpret=True), repeats=1)
+    emit("strap_attend_pallas_interp", dt_sap * 1e6,
+         f"vs_ref_x={dt_sap / dt_sa:.1f};target=TPU")
+
+
+if __name__ == "__main__":
+    main()

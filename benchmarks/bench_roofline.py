@@ -1,0 +1,32 @@
+"""Roofline table from the dry-run artifacts (§Roofline of EXPERIMENTS.md
+is generated from this)."""
+
+from __future__ import annotations
+
+from .common import emit, timeit
+
+
+def main():
+    from repro.roofline.analyze import interesting_cells, load_all, table
+
+    dt, rows = timeit(load_all, repeats=1, warmup=0)
+    if not rows:
+        emit("roofline_table", 0.0, "no-dryrun-results")
+        return
+    print("\n".join("# " + l for l in table(rows).splitlines()))
+    picks = interesting_cells(rows)
+    emit("roofline_table", dt / max(len(rows), 1) * 1e6,
+         f"cells={len(rows)};"
+         + ";".join(f"{k}={v.arch}/{v.cell}" for k, v in picks.items() if v))
+
+    # multi-pod collective check: strapped hierarchy on the pod axis
+    multi = load_all(mesh="multi")
+    if multi:
+        cross = sum(r.cross_pod_bytes for r in multi)
+        tot = sum(r.coll_bytes_total for r in multi) or 1
+        emit("roofline_multi_pod", 0.0,
+             f"cells={len(multi)};cross_pod_share={100 * cross / tot:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""StrapCache HBM-traffic reduction sweep (the LM-side analogue of the
+paper's C_BL table): decode traffic vs strap selectivity."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .common import emit, timeit
+
+
+def main():
+    from repro.configs.registry import get_arch
+    from repro.memory.strap_cache import StrapCacheConfig, StrapKVCache
+
+    cfg = get_arch("qwen2-1.5b-smoke")
+    rng = np.random.default_rng(0)
+    b, s, hkv, hd = 2, 1024, cfg.n_kv_heads, cfg.head_dim_
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, hd)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(b, cfg.n_heads, hd)), jnp.float32)
+
+    base = None
+    for top in (0, 16, 8, 4, 2):
+        sc = StrapKVCache.create(StrapCacheConfig(page_size=16,
+                                                  pages_per_strap=4,
+                                                  top_straps=top),
+                                 b, s, hkv, hd, jnp.float32)
+        sc = sc.bulk_load(k, v)
+        dt, out = timeit(lambda: np.asarray(sc.attend(q, backend="ref")),
+                         repeats=2)
+        gated, dense = sc.hbm_bytes_per_token()
+        if top == 0:
+            base = np.asarray(out)
+            err = 0.0
+        else:
+            err = float(np.max(np.abs(np.asarray(out) - base))
+                        / (np.abs(base).max() + 1e-9))
+        emit(f"strap_cache_top{top or 'ALL'}", dt * 1e6,
+             f"traffic={100 * gated / dense:.0f}%;attn_rel_err={err:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Paper Table I: the "This Work" column — cell/array/architecture summary
+plus the DSE run that selects it."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit, timeit
+
+
+def main():
+    from repro.core.dse import best_design, full_sweep
+    from repro.core.report import table1_summary
+
+    dt, summary = timeit(table1_summary, repeats=1, warmup=0)
+    m = summary["sense_margin_mv"]
+    t = summary["trc_ns"]
+    emit("table1_summary", dt * 1e6,
+         f"{summary['bit_density']};margin_si={m['si']:.0f}mV;"
+         f"tRC_si={t['si']:.1f}ns;tRC_d1b={t['d1b']:.1f}ns")
+
+    dt, pts = timeit(full_sweep, np.array([64, 87, 137, 200]), True,
+                     repeats=1, warmup=0)
+    best = best_design(pts)
+    emit("table1_dse_sweep", dt / len(pts) * 1e6,
+         f"points={len(pts)};best={best.tech}/{best.scheme}@{best.layers}L;"
+         f"feasible={sum(p.feasible for p in pts)}")
+
+
+if __name__ == "__main__":
+    main()

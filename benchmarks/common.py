@@ -1,0 +1,20 @@
+"""Benchmark harness utilities: timing + CSV emission."""
+
+from __future__ import annotations
+
+import time
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1, **kw):
+    for _ in range(warmup):
+        fn(*args, **kw)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

@@ -1,0 +1,48 @@
+"""Benchmark driver: one function per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV rows (comment lines start with #).
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig3,fig8,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import (bench_fig3_routing, bench_fig8_transient, bench_fig9_scaling,
+               bench_kernels, bench_roofline, bench_strap_cache,
+               bench_table1)
+
+ALL = {
+    "table1": bench_table1.main,
+    "fig3": bench_fig3_routing.main,
+    "fig8": bench_fig8_transient.main,
+    "fig9": bench_fig9_scaling.main,
+    "kernels": bench_kernels.main,
+    "strap_cache": bench_strap_cache.main,
+    "roofline": bench_roofline.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    names = [n for n in args.only.split(",") if n] or list(ALL)
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        try:
+            ALL[name]()
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""End-to-end design-space exploration — the paper's co-optimization flow.
+
+Sweeps (technology x routing scheme x layer count), applies the paper's
+feasibility rules (sense margin incl. FBE/RH, manufacturable HCB pitch),
+prints the Pareto front and the selected design point, and compares it to
+the D1b baseline — i.e., regenerates the substance of Table I / Fig. 9(c).
+
+Run:  PYTHONPATH=src python examples/dram_codesign.py
+"""
+
+import numpy as np
+
+from repro.core import calibration as cal
+from repro.core.dse import best_design, full_sweep, pareto_front
+
+print("sweeping design space (2 techs x 4 routing schemes x 9 layer "
+      "counts, full transient per point)...")
+pts = full_sweep()
+
+feas = [p for p in pts if p.feasible]
+print(f"\n{len(pts)} design points, {len(feas)} feasible "
+      f"(margin nominal>={cal.MIN_FUNCTIONAL_MARGIN_MV:.0f} mV, "
+      f"disturbed>={cal.MIN_DISTURBED_MARGIN_MV:.0f} mV, "
+      f"pitch>={cal.HCB_MIN_MANUFACTURABLE_PITCH_UM} um)")
+
+front = pareto_front(pts)
+print(f"\nPareto front ({len(front)} points):")
+print(f"{'tech':5s} {'scheme':10s} {'L':>4s} {'Gb/mm2':>7s} {'dV(mV)':>7s} "
+      f"{'dV+dist':>8s} {'tRC(ns)':>8s} {'Erd(fJ)':>8s} {'pitch':>6s}")
+for p in sorted(front, key=lambda p: -p.density_gb_mm2)[:12]:
+    print(f"{p.tech:5s} {p.scheme:10s} {p.layers:4d} "
+          f"{p.density_gb_mm2:7.2f} {p.margin_mv:7.0f} "
+          f"{p.margin_disturbed_mv:8.0f} {p.trc_ns:8.2f} "
+          f"{p.e_read_fj:8.2f} {p.hcb_pitch_um:6.2f}")
+
+best = best_design(pts)
+print(f"\nselected design (paper's rule: hit {cal.DENSITY_TARGET_GB_MM2} "
+      f"Gb/mm2, min tRC):")
+print(f"  {best.tech} / {best.scheme} @ {best.layers} layers -> "
+      f"{best.density_gb_mm2:.2f} Gb/mm2, tRC {best.trc_ns:.2f} ns, "
+      f"margin {best.margin_mv:.0f} mV ({best.margin_disturbed_mv:.0f} mV "
+      f"w/ FBE+RH), E_rd {best.e_read_fj:.2f} fJ, "
+      f"HCB pitch {best.hcb_pitch_um:.2f} um")
+
+d1b = [p for p in pts if p.tech == "d1b"][0]
+print(f"\nvs D1b baseline: density x{best.density_gb_mm2 / d1b.density_gb_mm2:.1f}, "
+      f"tRC x{d1b.trc_ns / best.trc_ns:.2f} faster, "
+      f"E_rd x{d1b.e_read_fj / best.e_read_fj:.2f} lower")

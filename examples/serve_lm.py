@@ -1,0 +1,53 @@
+"""Batched serving with the selector+strap KV cache.
+
+Compares dense decode vs StrapCache exact mode (bit-identical greedy
+stream) vs gated mode (top-k straps: the paper's C_BL-reduction analogue),
+reporting tokens/s and HBM traffic.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_arch
+from repro.memory.strap_cache import StrapCacheConfig
+from repro.models import registry as M
+from repro.serving.engine import ServeEngine
+
+cfg = get_arch("qwen2-1.5b-smoke")
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+B, PROMPT, NEW = 4, 128, 16
+prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, PROMPT)), jnp.int32)
+MAX = PROMPT + NEW + 16
+
+print(f"batch={B}, prompt={PROMPT}, new_tokens={NEW}\n")
+results = {}
+for name, backend, top in (("dense", "dense", 0),
+                           ("strap-exact", "strap", 0),
+                           ("strap-gated(top4)", "strap", 4)):
+    eng = ServeEngine(cfg, params, max_tokens=MAX, cache_backend=backend,
+                      strap_cfg=StrapCacheConfig(page_size=16,
+                                                 pages_per_strap=2,
+                                                 top_straps=top))
+    t0 = time.time()
+    out = eng.generate(prompts, NEW)
+    dt = time.time() - t0
+    results[name] = np.asarray(out)
+    line = f"{name:18s} {B * NEW / dt:7.1f} tok/s"
+    if backend == "strap":
+        line += (f"   HBM traffic vs dense: "
+                 f"{100 * eng.stats.traffic_reduction:5.1f}%")
+    print(line)
+
+exact_match = (results["dense"] == results["strap-exact"]).all()
+gated_match = (results["dense"] == results["strap-gated(top4)"]).mean()
+print(f"\nstrap-exact == dense: {bool(exact_match)} (bit-identical greedy)")
+print(f"gated token agreement: {100 * gated_match:.0f}% "
+      f"(untrained weights = worst case for the selector; trained models "
+      f"concentrate attention mass within few straps)")
+assert exact_match

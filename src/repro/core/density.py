@@ -1,0 +1,42 @@
+"""Bit density, stack height and scaling projections (Fig. 9a).
+
+  density(L)  = L * array_efficiency / cell_area
+  height(L)   = L * layer_height
+  layers(rho) = ceil(rho * cell_area / array_efficiency)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import calibration as cal
+from .calibration import TechCal
+from .units import GBIT, NM2_PER_MM2
+
+
+def cell_area_nm2(tech: TechCal) -> float:
+    return tech.cell_x_nm * tech.cell_y_nm
+
+
+def bit_density_gb_mm2(tech: TechCal, layers) -> jnp.ndarray:
+    if tech.name == "d1b":
+        return jnp.full_like(jnp.asarray(layers, jnp.float32),
+                             cal.D1B_BIT_DENSITY_GB_MM2)
+    layers = jnp.asarray(layers, jnp.float32)
+    per_layer = tech.array_efficiency / cell_area_nm2(tech) * NM2_PER_MM2 / GBIT
+    return layers * per_layer
+
+
+def layers_for_density(tech: TechCal, density_gb_mm2) -> jnp.ndarray:
+    density = jnp.asarray(density_gb_mm2, jnp.float32)
+    per_layer = tech.array_efficiency / cell_area_nm2(tech) * NM2_PER_MM2 / GBIT
+    return jnp.ceil(density / per_layer).astype(jnp.int32)
+
+
+def stack_height_um(tech: TechCal, layers) -> jnp.ndarray:
+    layers = jnp.asarray(layers, jnp.float32)
+    return layers * tech.layer_height_nm * 1e-3
+
+
+def density_scaling_vs_d1b(tech: TechCal, layers) -> jnp.ndarray:
+    return bit_density_gb_mm2(tech, layers) / cal.D1B_BIT_DENSITY_GB_MM2

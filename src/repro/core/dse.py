@@ -1,0 +1,122 @@
+"""Design-space exploration — the "co-optimization" of the paper's title.
+
+Sweeps (technology x routing scheme x layer count) fully vectorized, scores
+every design point on density / margin / latency / energy / bonding
+feasibility, and extracts the feasible Pareto front.  This is what turns
+the calibrated physics models into the paper's conclusion: the selector+
+strap topology is the only corner that is simultaneously manufacturable
+(pitch), functional (margin), and fast/efficient.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import calibration as cal
+from .calibration import TECHS, TechCal
+from .density import bit_density_gb_mm2, stack_height_um
+from .energy import read_energy_fj, write_energy_fj
+from .netlist import effective_cbl_ff
+from .routing import SCHEMES, bonding_geometry
+from .sense import sense_margin_mv
+from .transient import simulate_row_cycle
+
+
+@dataclass(frozen=True)
+class DesignPoint:
+    tech: str
+    scheme: str
+    layers: int
+    density_gb_mm2: float
+    height_um: float
+    cbl_ff: float
+    margin_mv: float
+    margin_disturbed_mv: float
+    trc_ns: float
+    e_write_fj: float
+    e_read_fj: float
+    hcb_pitch_um: float
+    blsa_area_um2: float
+    feasible: bool
+
+
+def evaluate_grid(tech: TechCal, scheme: str, layers: np.ndarray,
+                  with_transient: bool = True) -> list[DesignPoint]:
+    """Evaluate a vector of layer counts for one (tech, scheme)."""
+    arr = jnp.asarray(layers)
+    dens = np.asarray(bit_density_gb_mm2(tech, arr))
+    height = np.asarray(stack_height_um(tech, arr))
+    cbl = np.asarray(effective_cbl_ff(tech, scheme, arr))
+    margin = np.asarray(sense_margin_mv(tech, scheme, arr))
+    margin_d = np.asarray(sense_margin_mv(tech, scheme, arr, with_disturb=True))
+    e_wr = np.asarray(write_energy_fj(tech, scheme, arr))
+    e_rd = np.asarray(read_energy_fj(tech, scheme, arr))
+    geom = bonding_geometry(tech, scheme)
+    pitch = float(geom.hcb_pitch_um)
+    blsa = float(geom.blsa_area_um2)
+    manufacturable = bool(geom.manufacturable) or tech.name == "d1b"
+    if with_transient:
+        trc = np.asarray(simulate_row_cycle(tech, scheme, arr).trc_ns)
+    else:
+        trc = np.full(len(layers), np.nan)
+
+    pts = []
+    for i, layer in enumerate(np.asarray(layers)):
+        feas = (manufacturable
+                and margin[i] >= cal.MIN_FUNCTIONAL_MARGIN_MV - 1e-9
+                and margin_d[i] >= cal.MIN_DISTURBED_MARGIN_MV - 1e-9)
+        pts.append(DesignPoint(
+            tech=tech.name, scheme=scheme, layers=int(layer),
+            density_gb_mm2=float(dens[i]), height_um=float(height[i]),
+            cbl_ff=float(cbl[i]), margin_mv=float(margin[i]),
+            margin_disturbed_mv=float(margin_d[i]), trc_ns=float(trc[i]),
+            e_write_fj=float(e_wr[i]), e_read_fj=float(e_rd[i]),
+            hcb_pitch_um=pitch, blsa_area_um2=blsa, feasible=bool(feas)))
+    return pts
+
+
+def full_sweep(layer_grid: np.ndarray | None = None,
+               with_transient: bool = True) -> list[DesignPoint]:
+    if layer_grid is None:
+        layer_grid = np.array([32, 48, 64, 87, 100, 120, 137, 160, 200])
+    out: list[DesignPoint] = []
+    for tname, tech in TECHS.items():
+        if tname == "d1b":
+            out.extend(evaluate_grid(tech, "direct", np.array([1]),
+                                     with_transient))
+            continue
+        for scheme in SCHEMES:
+            out.extend(evaluate_grid(tech, scheme, layer_grid, with_transient))
+    return out
+
+
+def pareto_front(points: list[DesignPoint],
+                 require_feasible: bool = True) -> list[DesignPoint]:
+    """Non-dominated set maximizing density & margin, minimizing tRC & E."""
+    cand = [p for p in points if (p.feasible or not require_feasible)]
+
+    def dominates(a: DesignPoint, b: DesignPoint) -> bool:
+        ge = (a.density_gb_mm2 >= b.density_gb_mm2
+              and a.margin_disturbed_mv >= b.margin_disturbed_mv
+              and a.trc_ns <= b.trc_ns and a.e_read_fj <= b.e_read_fj)
+        gt = (a.density_gb_mm2 > b.density_gb_mm2
+              or a.margin_disturbed_mv > b.margin_disturbed_mv
+              or a.trc_ns < b.trc_ns or a.e_read_fj < b.e_read_fj)
+        return ge and gt
+
+    return [p for p in cand
+            if not any(dominates(q, p) for q in cand if q is not p)]
+
+
+def best_design(points: list[DesignPoint],
+                density_target: float = cal.DENSITY_TARGET_GB_MM2):
+    """The paper's selection rule: hit the density target with a functional,
+    manufacturable design; break ties by tRC then read energy."""
+    ok = [p for p in points if p.feasible
+          and p.density_gb_mm2 >= density_target - 1e-9]
+    if not ok:
+        return None
+    return min(ok, key=lambda p: (p.trc_ns, p.e_read_fj, p.height_um))

@@ -1,0 +1,36 @@
+"""Read/write energy model (Fig. 9c).
+
+  E_write = 1/2 (Cs + C_BL) VDD^2 * eta        full-swing write of cell+BL
+  E_read  = 1/2 C_BL (VDD/2)^2 * eta + E_SA    half-swing develop + latch
+
+The 2D baseline additionally swings its lateral IO routing (c_route_extra)
+— capacitance the CBA's vertical bonding eliminates; its SA is larger
+(D1B_E_SA_FJ).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import calibration as cal
+from .calibration import TechCal
+from .netlist import effective_cbl_ff
+
+
+def write_energy_fj(tech: TechCal, scheme: str, layers) -> jnp.ndarray:
+    cbl = effective_cbl_ff(tech, scheme, layers) + tech.c_route_extra_ff
+    v = cal.VDD_ARRAY
+    return 0.5 * (cal.CS_FF + cbl) * v * v * cal.ENERGY_EFF
+
+
+def read_energy_fj(tech: TechCal, scheme: str, layers) -> jnp.ndarray:
+    cbl = effective_cbl_ff(tech, scheme, layers) + tech.c_route_extra_ff
+    v = cal.VDD_ARRAY / 2.0
+    e_sa = cal.D1B_E_SA_FJ if tech.name == "d1b" else cal.E_SA_FJ
+    return 0.5 * cbl * v * v * cal.ENERGY_EFF + e_sa
+
+
+def wl_energy_fj(tech: TechCal) -> jnp.ndarray:
+    """WL driver energy per activation (the 3D design's reduced VPP pays off)."""
+    vpp = cal.VPP_D1B if tech.name == "d1b" else cal.VPP_3D
+    return 0.5 * tech.c_wl_ff * vpp * vpp

@@ -1,0 +1,72 @@
+"""RC netlist assembly for the sensing path (the paper's SPICE deck, Fig. 7).
+
+Topology (single-ended half of the open-BL pair), node order:
+
+   0: BLSA / global sense node      (C_global + C_hcb + C_sa [+ C_unsel])
+   1..K: local-BL segments          (C_local split into K lumps)
+   K+1: storage node                (Cs)
+
+ branches:
+   0-1        : R_global + R_selector (scheme dependent)
+   i-(i+1)    : R_local / K  (distributed local BL)
+   K-(K+1)    : access transistor (time-varying: scaled by the WL ramp)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from . import calibration as cal
+from .calibration import TechCal
+from .parasitics import bl_parasitics
+
+N_BL_SEGMENTS = 4
+N_NODES = N_BL_SEGMENTS + 2
+
+
+@dataclass(frozen=True)
+class Ladder:
+    """Batched ladder: arrays shaped (B, N) / (B, N-1)."""
+    c: jnp.ndarray          # node capacitances (fF)
+    g_branch: jnp.ndarray   # branch conductances (1/kOhm); last = access @ scale 1
+    tech_name: str
+    scheme: str
+
+    @property
+    def n_nodes(self) -> int:
+        return self.c.shape[-1]
+
+
+def build_bl_ladder(tech: TechCal, scheme: str, layers) -> Ladder:
+    """Assemble the batched sensing-path ladder for a technology/scheme.
+
+    `layers` may be a scalar or a 1-D array of design points (the batch).
+    """
+    layers = jnp.atleast_1d(jnp.asarray(layers, jnp.float32))
+    par = bl_parasitics(tech, scheme, layers)
+    b = layers.shape[0]
+    k = N_BL_SEGMENTS
+
+    c = jnp.zeros((b, N_NODES), jnp.float32)
+    # sense node: global metal + pad + SA input + (non-isolated straps)
+    c = c.at[:, 0].set(par.c_global_ff + par.c_sa_ff + par.c_unselected_ff)
+    # distributed local BL
+    c = c.at[:, 1:k + 1].set((par.c_local_ff / k)[:, None])
+    # storage node
+    c = c.at[:, k + 1].set(cal.CS_FF)
+
+    g = jnp.zeros((b, N_NODES - 1), jnp.float32)
+    r_front = par.r_path_kohm - tech.r_local_bl_kohm  # selector+global part
+    r_front = jnp.maximum(r_front, 0.05)
+    g = g.at[:, 0].set(1.0 / r_front)
+    r_seg = jnp.maximum(tech.r_local_bl_kohm / k, 0.05)
+    g = g.at[:, 1:k].set(1.0 / r_seg)
+    g = g.at[:, k].set(1.0 / par.r_on_kohm)           # access transistor
+    return Ladder(c=c, g_branch=g, tech_name=tech.name, scheme=scheme)
+
+
+def effective_cbl_ff(tech: TechCal, scheme: str, layers) -> jnp.ndarray:
+    """Effective C_BL (all capacitance the cell must share charge with)."""
+    return bl_parasitics(tech, scheme, layers).c_bl_total_ff

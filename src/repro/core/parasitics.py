@@ -1,0 +1,113 @@
+"""Array parasitic assembly (the paper's TCAD extraction layer).
+
+Produces the effective bitline capacitance / resistance decomposition per
+(technology, routing scheme, layer count).  The *structure* of the
+decomposition encodes the paper's central claim: with the BL selector, only
+the selected strap's local BL hangs on the global line; without it, every
+strap on the global line contributes its local capacitance.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from . import calibration as cal
+from .calibration import TechCal
+
+
+@dataclass(frozen=True)
+class BLParasitics:
+    """Effective single-ended BL network as seen by the BLSA."""
+    c_local_ff: jnp.ndarray      # selected local (vertical) BL
+    c_unselected_ff: jnp.ndarray # unselected local BLs coupled onto the global line
+    c_global_ff: jnp.ndarray     # global strap metal + HCB pad (+ 2D lateral route)
+    c_sa_ff: jnp.ndarray         # BLSA input
+    r_path_kohm: jnp.ndarray     # series resistance BLSA -> cell (excl. access tr.)
+    r_on_kohm: jnp.ndarray       # access transistor effective on-resistance
+
+    @property
+    def c_bl_total_ff(self) -> jnp.ndarray:
+        """Effective C_BL (everything the sense node must charge except Cs)."""
+        return self.c_local_ff + self.c_unselected_ff + self.c_global_ff + self.c_sa_ff
+
+
+def local_bl_cap_ff(tech: TechCal, layers) -> jnp.ndarray:
+    """Vertical local BL: per-tier sidewall/fringe capacitance x tier count,
+    plus the selector junction it terminates in."""
+    layers = jnp.asarray(layers, jnp.float32)
+    return layers * tech.c_bl_per_layer_ff + tech.c_sel_junction_ff
+
+
+def bl_parasitics(tech: TechCal, scheme: str, layers) -> BLParasitics:
+    """Assemble the BL network for one of the four routing schemes (Fig. 2).
+
+    Schemes:
+      direct    : every vertical BL is bonded straight to its own BLSA.
+                  No selector junction, no global strap metal.
+      strap     : BLs strapped onto a global line; *all* straps on the line
+                  stay electrically connected (no isolation).
+      core_mux  : mux at the array core; local BL + short metal to the mux,
+                  mux junction; still one bond per mux output at tight pitch.
+      sel_strap : the paper's proposal; selector isolates unselected straps,
+                  so the global line sees only junctions + one local BL.
+    """
+    layers = jnp.asarray(layers, jnp.float32)
+    zero = jnp.zeros_like(layers)
+    c_vert = layers * tech.c_bl_per_layer_ff
+
+    if tech.name == "d1b":
+        # Planar baseline: fixed long lateral BL, no stacking.  The lateral
+        # IO routing (c_route_extra) sits *behind* the column select and is
+        # swung only on data transfer -> it is charged to the energy model,
+        # not to the sensing ladder.
+        c_local = jnp.full_like(layers, cal.D1B_C_BL_FF - tech.c_blsa_in_ff)
+        return BLParasitics(
+            c_local_ff=c_local,
+            c_unselected_ff=zero,
+            c_global_ff=zero,
+            c_sa_ff=zero + tech.c_blsa_in_ff,
+            r_path_kohm=zero + tech.r_local_bl_kohm,
+            r_on_kohm=zero + tech.r_on_cell_kohm,
+        )
+
+    if scheme == "direct":
+        c_local = c_vert
+        c_unsel = zero
+        c_glob = zero + tech.c_hcb_pad_ff
+        r_path = zero + tech.r_local_bl_kohm
+    elif scheme == "strap":
+        # no selector: every strap's local BL + its junctionless tap loads
+        # the global line.
+        c_local = c_vert
+        c_unsel = (cal.STRAPS_PER_GLOBAL - 1) * c_vert
+        c_glob = zero + tech.c_global_strap_ff + tech.c_hcb_pad_ff
+        r_path = zero + tech.r_local_bl_kohm + tech.r_global_kohm
+    elif scheme == "core_mux":
+        c_local = c_vert + tech.c_sel_junction_ff
+        c_unsel = zero
+        c_glob = zero + 0.4 + tech.c_hcb_pad_ff      # short metal to core mux
+        r_path = zero + tech.r_local_bl_kohm + tech.r_sel_kohm
+    elif scheme == "sel_strap":
+        c_local = c_vert + tech.c_sel_junction_ff
+        c_unsel = zero                               # isolated by the selector
+        c_glob = zero + tech.c_global_strap_ff + tech.c_hcb_pad_ff
+        r_path = (zero + tech.r_local_bl_kohm + tech.r_sel_kohm
+                  + tech.r_global_kohm)
+    else:
+        raise ValueError(f"unknown routing scheme: {scheme}")
+
+    return BLParasitics(
+        c_local_ff=c_local,
+        c_unselected_ff=c_unsel,
+        c_global_ff=c_glob,
+        c_sa_ff=zero + tech.c_blsa_in_ff,
+        r_path_kohm=r_path,
+        r_on_kohm=zero + tech.r_on_cell_kohm,
+    )
+
+
+def wl_parasitics(tech: TechCal):
+    """WL loading seen by the sub-wordline driver (R in kOhm, C in fF)."""
+    return tech.r_wl_kohm, tech.c_wl_ff

@@ -1,0 +1,147 @@
+"""Paper-table generators: everything the benchmarks print comes from here.
+
+Each function corresponds to a paper artifact:
+  fig3_routing_comparison  -> Fig. 3(c): four schemes, quantitative
+  fig9a_stack_height       -> Fig. 9(a): height vs density
+  fig9b_margin_vs_density  -> Fig. 9(b): margin w/ FBE+RH vs density
+  fig9c_spec_table         -> Fig. 9(c): this-work vs D1b spec comparison
+  table1_summary           -> Table I "This Work" column quantities
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import calibration as cal
+from .calibration import AOS, D1B, SI, TECHS
+from .density import bit_density_gb_mm2, layers_for_density, stack_height_um
+from .energy import read_energy_fj, write_energy_fj
+from .netlist import effective_cbl_ff
+from .routing import SCHEME_LABELS, SCHEMES, bonding_geometry
+from .sense import sense_margin_mv
+from .transient import simulate_row_cycle
+
+
+def fig3_routing_comparison(with_transient: bool = True) -> list[dict]:
+    rows = []
+    for tech in (SI, AOS):
+        layers = jnp.asarray([tech.layers_target])
+        for scheme in SCHEMES:
+            geom = bonding_geometry(tech, scheme)
+            row = dict(
+                tech=tech.name, scheme=scheme, label=SCHEME_LABELS[scheme],
+                cbl_ff=float(effective_cbl_ff(tech, scheme, layers)[0]),
+                margin_mv=float(sense_margin_mv(tech, scheme, layers)[0]),
+                hcb_pitch_um=float(geom.hcb_pitch_um),
+                blsa_area_um2=float(geom.blsa_area_um2),
+                manufacturable=bool(geom.manufacturable),
+            )
+            if with_transient:
+                res = simulate_row_cycle(tech, scheme, layers)
+                row["trc_ns"] = float(res.trc_ns[0])
+                row["t_sense_ns"] = float(res.t_sense_ns[0])
+            rows.append(row)
+    # D1b reference row
+    layers = jnp.asarray([1])
+    row = dict(tech="d1b", scheme="direct", label="D1b 2D baseline",
+               cbl_ff=float(effective_cbl_ff(D1B, "direct", layers)[0]),
+               margin_mv=float(sense_margin_mv(D1B, "direct", layers)[0]),
+               hcb_pitch_um=0.0, blsa_area_um2=cal.D1B_BLSA_AREA_UM2,
+               manufacturable=True)
+    if with_transient:
+        res = simulate_row_cycle(D1B, "direct", layers)
+        row["trc_ns"] = float(res.trc_ns[0])
+        row["t_sense_ns"] = float(res.t_sense_ns[0])
+    rows.append(row)
+    return rows
+
+
+def fig9a_stack_height(densities=None) -> list[dict]:
+    if densities is None:
+        densities = np.linspace(0.5, 3.5, 13)
+    rows = []
+    for tech in (SI, AOS):
+        layers = np.asarray(layers_for_density(tech, densities))
+        heights = np.asarray(stack_height_um(tech, layers))
+        for d, l, h in zip(densities, layers, heights):
+            rows.append(dict(tech=tech.name, density_gb_mm2=float(d),
+                             layers=int(l), height_um=float(h)))
+    return rows
+
+
+def fig9b_margin_vs_density(densities=None, scheme: str = "sel_strap") -> list[dict]:
+    if densities is None:
+        densities = np.linspace(0.5, 3.5, 13)
+    rows = []
+    for tech in (SI, AOS):
+        layers = jnp.asarray(np.asarray(layers_for_density(tech, densities)))
+        margin = np.asarray(sense_margin_mv(tech, scheme, layers))
+        margin_d = np.asarray(sense_margin_mv(tech, scheme, layers,
+                                              with_disturb=True))
+        for d, l, m, md in zip(densities, np.asarray(layers), margin, margin_d):
+            rows.append(dict(
+                tech=tech.name, density_gb_mm2=float(d), layers=int(l),
+                margin_mv=float(m), margin_with_fbe_rh_mv=float(md),
+                functional=bool(md >= cal.MIN_DISTURBED_MARGIN_MV)))
+    return rows
+
+
+def fig9c_spec_table(with_transient: bool = True) -> dict:
+    """This-work (Si/AOS @ 2.6 Gb/mm^2, sel_strap) vs D1b."""
+    out = {}
+    for tech in (SI, AOS, D1B):
+        scheme = "direct" if tech.name == "d1b" else "sel_strap"
+        layers = jnp.asarray([tech.layers_target])
+        entry = dict(
+            layers=int(tech.layers_target),
+            bit_density_gb_mm2=float(bit_density_gb_mm2(tech, layers)[0]),
+            stack_height_um=float(stack_height_um(tech, layers)[0]),
+            cbl_ff=float(effective_cbl_ff(tech, scheme, layers)[0]),
+            sense_margin_mv=float(sense_margin_mv(tech, scheme, layers)[0]),
+            sense_margin_disturbed_mv=float(
+                sense_margin_mv(tech, scheme, layers, with_disturb=True)[0]),
+            e_write_fj=float(write_energy_fj(tech, scheme, layers)[0]),
+            e_read_fj=float(read_energy_fj(tech, scheme, layers)[0]),
+            vpp=cal.VPP_D1B if tech.name == "d1b" else cal.VPP_3D,
+        )
+        if tech.name != "d1b":
+            geom = bonding_geometry(tech, scheme)
+            entry["hcb_pitch_um"] = float(geom.hcb_pitch_um)
+            entry["blsa_area_um2"] = float(geom.blsa_area_um2)
+        else:
+            entry["blsa_area_um2"] = cal.D1B_BLSA_AREA_UM2
+        if with_transient:
+            entry["trc_ns"] = float(
+                simulate_row_cycle(tech, scheme, layers).trc_ns[0])
+        out[tech.name] = entry
+    # headline ratios
+    if with_transient:
+        out["ratios"] = dict(
+            density_x=out["si"]["bit_density_gb_mm2"] / cal.D1B_BIT_DENSITY_GB_MM2,
+            trc_speedup_si=out["d1b"]["trc_ns"] / out["si"]["trc_ns"],
+            trc_speedup_aos=out["d1b"]["trc_ns"] / out["aos"]["trc_ns"],
+            write_energy_reduction=1 - out["si"]["e_write_fj"] / out["d1b"]["e_write_fj"],
+            read_energy_reduction=1 - out["si"]["e_read_fj"] / out["d1b"]["e_read_fj"],
+        )
+    return out
+
+
+def table1_summary() -> dict:
+    spec = fig9c_spec_table(with_transient=True)
+    return dict(
+        cell_structure="GAA, line-type isolation",
+        channel=("epitaxial Si (Si-SiGe) & AOS (Si deposition)"),
+        array_direction="VBL",
+        wl_bl_routing="HCB CBA: BL/WL selector, strap",
+        bit_density="2.6 Gb/mm^2: %dL (Si), %dL (AOS)" % (
+            spec["si"]["layers"], spec["aos"]["layers"]),
+        sense_margin_mv=dict(si=spec["si"]["sense_margin_mv"],
+                             aos=spec["aos"]["sense_margin_mv"],
+                             d1b=spec["d1b"]["sense_margin_mv"]),
+        trc_ns=dict(si=spec["si"]["trc_ns"], aos=spec["aos"]["trc_ns"],
+                    d1b=spec["d1b"]["trc_ns"]),
+        energy_fj=dict(
+            write_si=spec["si"]["e_write_fj"], write_aos=spec["aos"]["e_write_fj"],
+            read_si=spec["si"]["e_read_fj"], read_aos=spec["aos"]["e_read_fj"]),
+    )

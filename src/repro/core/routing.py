@@ -1,0 +1,63 @@
+"""BL routing schemes and CBA bonding geometry (Figs. 2-5).
+
+Key structural identities (derived, not tabulated):
+
+  pitch(direct)     = sqrt(cell_x * hcb_route_span)   # one bond per BL column
+  pitch(core_mux)   = pitch(direct)                    # mux sits at the core,
+                                                       # bond count unchanged
+  pitch(strap-like) = pitch(direct) * sqrt(BLS_PER_STRAP)
+                                                       # 8 BLs share one bond
+  BLSA area         = 2 * pitch^2                      # open-BL, two bond rows
+                                                       # (ref + signal) per SA
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from . import calibration as cal
+from .calibration import TechCal
+
+SCHEMES = ("direct", "strap", "core_mux", "sel_strap")
+
+SCHEME_LABELS = {
+    "direct": "(a) Direct BLSA connection",
+    "strap": "(b) BL strapping",
+    "core_mux": "(c) Core MUX",
+    "sel_strap": "(d) BL Selector + Strap (this work)",
+}
+
+# Which schemes let the inactive BL float at a refresh potential (decoupled
+# from the global line) -> FBE / off-leakage mitigation.
+SCHEME_ISOLATES_UNSELECTED = {
+    "direct": False, "strap": False, "core_mux": False, "sel_strap": True,
+}
+
+
+@dataclass(frozen=True)
+class BondingGeometry:
+    hcb_pitch_um: jnp.ndarray
+    blsa_area_um2: jnp.ndarray
+    manufacturable: jnp.ndarray      # pitch within the W2W HCB window
+    bonds_per_mm2_m: jnp.ndarray     # bond density (millions / mm^2)
+
+
+def hcb_pitch_um(tech: TechCal, scheme: str) -> jnp.ndarray:
+    """Required hybrid-bond pitch for the scheme on this technology."""
+    if tech.name == "d1b":
+        return jnp.asarray(0.0)      # no bonding in the planar baseline
+    direct = jnp.sqrt(tech.cell_x_nm * 1e-3 * tech.hcb_route_span_um)
+    if scheme in ("direct", "core_mux"):
+        return direct
+    # strap-type schemes share one bond across the strap's BL group
+    return direct * jnp.sqrt(float(cal.BLS_PER_STRAP))
+
+
+def bonding_geometry(tech: TechCal, scheme: str) -> BondingGeometry:
+    pitch = hcb_pitch_um(tech, scheme)
+    blsa_area = 2.0 * pitch * pitch
+    ok = pitch >= cal.HCB_MIN_MANUFACTURABLE_PITCH_UM
+    dens = jnp.where(pitch > 0, 1.0 / jnp.maximum(pitch * pitch, 1e-9) * 1e-6, 0.0)
+    return BondingGeometry(pitch, blsa_area, ok, dens)

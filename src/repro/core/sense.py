@@ -1,0 +1,44 @@
+"""Sense-margin model (full SWD + BLSA compact model, Fig. 3).
+
+  dV_nominal = (VDD/2) * Cs/(Cs + C_BL)            charge sharing
+             - (1 - writeback_eff) * (VDD/2)       incomplete restore level
+             - V_offset_SA                         input-referred SA offset
+
+  dV_disturbed = dV_nominal - disturb_loss(FBE+RH) (Fig. 9b)
+
+All terms in mV.  Batched over `layers` design points.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import calibration as cal
+from .calibration import TechCal
+from .disturb import disturb_loss_mv
+from .netlist import effective_cbl_ff
+
+
+def charge_share_mv(tech: TechCal, scheme: str, layers) -> jnp.ndarray:
+    cbl = effective_cbl_ff(tech, scheme, layers)
+    return 1e3 * (cal.VDD_ARRAY / 2.0) * cal.CS_FF / (cal.CS_FF + cbl)
+
+
+def sense_margin_mv(tech: TechCal, scheme: str, layers,
+                    with_disturb: bool = False) -> jnp.ndarray:
+    dv = charge_share_mv(tech, scheme, layers)
+    dv = dv - (1.0 - tech.writeback_eff) * (cal.VDD_ARRAY / 2.0) * 1e3
+    dv = dv - tech.sa_offset_mv
+    if with_disturb:
+        dv = dv - disturb_loss_mv(tech, scheme, layers)
+    return dv
+
+
+def functional(tech: TechCal, scheme: str, layers,
+               with_disturb: bool = True) -> jnp.ndarray:
+    """Feasibility: margin above the functional sensing threshold
+    (80 mV nominal; 60 mV with FBE+RH disturb, per the paper's 70 mV
+    functional Si point)."""
+    thresh = (cal.MIN_DISTURBED_MARGIN_MV if with_disturb
+              else cal.MIN_FUNCTIONAL_MARGIN_MV)
+    return sense_margin_mv(tech, scheme, layers, with_disturb) >= thresh

@@ -1,0 +1,140 @@
+"""Batched transient simulation of the full row cycle (the paper's Fig. 8).
+
+Implicit-Euler on the sensing-path RC ladder with a behavioral BLSA, phased
+exactly like a DRAM row cycle:
+
+  ACT   : WL ramps up (access branch scale 0->1), cell shares charge with
+          the BL network; the BLSA is enabled once the sense node has
+          developed 90% of its asymptotic signal (+ latch regeneration).
+  RESTORE: the latched BLSA drives the sense node to the full rail through
+          its drive resistance, recharging the cell through the BL + access
+          transistor until 95% of VDD is restored.
+  PRE   : WL ramps down, equalizer clamps all BL nodes to VDD/2 until
+          within 5 mV.
+
+tRC = t_overhead + t(ACT+RESTORE) + t(PRE).
+
+Everything is vmap-able over a batch of design points; the inner loop is
+`repro.kernels.ops.rc_multistep` (Pallas on TPU, jnp oracle on CPU).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from . import calibration as cal
+from .calibration import TechCal
+from .netlist import Ladder, N_BL_SEGMENTS, build_bl_ladder
+from ..kernels import ops
+from .units import tau_ns
+
+DT_NS = 0.02
+T_ACT_NS = 16.0
+T_RESTORE_NS = 20.0
+T_PRE_NS = 10.0
+
+
+@dataclass(frozen=True)
+class RowCycleResult:
+    t_sense_ns: jnp.ndarray       # WL start -> SA latched
+    t_restore_ns: jnp.ndarray     # WL start -> cell restored (tRAS analogue)
+    t_precharge_ns: jnp.ndarray   # precharge duration (tRP analogue)
+    trc_ns: jnp.ndarray           # total row cycle
+    dv_sense_v: jnp.ndarray       # developed signal at SA enable
+    traces: dict                  # phase -> (T, B, N) waveforms
+
+
+def _first_crossing_ns(trace_ok: jnp.ndarray, dt: float, t_max: float) -> jnp.ndarray:
+    """Time of first True along axis 0 of (T, B); t_max if never."""
+    any_ok = jnp.any(trace_ok, axis=0)
+    idx = jnp.argmax(trace_ok, axis=0)
+    return jnp.where(any_ok, (idx + 1) * dt, t_max)
+
+
+def wl_ramp(tech: TechCal, t_ns: jnp.ndarray, rising: bool = True) -> jnp.ndarray:
+    """WL voltage profile (normalized 0..1): RC-limited driver."""
+    tau = tau_ns(tech.r_wl_kohm, tech.c_wl_ff)
+    x = 1.0 - jnp.exp(-t_ns / jnp.maximum(tau, 1e-3))
+    return x if rising else 1.0 - x
+
+
+def simulate_row_cycle(tech: TechCal, scheme: str, layers,
+                       store_v: float | None = None,
+                       backend: str = "ref") -> RowCycleResult:
+    """Simulate ACT/RESTORE/PRE on the ladder; batched over `layers`."""
+    ladder = build_bl_ladder(tech, scheme, layers)
+    b, n = ladder.c.shape
+    k = N_BL_SEGMENTS
+    vdd, vpre = cal.VDD_ARRAY, cal.VBL_PRE
+    if store_v is None:
+        store_v = tech.writeback_eff * vdd
+
+    c = ladder.c.astype(jnp.float32)
+    g = ladder.g_branch.astype(jnp.float32)
+    zero_clamp = jnp.zeros((b, n), jnp.float32)
+
+    # ---------------- ACT: WL up, charge share --------------------------
+    n_act = int(T_ACT_NS / DT_NS)
+    t_grid = (jnp.arange(n_act) + 1) * DT_NS
+    ramp_up = wl_ramp(tech, t_grid).astype(jnp.float32)
+    v0 = jnp.full((b, n), vpre, jnp.float32).at[:, n - 1].set(store_v)
+    trace_act = ops.rc_multistep(c, g, zero_clamp, zero_clamp, v0,
+                                 ramp_up, DT_NS, backend=backend)
+
+    cbl = ladder.c[:, :n - 1].sum(-1)
+    cs = ladder.c[:, n - 1]
+    dv_inf = (store_v - vpre) * cs / (cs + cbl)
+    crossed = trace_act[:, :, 0] - vpre >= 0.9 * dv_inf[None, :].astype(jnp.float32)
+    t_dev = _first_crossing_ns(crossed, DT_NS, T_ACT_NS)
+
+    # developed signal actually available at SA enable
+    idx_dev = jnp.clip((t_dev / DT_NS).astype(jnp.int32) - 1, 0, n_act - 1)
+    dv_sense = trace_act[idx_dev, jnp.arange(b), 0] - vpre
+
+    # latch regeneration from dv to VDD/2 rail excursion
+    t_regen = tech.sa_tau_ns * jnp.log(
+        jnp.maximum((vdd / 2.0) / jnp.maximum(dv_sense, 1e-4), 1.001))
+    t_sense = t_dev + t_regen
+
+    # ---------------- RESTORE: SA drives the rail -----------------------
+    n_res = int(T_RESTORE_NS / DT_NS)
+    # state at SA enable: take the trace at t_dev (per design point)
+    v_at_dev = trace_act[idx_dev, jnp.arange(b), :]
+    g_clamp_res = zero_clamp.at[:, 0].set(1.0 / tech.r_sa_drive_kohm)
+    v_clamp_res = jnp.full((b, n), vdd, jnp.float32)
+    ramp_on = jnp.ones((n_res,), jnp.float32)
+    trace_res = ops.rc_multistep(c, g, g_clamp_res, v_clamp_res, v_at_dev,
+                                 ramp_on, DT_NS, backend=backend)
+    restored = trace_res[:, :, n - 1] >= 0.95 * vdd
+    t_res_dur = _first_crossing_ns(restored, DT_NS, T_RESTORE_NS)
+    t_restore = t_sense + t_res_dur
+
+    # ---------------- PRE: WL down, equalize ----------------------------
+    n_pre = int(T_PRE_NS / DT_NS)
+    t_grid_pre = (jnp.arange(n_pre) + 1) * DT_NS
+    ramp_down = wl_ramp(tech, t_grid_pre, rising=False).astype(jnp.float32)
+    idx_res = jnp.clip((t_res_dur / DT_NS).astype(jnp.int32) - 1, 0, n_res - 1)
+    v_end_res = trace_res[idx_res, jnp.arange(b), :]
+    g_clamp_pre = zero_clamp.at[:, :n - 1].set(1.0 / tech.r_pre_kohm)
+    v_clamp_pre = jnp.full((b, n), vpre, jnp.float32)
+    trace_pre = ops.rc_multistep(c, g, g_clamp_pre, v_clamp_pre, v_end_res,
+                                 ramp_down, DT_NS, backend=backend)
+    equalized = jnp.max(jnp.abs(trace_pre[:, :, :n - 1] - vpre), axis=-1) <= 5e-3
+    t_pre = _first_crossing_ns(equalized, DT_NS, T_PRE_NS)
+
+    trc = tech.t_overhead_ns + t_restore + t_pre
+    return RowCycleResult(
+        t_sense_ns=t_sense, t_restore_ns=t_restore, t_precharge_ns=t_pre,
+        trc_ns=trc, dv_sense_v=dv_sense,
+        traces={"act": trace_act, "restore": trace_res, "pre": trace_pre},
+    )
+
+
+def nominal_trc_ns(tech: TechCal, scheme: str = "sel_strap",
+                   layers: int | None = None) -> jnp.ndarray:
+    """Nominal tRC at the technology's target layer count."""
+    if layers is None:
+        layers = tech.layers_target
+    return simulate_row_cycle(tech, scheme, jnp.asarray([layers])).trc_ns[0]

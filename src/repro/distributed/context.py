@@ -1,0 +1,33 @@
+"""Ambient mesh context for model-internal sharding annotations.
+
+The launchers (dryrun/train/serve) register the active mesh here before
+tracing; model code then can pin activation shardings / run shard_map EP
+without threading the mesh object through every call.  When no mesh is
+registered (CPU unit tests), every annotation degrades to a no-op.
+"""
+
+from __future__ import annotations
+
+from jax.sharding import Mesh
+
+_CURRENT: list[Mesh | None] = [None]
+
+
+def set_mesh(mesh: Mesh | None):
+    _CURRENT[0] = mesh
+
+
+def get_mesh() -> Mesh | None:
+    return _CURRENT[0]
+
+
+def axis_sizes() -> dict[str, int]:
+    m = _CURRENT[0]
+    if m is None:
+        return {}
+    return dict(zip(m.axis_names, m.devices.shape))
+
+
+def dp_axes() -> tuple[str, ...]:
+    s = axis_sizes()
+    return tuple(a for a in ("pod", "data") if a in s)

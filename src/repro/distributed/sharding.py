@@ -1,0 +1,135 @@
+"""Sharding rules: logical parameter/cache axes -> mesh PartitionSpecs.
+
+Baseline policy (the "CBA placement" discipline from DESIGN.md §2.2: keep
+every reduction on the widest-bandwidth axis and co-locate optimizer shards
+with parameters):
+
+  TP ("model"):   vocab, ff, fused qkv out, experts, ssm channel dims
+  FSDP ("data"):  the d_model (row) dim of every large 2-D weight — params,
+                  grads and Adam moments are all fully sharded (ZeRO-3)
+  DP ("pod","data"): the batch dim of activations / caches
+  decode caches:  seq -> "model" (flash-decoding combine), batch -> DP
+
+Every rule is divisibility-checked against the actual dim; indivisible dims
+drop to replicated rather than relying on GSPMD padding.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> preferred mesh axis (order = fallback preference)
+AXIS_RULES: dict[str, tuple[str, ...]] = {
+    "vocab": ("model",),
+    "ff": ("model",),
+    "qkv": ("model",),
+    "experts": ("model",),
+    "ssm_out": ("model",),
+    "heads": ("model",),
+    "kv": ("model",),
+    "headdim": ("model",),
+    "dmodel": ("data",),          # FSDP shard of the row dimension
+    "seq": ("model",),            # decode-cache sequence axis
+    "batch": ("pod", "data"),     # data parallel (multi-axis)
+    "layers": (),
+    "layer_groups": (),
+}
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def spec_for_axes(axes: tuple, shape: tuple, mesh: Mesh) -> P:
+    """Build a PartitionSpec for one array given logical axes + shape."""
+    sizes = _mesh_axis_sizes(mesh)
+    used: set[str] = set()
+    entries = []
+    for dim, ax in zip(shape, axes):
+        if ax is None or ax not in AXIS_RULES:
+            entries.append(None)
+            continue
+        if ax == "batch":
+            # use as many DP axes as divide the batch
+            chosen = []
+            prod = 1
+            for m in AXIS_RULES["batch"]:
+                if m in sizes and m not in used and dim % (prod * sizes[m]) == 0:
+                    chosen.append(m)
+                    prod *= sizes[m]
+            for m in chosen:
+                used.add(m)
+            entries.append(tuple(chosen) if chosen else None)
+            continue
+        placed = None
+        for m in AXIS_RULES[ax]:
+            if m in sizes and m not in used and dim % sizes[m] == 0:
+                placed = m
+                used.add(m)
+                break
+        entries.append(placed)
+    return P(*entries)
+
+
+def tree_specs(axes_tree, abstract_tree, mesh: Mesh):
+    """Map (logical-axes tree, ShapeDtypeStruct tree) -> PartitionSpec tree."""
+    return jax.tree.map(
+        lambda ax, ab: spec_for_axes(ax, ab.shape, mesh),
+        axes_tree, abstract_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def named(tree_of_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Activation / batch specs
+# ---------------------------------------------------------------------------
+
+def dp_axes(mesh: Mesh, batch: int) -> tuple[str, ...]:
+    sizes = _mesh_axis_sizes(mesh)
+    chosen = []
+    prod = 1
+    for m in ("pod", "data"):
+        if m in sizes and batch % (prod * sizes[m]) == 0:
+            chosen.append(m)
+            prod *= sizes[m]
+    return tuple(chosen)
+
+
+def batch_specs(input_tree, mesh: Mesh):
+    """Inputs: shard dim0 (batch) over DP axes; everything else replicated.
+    Embedding-stub inputs (B, S, D) also get their batch dim sharded."""
+    def spec(x):
+        axes = dp_axes(mesh, x.shape[0])
+        if not axes:
+            return P(*([None] * len(x.shape)))
+        return P(axes, *([None] * (len(x.shape) - 1)))
+    return jax.tree.map(spec, input_tree)
+
+
+def cache_specs(cfg, cache_axes_tree, cache_abs_tree, mesh: Mesh):
+    """Decode-cache specs.  batch=1 cells (long_500k) shard the sequence
+    over ("data","model") instead of the (unshardable) batch."""
+    def one(ax, ab):
+        p = spec_for_axes(ax, ab.shape, mesh)
+        # upgrade: if batch unsharded and a seq axis exists and divides, use
+        # ("data","model") on seq.
+        sizes = _mesh_axis_sizes(mesh)
+        if "batch" in ax and "seq" in ax:
+            bdim = ax.index("batch")
+            sdim = ax.index("seq")
+            if p[bdim] is None and "data" in sizes:
+                full = sizes["data"] * sizes.get("model", 1)
+                if ab.shape[sdim] % full == 0:
+                    entries = list(p)
+                    entries[sdim] = ("data", "model")
+                    p = P(*entries)
+        return p
+    return jax.tree.map(one, cache_axes_tree, cache_abs_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))

@@ -1,0 +1,53 @@
+"""Jit'd public wrappers for the Pallas kernels, with backend dispatch.
+
+`backend="auto"` picks the Pallas kernel on TPU and the pure-jnp oracle on
+CPU (where `interpret=True` Pallas is a Python-level interpreter and much
+slower than XLA:CPU).  Tests force `backend="pallas"` with interpret mode
+to validate the kernels against the oracles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .rc_transient import rc_multistep_pallas
+from .strap_gather import strap_attend_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("dt", "backend"))
+def rc_multistep(c, g_branch, g_clamp, v_clamp, v0, ramp, dt,
+                 backend: str = "auto"):
+    """Batched RC-ladder implicit-Euler transient -> (T, B, N) trace."""
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "ref"
+    if backend == "pallas":
+        return rc_multistep_pallas(c, g_branch, g_clamp, v_clamp, v0, ramp,
+                                   dt, interpret=not _on_tpu())
+    return ref.rc_multistep_ref(c, g_branch, g_clamp, v_clamp, v0, ramp, dt)
+
+
+@functools.partial(jax.jit, static_argnames=("pages_per_strap", "scale", "backend"))
+def strap_attend(q, k_pages, v_pages, strap_ids, pages_per_strap,
+                 scale=None, backend: str = "auto"):
+    """Selector+strap gated decode attention -> (B, Hq, D)."""
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "ref"
+    if backend == "pallas":
+        return strap_attend_pallas(q, k_pages, v_pages, strap_ids,
+                                   pages_per_strap, scale,
+                                   interpret=not _on_tpu())
+    return ref.strap_attend_ref(q, k_pages, v_pages, strap_ids,
+                                pages_per_strap, scale)
+
+
+def tridiag_solve(dl, d, du, b):
+    """Batched Thomas solve (used standalone by the transient engine)."""
+    return ref.tridiag_solve_ref(dl, d, du, b)

@@ -1,0 +1,141 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the Pallas implementations are validated against
+(tests sweep shapes/dtypes and assert allclose).  They are also the default
+execution path on CPU, where `interpret=True` Pallas is slower.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# Batched tridiagonal solve (Thomas algorithm)
+# --------------------------------------------------------------------------
+
+def tridiag_solve_ref(dl: jnp.ndarray, d: jnp.ndarray, du: jnp.ndarray,
+                      b: jnp.ndarray) -> jnp.ndarray:
+    """Solve A x = b for tridiagonal A, batched over leading dims.
+
+    dl: (..., N) sub-diagonal, dl[..., 0] ignored
+    d : (..., N) main diagonal
+    du: (..., N) super-diagonal, du[..., N-1] ignored
+    b : (..., N) right-hand side
+    """
+    n = d.shape[-1]
+
+    def fwd(carry, idx):
+        cp_prev, dp_prev = carry
+        denom = d[..., idx] - dl[..., idx] * cp_prev
+        cp = du[..., idx] / denom
+        dp = (b[..., idx] - dl[..., idx] * dp_prev) / denom
+        return (cp, dp), (cp, dp)
+
+    denom0 = d[..., 0]
+    cp0 = du[..., 0] / denom0
+    dp0 = b[..., 0] / denom0
+    (_, _), (cps, dps) = jax.lax.scan(fwd, (cp0, dp0), jnp.arange(1, n))
+    # stack cp/dp including index 0; cps has shape (n-1, ...)
+    cps = jnp.concatenate([cp0[None], cps], axis=0)
+    dps = jnp.concatenate([dp0[None], dps], axis=0)
+
+    def bwd(x_next, idx):
+        x = dps[idx] - cps[idx] * x_next
+        return x, x
+
+    xn = dps[n - 1]
+    _, xs = jax.lax.scan(bwd, xn, jnp.arange(n - 2, -1, -1))
+    xs = jnp.concatenate([xn[None], xs], axis=0)[::-1]
+    # move node axis back to the end
+    return jnp.moveaxis(xs, 0, -1)
+
+
+# --------------------------------------------------------------------------
+# RC-ladder multistep implicit-Euler transient (the SPICE inner loop)
+# --------------------------------------------------------------------------
+
+def rc_multistep_ref(c: jnp.ndarray, g_branch: jnp.ndarray,
+                     g_clamp: jnp.ndarray, v_clamp: jnp.ndarray,
+                     v0: jnp.ndarray, ramp: jnp.ndarray,
+                     dt: float) -> jnp.ndarray:
+    """Simulate T implicit-Euler steps of a batched RC ladder.
+
+    The ladder has N nodes; branch i connects node i and i+1 with
+    conductance g_branch[..., i].  The LAST branch (index N-2, the cell
+    access transistor) is scaled by `ramp[t]` at step t (WL ramp).  Each
+    node may additionally be clamped toward v_clamp through g_clamp.
+
+    c        : (B, N)   node capacitances            [fF]
+    g_branch : (B, N-1) branch conductances          [1/kOhm]
+    g_clamp  : (B, N)   clamp conductances           [1/kOhm]
+    v_clamp  : (B, N)   clamp target voltages        [V]
+    v0       : (B, N)   initial node voltages        [V]
+    ramp     : (T,)     access-branch scale per step (0..1)
+    dt       : step     [ns]    (fF/kOhm -> ps, so G uses 1e-3 factor)
+
+    Returns trace: (T, B, N) node voltages after each step.
+    """
+    cdt = c / dt * 1e-3  # fF/ns = uS; G is in 1/kOhm = mS -> scale by 1e-3
+
+    def step(v, s):
+        # scale the access (last) branch by the WL ramp value for this step
+        g = jnp.concatenate([g_branch[..., :-1], g_branch[..., -1:] * s], axis=-1)
+        # assemble tridiagonal A = C/dt + G
+        n = c.shape[-1]
+        zeros = jnp.zeros_like(c[..., :1])
+        g_lo = jnp.concatenate([zeros, g], axis=-1)        # g[i-1] at row i
+        g_hi = jnp.concatenate([g, zeros], axis=-1)        # g[i]   at row i
+        d = cdt + g_lo + g_hi + g_clamp
+        dl = jnp.concatenate([zeros, -g], axis=-1)
+        du = jnp.concatenate([-g, zeros], axis=-1)
+        rhs = cdt * v + g_clamp * v_clamp
+        v_next = tridiag_solve_ref(dl, d, du, rhs)
+        return v_next, v_next
+
+    _, trace = jax.lax.scan(step, v0, ramp)
+    return trace
+
+
+# --------------------------------------------------------------------------
+# Selector+strap gated KV gather + flash-decode attention
+# --------------------------------------------------------------------------
+
+def strap_attend_ref(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+                     strap_ids: jnp.ndarray, pages_per_strap: int,
+                     scale: float | None = None) -> jnp.ndarray:
+    """Oracle for the StrapCache gated decode attention.
+
+    q         : (B, Hq, D)                 one query token per sequence
+    k_pages   : (B, P, page, Hkv, D)       paged keys   (P = pages per seq)
+    v_pages   : (B, P, page, Hkv, D)       paged values
+    strap_ids : (B, S)                     selected strap indices (int32);
+                strap s covers pages [s*G, (s+1)*G).  Entries may be -1
+                (= strap masked out).
+    Returns   : (B, Hq, D) attention output over exactly the selected straps.
+    """
+    b, p, page, hkv, dh = k_pages.shape
+    bq, hq, _ = q.shape
+    assert bq == b
+    grp = hq // hkv
+    if scale is None:
+        scale = 1.0 / (dh ** 0.5)
+    g = pages_per_strap
+
+    # Build a per-page mask from the selected straps.
+    page_strap = jnp.arange(p) // g                      # (P,)
+    sel = strap_ids[..., None] == page_strap[None, None, :]   # (B, S, P)
+    valid = (strap_ids >= 0)[..., None]
+    page_mask = jnp.any(sel & valid, axis=1)             # (B, P)
+    token_mask = jnp.repeat(page_mask, page, axis=1)     # (B, P*page)
+
+    k = k_pages.reshape(b, p * page, hkv, dh)
+    v = v_pages.reshape(b, p * page, hkv, dh)
+    qg = q.reshape(b, hkv, grp, dh)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = jnp.where(token_mask[:, None, None, :], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", w, v.astype(jnp.float32))
+    return o.reshape(b, hq, dh)

@@ -1,0 +1,52 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module touches no jax device state.  The production topology is a TPU v5e
+pod of 16x16 = 256 chips; the multi-pod configuration is 2 pods = 512
+chips with the "pod" axis outermost (DCN/ICI-sparse boundary — the HCB
+interface of DESIGN.md §2.2).
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} "
+            "(dryrun.py must set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=512 before any jax import)")
+    # more devices than needed (single-pod mesh inside the 512-device
+    # dry-run process): use the first n.
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_test_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
+    """Small mesh for unit tests (requires forced host device count)."""
+    import jax
+    from jax.sharding import Mesh
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_local_mesh():
+    """Single-device mesh with the production axis names (CPU smoke runs)."""
+    import jax
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))

@@ -1,0 +1,45 @@
+"""Perf-iteration (hillclimb) config variants — see EXPERIMENTS.md §Perf.
+
+Levels stack (1 ⊂ 2 ⊂ ... ⊂ 5):
+  1: attn_chunk 512 -> 1024 (fewer scan trips, larger MXU tiles)
+  2: remat off for serve cells (no grad -> no recompute needed)
+  3: selector+strap gated decode (decode cells, full-attention families)
+     — the paper's technique lowered into the HLO; plus scatter (not
+     one-hot) cache update.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+def apply_opt_level(cfg, cell: str, level: int):
+    if level >= 1:
+        cfg = dataclasses.replace(cfg, attn_chunk=1024)
+    if level >= 2 and cell != "train_4k":
+        cfg = dataclasses.replace(cfg, remat=False)
+    if level >= 3 and cell in ("decode_32k", "long_500k") \
+            and cfg.family in ("dense", "moe", "vlm"):
+        cfg = dataclasses.replace(cfg, strap_decode=True,
+                                  decode_strap_tokens=2048,
+                                  decode_top_straps=4)
+    if level >= 4:
+        # explicit activation sharding constraints (kills GSPMD reshards)
+        cfg = dataclasses.replace(cfg, shard_acts=True)
+    if level >= 5 and cfg.n_experts:
+        # shard_map expert-parallel MoE dispatch (all-to-all, not gather)
+        cfg = dataclasses.replace(cfg, moe_ep=True)
+    if level >= 6 and cell == "train_4k" and cfg.family in ("dense", "moe",
+                                                            "vlm"):
+        # sequence-parallel residual stream (activation memory / 16,
+        # AR -> RS+AG on the TP boundary)
+        cfg = dataclasses.replace(cfg, seq_parallel=True)
+    if level >= 7 and cfg.ssm_state:
+        # shard-aligned split of the fused SSM in_proj/conv (H1 iter 2)
+        cfg = dataclasses.replace(cfg, ssm_split_proj=True)
+    if level >= 8 and cfg.family == "ssm" and cell in ("train_4k",
+                                                       "prefill_32k"):
+        # seq-parallel residual for attention-free models (H1 iter 3):
+        # chunks align with shards; inter-chunk scan passes only the state
+        cfg = dataclasses.replace(cfg, seq_parallel=True)
+    return cfg

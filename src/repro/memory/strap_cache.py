@@ -1,0 +1,147 @@
+"""StrapCache: the paper's Selector+Strap as a paged, gated KV cache.
+
+Pages of `page_size` tokens are grouped into straps of `pages_per_strap`
+pages.  At decode, a *selector* picks which straps participate:
+
+  exact mode : all straps selected (bit-exact with dense attention; the
+               default for correctness-critical serving)
+  gated mode : top-k straps by selector score (mean-key dot query), the
+               paper-analogue optimization — HBM traffic per token drops by
+               the selectivity, like C_BL 20 fF -> 6.6 fF.
+
+The compute path is `repro.kernels.ops.strap_attend` (Pallas on TPU — the
+gather happens in the BlockSpec index map, so unselected straps are never
+read from HBM).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+
+
+@dataclass
+class StrapCacheConfig:
+    page_size: int = 64
+    pages_per_strap: int = 4
+    top_straps: int = 0        # 0 = exact (all straps)
+
+    @property
+    def strap_tokens(self) -> int:
+        return self.page_size * self.pages_per_strap
+
+
+@dataclass
+class StrapKVCache:
+    """Paged KV storage for ONE layer: (B, P, page, Hkv, hd)."""
+    cfg: StrapCacheConfig
+    k_pages: jnp.ndarray
+    v_pages: jnp.ndarray
+    length: jnp.ndarray        # (B,) tokens currently stored
+    # selector metadata: running mean key per strap (B, S_straps, Hkv, hd)
+    strap_key_sum: jnp.ndarray
+
+    @classmethod
+    def create(cls, cfg: StrapCacheConfig, batch: int, max_tokens: int,
+               n_kv: int, head_dim: int, dtype=jnp.bfloat16):
+        p = -(-max_tokens // cfg.page_size)
+        p = -(-p // cfg.pages_per_strap) * cfg.pages_per_strap
+        straps = p // cfg.pages_per_strap
+        z = jnp.zeros((batch, p, cfg.page_size, n_kv, head_dim), dtype)
+        return cls(cfg=cfg, k_pages=z, v_pages=jnp.copy(z),
+                   length=jnp.zeros((batch,), jnp.int32),
+                   strap_key_sum=jnp.zeros((batch, straps, n_kv, head_dim),
+                                           jnp.float32))
+
+    @property
+    def n_straps(self) -> int:
+        return self.k_pages.shape[1] // self.cfg.pages_per_strap
+
+    def bulk_load(self, k: jnp.ndarray, v: jnp.ndarray) -> "StrapKVCache":
+        """Load a prefill's (B, S, Hkv, hd) keys/values into pages."""
+        b, s, hkv, hd = k.shape
+        ps = self.cfg.page_size
+        p_needed = -(-s // ps)
+        pad = p_needed * ps - s
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kp = kp.reshape(b, p_needed, ps, hkv, hd).astype(self.k_pages.dtype)
+        vp = vp.reshape(b, p_needed, ps, hkv, hd).astype(self.v_pages.dtype)
+        k_pages = self.k_pages.at[:, :p_needed].set(kp)
+        v_pages = self.v_pages.at[:, :p_needed].set(vp)
+        # strap selector metadata
+        g = self.cfg.pages_per_strap
+        straps_touched = -(-p_needed // g)
+        ks = jnp.zeros_like(self.strap_key_sum)
+        kt = jnp.pad(kp, ((0, 0), (0, straps_touched * g - p_needed),
+                          (0, 0), (0, 0), (0, 0)))
+        kt = kt.reshape(b, straps_touched, g * ps, hkv, hd)
+        ks = ks.at[:, :straps_touched].set(
+            jnp.sum(kt.astype(jnp.float32), axis=2))
+        return StrapKVCache(self.cfg, k_pages, v_pages,
+                            jnp.full((b,), s, jnp.int32), ks)
+
+    def append(self, k_new: jnp.ndarray, v_new: jnp.ndarray) -> "StrapKVCache":
+        """Append one token's (B, Hkv, hd) K/V."""
+        b = k_new.shape[0]
+        ps, g = self.cfg.page_size, self.cfg.pages_per_strap
+        idx = self.length                                  # (B,)
+        page_i = idx // ps
+        slot_i = idx % ps
+        bidx = jnp.arange(b)
+        k_pages = self.k_pages.at[bidx, page_i, slot_i].set(
+            k_new.astype(self.k_pages.dtype))
+        v_pages = self.v_pages.at[bidx, page_i, slot_i].set(
+            v_new.astype(self.v_pages.dtype))
+        strap_i = idx // (ps * g)
+        ks = self.strap_key_sum.at[bidx, strap_i].add(
+            k_new.astype(jnp.float32))
+        return StrapKVCache(self.cfg, k_pages, v_pages, idx + 1, ks)
+
+    # -- the selector -----------------------------------------------------
+    def select_straps(self, q: jnp.ndarray) -> jnp.ndarray:
+        """Choose strap ids per sequence: exact mode -> all valid straps;
+        gated mode -> top-k by sum-key score, always incl. the newest strap.
+
+        q: (B, Hq, hd).  Returns (B, S_sel) int32, -1 padded.
+        """
+        b = q.shape[0]
+        n = self.n_straps
+        tokens_per_strap = self.cfg.strap_tokens
+        n_valid = (self.length + tokens_per_strap - 1) // tokens_per_strap
+        all_ids = jnp.arange(n)[None, :].repeat(b, 0)
+        valid = all_ids < n_valid[:, None]
+        if not self.cfg.top_straps:
+            return jnp.where(valid, all_ids, -1).astype(jnp.int32)
+
+        hq = q.shape[1]
+        hkv = self.strap_key_sum.shape[2]
+        grp = hq // hkv
+        qg = q.reshape(b, hkv, grp, -1).astype(jnp.float32)
+        scores = jnp.einsum("bhgd,bshd->bs", qg, self.strap_key_sum)
+        newest = jnp.maximum(n_valid - 1, 0)
+        scores = scores + 1e9 * jax.nn.one_hot(newest, n)   # keep newest
+        scores = jnp.where(valid, scores, -jnp.inf)
+        k = min(self.cfg.top_straps, n)
+        _, ids = jax.lax.top_k(scores, k)
+        keep = jnp.take_along_axis(valid, ids, axis=1)
+        return jnp.where(keep, ids, -1).astype(jnp.int32)
+
+    def attend(self, q: jnp.ndarray, backend: str = "auto") -> jnp.ndarray:
+        """Gated decode attention: (B, Hq, hd) -> (B, Hq, hd)."""
+        ids = self.select_straps(q)
+        return ops.strap_attend(q, self.k_pages, self.v_pages, ids,
+                                self.cfg.pages_per_strap, backend=backend)
+
+    def hbm_bytes_per_token(self) -> tuple[int, int]:
+        """(gated, dense) bytes read per decode step — the C_BL analogue."""
+        b, p, ps, hkv, hd = self.k_pages.shape
+        dtype_bytes = self.k_pages.dtype.itemsize
+        dense = 2 * p * ps * hkv * hd * dtype_bytes
+        sel = self.cfg.top_straps or self.n_straps
+        gated = 2 * sel * self.cfg.strap_tokens * hkv * hd * dtype_bytes
+        return gated, dense

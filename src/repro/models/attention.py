@@ -1,0 +1,237 @@
+"""GQA attention: chunked-causal for train/prefill, cache-based for decode.
+
+Memory discipline: the (S x S) score matrix is never materialized — queries
+are processed in blocks of `cfg.attn_chunk` via `lax.scan` (flash-attention
+structure expressed in XLA; the TPU kernel analogue is fused by Mosaic).
+Decode attends one token against a (possibly seq-sharded) KV cache; softmax
+statistics reduce over the sharded axis with XLA-inserted collectives
+(flash-decoding style combine).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, Schema, apply_rope, constrain
+
+NEG_INF = -1e30
+
+
+def attn_schema(cfg, layers: int | None = None, prefix: str = "") -> Schema:
+    d, hd = cfg.d_model, cfg.head_dim_
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    L = (layers,) if layers is not None else ()
+    A = ("layers",) if layers is not None else ()
+    s: Schema = {
+        prefix + "wq": ParamSpec(L + (d, hq * hd), A + ("dmodel", "qkv"), "fan_in"),
+        prefix + "wk": ParamSpec(L + (d, hkv * hd), A + ("dmodel", "qkv"), "fan_in"),
+        prefix + "wv": ParamSpec(L + (d, hkv * hd), A + ("dmodel", "qkv"), "fan_in"),
+        prefix + "wo": ParamSpec(L + (hq * hd, d), A + ("qkv", "dmodel"), "fan_in"),
+    }
+    if cfg.qkv_bias:
+        s[prefix + "bq"] = ParamSpec(L + (hq * hd,), A + ("qkv",), "zeros")
+        s[prefix + "bk"] = ParamSpec(L + (hkv * hd,), A + ("qkv",), "zeros")
+        s[prefix + "bv"] = ParamSpec(L + (hkv * hd,), A + ("qkv",), "zeros")
+    return s
+
+
+def _project_qkv(cfg, p, x, prefix: str = ""):
+    b, s, _ = x.shape
+    hd, hq, hkv = cfg.head_dim_, cfg.n_heads, cfg.n_kv_heads
+    q = x @ p[prefix + "wq"]
+    k = x @ p[prefix + "wk"]
+    v = x @ p[prefix + "wv"]
+    if cfg.qkv_bias:
+        q = q + p[prefix + "bq"].astype(q.dtype)
+        k = k + p[prefix + "bk"].astype(k.dtype)
+        v = v + p[prefix + "bv"].astype(v.dtype)
+    return (q.reshape(b, s, hq, hd), k.reshape(b, s, hkv, hd),
+            v.reshape(b, s, hkv, hd))
+
+
+def _gqa_scores(q, k, scale):
+    """q: (B,Sq,Hq,hd)  k: (B,Sk,Hkv,hd) -> (B,Hkv,grp,Sq,Sk) fp32."""
+    b, sq, hq, hd = q.shape
+    hkv = k.shape[2]
+    grp = hq // hkv
+    qg = q.reshape(b, sq, hkv, grp, hd)
+    return jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                      k.astype(jnp.float32)) * scale
+
+
+def _gqa_out(w, v, out_dtype):
+    """w: (B,Hkv,grp,Sq,Sk)  v: (B,Sk,Hkv,hd) -> (B,Sq,Hq,hd)."""
+    b, hkv, grp, sq, sk = w.shape
+    hd = v.shape[-1]
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return o.reshape(b, sq, hkv * grp, hd).astype(out_dtype)
+
+
+def causal_attention(cfg, p, x, positions=None, prefix: str = "",
+                     causal: bool = True, kv_override=None):
+    """Chunked (causal) self-attention for train/prefill.
+
+    x: (B, S, D).  Returns (out (B,S,D), (k, v)) — the cache material.
+    """
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    scale = hd ** -0.5
+    q, k, v = _project_qkv(cfg, p, x, prefix)
+    if kv_override is not None:                 # cross-attention path
+        k, v = kv_override
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    if cfg.rope_theta > 0 and kv_override is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(cfg, q, ("dp", None, "model", None))
+    k = constrain(cfg, k, ("dp", None, "model", None))
+    v = constrain(cfg, v, ("dp", None, "model", None))
+
+    chunk = min(cfg.attn_chunk, s)
+    if s % chunk:
+        chunk = s                     # non-divisible (odd test lengths): full
+    n_chunks = max(s // chunk, 1)
+    sk = k.shape[1]
+    k_pos = jnp.arange(sk)
+
+    if n_chunks == 1:
+        logits = _gqa_scores(q, k, scale)
+        if causal:
+            mask = positions[0][:, None] >= k_pos[None, :]
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        out = _gqa_out(w, v, x.dtype)
+    else:
+        qc = q.reshape(b, n_chunks, chunk, q.shape[2], hd)
+        pc = positions[0].reshape(n_chunks, chunk)
+
+        def body(_, inputs):
+            q_blk, pos_blk = inputs               # (B,chunk,Hq,hd), (chunk,)
+            logits = _gqa_scores(q_blk, k, scale)
+            if causal:
+                mask = pos_blk[:, None] >= k_pos[None, :]
+                logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            w = jax.nn.softmax(logits, axis=-1)
+            return None, _gqa_out(w, v, x.dtype)
+
+        _, out = jax.lax.scan(body, None,
+                              (jnp.moveaxis(qc, 1, 0), pc))
+        out = jnp.moveaxis(out, 0, 1).reshape(b, s, -1, hd)
+
+    o = out.reshape(b, s, -1)
+    return o @ p[prefix + "wo"], (k, v)
+
+
+def decode_attention(cfg, p, x, k_cache, v_cache, pos, prefix: str = "",
+                     cross: bool = False, cache_positions=None):
+    """One-token attention against the cache.
+
+    x: (B, 1, D); k_cache/v_cache: (B, S, Hkv, hd); pos: (B,) current index.
+    Returns (out (B,1,D), new_k, new_v).  For cross-attention the cache is
+    static (encoder outputs) and not updated.
+    """
+    b = x.shape[0]
+    hd = cfg.head_dim_
+    scale = hd ** -0.5
+    q, k_new, v_new = _project_qkv(cfg, p, x, prefix)
+    s_cache = k_cache.shape[1]
+
+    if cross:
+        k, v = k_cache, v_cache
+        valid = jnp.ones((b, s_cache), bool)
+    else:
+        if cfg.rope_theta > 0:
+            q = apply_rope(q, pos[:, None], cfg.rope_theta)
+            k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
+        # scatter the new token into the cache at `pos` (per sequence)
+        onehot = jax.nn.one_hot(pos, s_cache, dtype=k_cache.dtype)  # (B,S)
+        k_cache = k_cache * (1 - onehot[..., None, None]) \
+            + onehot[..., None, None] * k_new.astype(k_cache.dtype)
+        v_cache = v_cache * (1 - onehot[..., None, None]) \
+            + onehot[..., None, None] * v_new.astype(v_cache.dtype)
+        k, v = k_cache, v_cache
+        valid = jnp.arange(s_cache)[None, :] <= pos[:, None]
+
+    logits = _gqa_scores(q, k, scale)[..., 0, :]       # (B,Hkv,grp,S)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", w, v.astype(jnp.float32))
+    o = o.reshape(b, 1, -1).astype(x.dtype)
+    out = o @ p[prefix + "wo"]
+    if cross:
+        return out, None, None
+    return out, k_cache, v_cache
+
+
+def decode_attention_gated(cfg, p, x, k_cache, v_cache, ksum, pos,
+                           prefix: str = ""):
+    """Selector+strap gated decode (the paper's technique in the HLO).
+
+    The KV cache is viewed as straps of `cfg.decode_strap_tokens` tokens.
+    A selector scores straps with the running per-strap key sum (`ksum`),
+    gathers only the top `cfg.decode_top_straps` straps (newest always
+    included), and attends over that subset — the lowered HLO reads only
+    the selected pages, cutting decode HBM traffic by the selectivity
+    (C_BL 20 fF -> 6.6 fF, in bytes).  The cache update is a vmapped
+    dynamic-update-slice (one page touched) instead of the one-hot
+    full-cache rewrite of the baseline path.
+
+    k_cache/v_cache: (B, S, Hkv, hd); ksum: (B, n_straps, Hkv, hd).
+    """
+    b = x.shape[0]
+    hd = cfg.head_dim_
+    scale = hd ** -0.5
+    T = cfg.decode_strap_tokens
+    q, k_new, v_new = _project_qkv(cfg, p, x, prefix)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
+
+    s_cache = k_cache.shape[1]
+    nst = s_cache // T
+
+    # ---- scatter the new token (touches ONE page, not the whole cache) --
+    def upd_one(cb, nb, pb):
+        return jax.lax.dynamic_update_slice_in_dim(
+            cb, nb.astype(cb.dtype), pb, axis=0)
+    k_cache = jax.vmap(upd_one)(k_cache, k_new, pos)
+    v_cache = jax.vmap(upd_one)(v_cache, v_new, pos)
+    strap_idx = pos // T
+    ksum = ksum + (jax.nn.one_hot(strap_idx, nst, dtype=jnp.float32)
+                   [:, :, None, None]
+                   * k_new[:, 0][:, None].astype(jnp.float32))
+
+    # ---- selector: score straps by aggregated q . ksum ------------------
+    hkv = k_cache.shape[2]
+    grp = q.shape[2] // hkv
+    qg = q.reshape(b, hkv, grp, hd).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bnhd->bn", qg, ksum)
+    base = jnp.arange(nst) * T
+    valid = base[None, :] <= pos[:, None]
+    scores = jnp.where(valid, scores, -jnp.inf)
+    scores = scores + 1e30 * jax.nn.one_hot(strap_idx, nst)  # keep newest
+    k_sel = min(cfg.decode_top_straps, nst)
+    _, ids = jax.lax.top_k(scores, k_sel)                    # (B, K)
+
+    # ---- gather ONLY the selected straps ---------------------------------
+    kr = k_cache.reshape(b, nst, T, hkv, hd)
+    vr = v_cache.reshape(b, nst, T, hkv, hd)
+    idx = ids[:, :, None, None, None]
+    k_g = jnp.take_along_axis(kr, idx, axis=1).reshape(b, k_sel * T, hkv, hd)
+    v_g = jnp.take_along_axis(vr, idx, axis=1).reshape(b, k_sel * T, hkv, hd)
+    # keep the gather device-local: batch on dp, head_dim on model (the
+    # cache's own layout) — without this GSPMD replicates the gathered KV
+    k_g = constrain(cfg, k_g, ("dp", None, None, "model"), force=True)
+    v_g = constrain(cfg, v_g, ("dp", None, None, "model"), force=True)
+    gpos = (ids[:, :, None] * T
+            + jnp.arange(T)[None, None, :]).reshape(b, k_sel * T)
+    tok_valid = gpos <= pos[:, None]
+
+    logits = _gqa_scores(q, k_g, scale)[..., 0, :]           # (B,Hkv,grp,K*T)
+    logits = jnp.where(tok_valid[:, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", w, v_g.astype(jnp.float32))
+    o = o.reshape(b, 1, -1).astype(x.dtype)
+    return o @ p[prefix + "wo"], k_cache, v_cache, ksum

@@ -1,0 +1,205 @@
+"""Shared model components: schema-driven params, norms, RoPE, embeddings.
+
+Parameter trees and their logical sharding axes are derived from a single
+*schema* (dict name -> ParamSpec), so the two trees can never drift apart.
+Layer-stacked weights carry a leading "layers" axis and are consumed by
+`jax.lax.scan` over layers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Schema
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]   # logical axis name per dim
+    scale: float | str = "fan_in"  # gaussian std, or "fan_in", or "zeros"/"ones"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Schema = dict  # nested dict name -> ParamSpec
+
+
+def init_from_schema(schema: Schema, key: jax.Array, dtype) -> dict:
+    leaves, treedef = jax.tree.flatten(schema,
+                                       is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+
+    def init_one(spec: ParamSpec, k):
+        if spec.scale == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.scale == "ones":
+            return jnp.ones(spec.shape, dtype)
+        if spec.scale == "fan_in":
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            std = fan_in ** -0.5
+        else:
+            std = float(spec.scale)
+        return (jax.random.normal(k, spec.shape, jnp.float32) * std).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [init_one(s, k) for s, k in zip(leaves, keys)])
+
+
+def axes_from_schema(schema: Schema) -> dict:
+    return jax.tree.map(lambda s: s.axes, schema,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def abstract_from_schema(schema: Schema, dtype) -> dict:
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype), schema,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding annotations (no-op without a registered mesh)
+# ---------------------------------------------------------------------------
+
+def constrain(cfg, x, logical, force: bool = False):
+    """Pin an activation's sharding: `logical` names one of
+    {"dp","model",None} per dim.  Indivisible dims degrade to None.
+    Active only when cfg.shard_acts (or force=True) and a mesh is
+    registered."""
+    if not (getattr(cfg, "shard_acts", False) or force):
+        return x
+    from ..distributed import context as mesh_ctx
+    sizes = mesh_ctx.axis_sizes()
+    if not sizes:
+        return x
+    from jax.sharding import PartitionSpec as P
+    entries = []
+    for dim, a in zip(x.shape, logical):
+        if a == "dp":
+            chosen, prod = [], 1
+            for m in ("pod", "data"):
+                if m in sizes and dim % (prod * sizes[m]) == 0:
+                    chosen.append(m)
+                    prod *= sizes[m]
+            entries.append(tuple(chosen) if chosen else None)
+        elif a == "model" and "model" in sizes and dim % sizes["model"] == 0:
+            entries.append("model")
+        else:
+            entries.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*entries))
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, w, b, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def nonparam_ln(x, eps=1e-5):
+    """OLMo's non-parametric LayerNorm (no scale / bias)."""
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def apply_norm(cfg, x, layer_params, prefix: str):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, layer_params[prefix + "_w"])
+    if cfg.norm == "layernorm":
+        return layernorm(x, layer_params[prefix + "_w"], layer_params[prefix + "_b"])
+    return nonparam_ln(x)
+
+
+def norm_schema(cfg, d: int) -> Schema:
+    if cfg.norm == "rmsnorm":
+        return {"_w": ParamSpec((d,), ("dmodel",), "ones")}
+    if cfg.norm == "layernorm":
+        return {"_w": ParamSpec((d,), ("dmodel",), "ones"),
+                "_b": ParamSpec((d,), ("dmodel",), "zeros")}
+    return {}
+
+
+def add_norm(schema: Schema, cfg, name: str, d: int, layers: int | None = None):
+    for suffix, spec in norm_schema(cfg, d).items():
+        if layers is not None:
+            spec = ParamSpec((layers,) + spec.shape, ("layers",) + spec.axes,
+                             spec.scale)
+        schema[name + suffix] = spec
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., : hd // 2], x32[..., hd // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_pos_emb(seq: int, d: int, offset=0):
+    pos = jnp.arange(seq, dtype=jnp.float32) + offset
+    inv = 1e4 ** (-jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+    ang = pos[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_schema(cfg) -> Schema:
+    v, d = cfg.padded_vocab, cfg.d_model
+    s: Schema = {"embed": ParamSpec((v, d), ("vocab", "dmodel"), 0.02)}
+    add_norm(s, cfg, "final", d)
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ParamSpec((v, d), ("vocab", "dmodel"), "fan_in")
+    return s
+
+
+def embed_tokens(params, tokens, dtype):
+    return jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+
+
+def lm_logits(cfg, params, h):
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,vd->bsv", h.astype(jnp.float32),
+                      table.astype(jnp.float32))
+
+
+def cross_entropy(logits, targets, vocab_size: int):
+    """Mean CE over all tokens; ignores padded vocab tail via clipping."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

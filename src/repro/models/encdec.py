@@ -1,0 +1,180 @@
+"""Whisper-style encoder-decoder backbone (conv audio frontend is a stub:
+`enc_embeds` arrive precomputed, matching the assignment's frontend-stub
+rule).  Sinusoidal positions, LayerNorm, GELU MLP, MHA (kv == q heads).
+
+Decoder layers carry both self-attention (causal, cached at decode) and
+cross-attention over the encoder output (cached once at prefill).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attn_schema, causal_attention, decode_attention,
+                        _project_qkv)
+from .common import (ParamSpec, Schema, abstract_from_schema, add_norm,
+                     apply_norm, axes_from_schema, cross_entropy,
+                     embed_schema, embed_tokens, init_from_schema, lm_logits,
+                     sinusoid_pos_emb)
+from .mlp import mlp_apply, mlp_schema
+
+
+def _enc_layer_schema(cfg) -> Schema:
+    s: Schema = {}
+    add_norm(s, cfg, "ln1", cfg.d_model, cfg.n_enc_layers)
+    s.update(attn_schema(cfg, cfg.n_enc_layers))
+    add_norm(s, cfg, "ln2", cfg.d_model, cfg.n_enc_layers)
+    s.update(mlp_schema(cfg, cfg.n_enc_layers))
+    return s
+
+
+def _dec_layer_schema(cfg) -> Schema:
+    s: Schema = {}
+    add_norm(s, cfg, "ln1", cfg.d_model, cfg.n_layers)
+    s.update(attn_schema(cfg, cfg.n_layers))
+    add_norm(s, cfg, "lnx", cfg.d_model, cfg.n_layers)
+    s.update(attn_schema(cfg, cfg.n_layers, prefix="x"))
+    add_norm(s, cfg, "ln2", cfg.d_model, cfg.n_layers)
+    s.update(mlp_schema(cfg, cfg.n_layers))
+    return s
+
+
+def encdec_schema(cfg) -> Schema:
+    s = embed_schema(cfg)
+    s["enc_layers"] = _enc_layer_schema(cfg)
+    s["dec_layers"] = _dec_layer_schema(cfg)
+    add_norm(s, cfg, "enc_final", cfg.d_model)
+    return s
+
+
+def init_params(cfg, key):
+    dtype = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+    return init_from_schema(encdec_schema(cfg), key, dtype)
+
+
+def param_axes(cfg):
+    return axes_from_schema(encdec_schema(cfg))
+
+
+def abstract_params(cfg):
+    dtype = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+    return abstract_from_schema(encdec_schema(cfg), dtype)
+
+
+# ---------------------------------------------------------------------------
+
+def encode(cfg, params, enc_embeds):
+    dtype = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    b, s, d = enc_embeds.shape
+    h = enc_embeds.astype(dtype) + sinusoid_pos_emb(s, d).astype(dtype)[None]
+
+    def body(carry, lp):
+        a_in = apply_norm(cfg, carry, lp, "ln1")
+        attn, _ = causal_attention(cfg, lp, a_in, causal=False)
+        hh = carry + attn
+        m_in = apply_norm(cfg, hh, lp, "ln2")
+        return hh + mlp_apply(cfg, lp, m_in), None
+
+    h, _ = jax.lax.scan(body, h, params["enc_layers"])
+    return apply_norm(cfg, h, params, "enc_final")
+
+
+def _cross_kv(cfg, lp, enc_out):
+    """Project encoder output to one decoder layer's cross K/V."""
+    b, s, _ = enc_out.shape
+    hd, hkv = cfg.head_dim_, cfg.n_kv_heads
+    k = (enc_out @ lp["xwk"]).reshape(b, s, hkv, hd)
+    v = (enc_out @ lp["xwv"]).reshape(b, s, hkv, hd)
+    if cfg.qkv_bias:
+        k = k + lp["xbk"].reshape(hkv, hd)
+        v = v + lp["xbv"].reshape(hkv, hd)
+    return k, v
+
+
+def decode_train(cfg, params, tokens, enc_out, collect_cache: bool = False):
+    dtype = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    b, s = tokens.shape
+    h = embed_tokens(params, tokens, dtype)
+    h = h + sinusoid_pos_emb(s, cfg.d_model).astype(dtype)[None]
+    positions = jnp.arange(s)[None, :]
+
+    def body(carry, lp):
+        a_in = apply_norm(cfg, carry, lp, "ln1")
+        attn, (k, v) = causal_attention(cfg, lp, a_in, positions)
+        hh = carry + attn
+        x_in = apply_norm(cfg, hh, lp, "lnx")
+        xk, xv = _cross_kv(cfg, lp, enc_out)
+        xattn, _ = causal_attention(cfg, lp, x_in, prefix="x", causal=False,
+                                    kv_override=(xk, xv))
+        hh = hh + xattn
+        m_in = apply_norm(cfg, hh, lp, "ln2")
+        hh = hh + mlp_apply(cfg, lp, m_in)
+        ys = (k, v, xk, xv) if collect_cache else None
+        return hh, ys
+
+    h, ys = jax.lax.scan(body, h, params["dec_layers"])
+    h = apply_norm(cfg, h, params, "final")
+    return (h, ys) if collect_cache else (h, None)
+
+
+def forward_train(cfg, params, batch):
+    enc_out = encode(cfg, params, batch["enc_embeds"])
+    h, _ = decode_train(cfg, params, batch["tokens"], enc_out)
+    return lm_logits(cfg, params, h), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg, params, batch, aux_weight: float = 0.0):
+    logits, _ = forward_train(cfg, params, batch)
+    return cross_entropy(logits, batch["targets"], cfg.padded_vocab)
+
+
+def prefill(cfg, params, batch):
+    enc_out = encode(cfg, params, batch["enc_embeds"])
+    h, (k, v, xk, xv) = decode_train(cfg, params, batch["tokens"], enc_out,
+                                     collect_cache=True)
+    logits = lm_logits(cfg, params, h[:, -1:, :])
+    return logits[:, 0], dict(k=k, v=v, xk=xk, xv=xv)
+
+
+def cache_schema(cfg, batch: int, seq: int) -> Schema:
+    hd, hkv = cfg.head_dim_, cfg.n_kv_heads
+    s_enc = seq                                  # encoder length == cell seq/2
+    kv_axes = ("layers", "batch", "seq", "kv", None)
+    return {
+        "k": ParamSpec((cfg.n_layers, batch, seq, hkv, hd), kv_axes, "zeros"),
+        "v": ParamSpec((cfg.n_layers, batch, seq, hkv, hd), kv_axes, "zeros"),
+        "xk": ParamSpec((cfg.n_layers, batch, s_enc, hkv, hd), kv_axes, "zeros"),
+        "xv": ParamSpec((cfg.n_layers, batch, s_enc, hkv, hd), kv_axes, "zeros"),
+    }
+
+
+def decode_step(cfg, params, cache, token, pos):
+    dtype = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    h = embed_tokens(params, token, dtype)
+    # per-sequence sinusoidal position for the new token
+    d = cfg.d_model
+    inv = 1e4 ** (-jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+    ang = pos[:, None].astype(jnp.float32) * inv[None, :]
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    h = h + pe[:, None, :].astype(dtype)
+
+    def body(carry, xs):
+        lp, k_c, v_c, xk_c, xv_c = xs
+        a_in = apply_norm(cfg, carry, lp, "ln1")
+        attn, k_new, v_new = decode_attention(cfg, lp, a_in, k_c, v_c, pos)
+        hh = carry + attn
+        x_in = apply_norm(cfg, hh, lp, "lnx")
+        xattn, _, _ = decode_attention(cfg, lp, x_in, xk_c, xv_c, pos,
+                                       prefix="x", cross=True)
+        hh = hh + xattn
+        m_in = apply_norm(cfg, hh, lp, "ln2")
+        hh = hh + mlp_apply(cfg, lp, m_in)
+        return hh, (k_new, v_new)
+
+    h, (ks, vs) = jax.lax.scan(
+        body, h, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    h = apply_norm(cfg, h, params, "final")
+    logits = lm_logits(cfg, params, h)[:, 0]
+    return logits, dict(k=ks, v=vs, xk=cache["xk"], xv=cache["xv"])

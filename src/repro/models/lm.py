@@ -1,0 +1,436 @@
+"""Decoder-only LM covering the dense / MoE / VLM / SSM / hybrid families.
+
+Layers are weight-stacked and executed with `jax.lax.scan` (small HLO, fast
+compile, remat-friendly).  The hybrid (Zamba2) family runs an outer scan
+over groups of `shared_attn_every` Mamba2 layers followed by ONE weight-
+shared attention+MLP block (its defining topology), plus trailing Mamba2
+layers.
+
+Public entry points (all pure functions of (cfg, params, ...)):
+  init_params / param_axes / abstract_params
+  forward_train   -> (logits, aux_loss)
+  loss_fn         -> scalar loss
+  prefill         -> (last_logits, cache)
+  decode_step     -> (logits, new_cache)
+  cache_schema    -> Schema of the decode cache (shapes + logical axes)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attn_schema, causal_attention, decode_attention,
+                        decode_attention_gated)
+from .common import (ParamSpec, Schema, abstract_from_schema, add_norm,
+                     apply_norm, axes_from_schema, constrain, cross_entropy,
+                     embed_schema, embed_tokens, init_from_schema, lm_logits)
+from .mlp import mlp_apply, mlp_schema
+from .moe import moe_apply, moe_apply_ep, moe_schema
+from .ssm import ssm_apply, ssm_decode_step, ssm_schema
+
+
+# ---------------------------------------------------------------------------
+# Schema assembly
+# ---------------------------------------------------------------------------
+
+def _tf_layer_schema(cfg, layers: int) -> Schema:
+    s: Schema = {}
+    add_norm(s, cfg, "ln1", cfg.d_model, layers)
+    s.update(attn_schema(cfg, layers))
+    add_norm(s, cfg, "ln2", cfg.d_model, layers)
+    if cfg.n_experts:
+        s.update(moe_schema(cfg, layers))
+    else:
+        s.update(mlp_schema(cfg, layers))
+    return s
+
+
+def _ssm_layer_schema(cfg, layers: int) -> Schema:
+    s: Schema = {}
+    add_norm(s, cfg, "ln1", cfg.d_model, layers)
+    s.update(ssm_schema(cfg, layers))
+    return s
+
+
+def _shared_block_schema(cfg) -> Schema:
+    """Zamba2's weight-shared attention+MLP block (no layer stacking)."""
+    s: Schema = {}
+    add_norm(s, cfg, "ln1", cfg.d_model)
+    s.update(attn_schema(cfg))
+    add_norm(s, cfg, "ln2", cfg.d_model)
+    s.update(mlp_schema(cfg))
+    return s
+
+
+def _hybrid_split(cfg) -> tuple[int, int, int]:
+    """(groups, per_group, trailing) for the hybrid family."""
+    per = cfg.shared_attn_every
+    groups = cfg.n_layers // per
+    trailing = cfg.n_layers - groups * per
+    return groups, per, trailing
+
+
+def lm_schema(cfg) -> Schema:
+    s = embed_schema(cfg)
+    if cfg.family == "ssm":
+        s["layers"] = _ssm_layer_schema(cfg, cfg.n_layers)
+    elif cfg.family == "hybrid":
+        groups, per, trailing = _hybrid_split(cfg)
+        grouped = _ssm_layer_schema(cfg, groups * per)
+        # reshape the stacked specs to (groups, per, ...)
+        s["layers"] = {
+            k: ParamSpec((groups, per) + v.shape[1:],
+                         ("layer_groups",) + v.axes, v.scale)
+            for k, v in grouped.items()}
+        if trailing:
+            s["trailing"] = _ssm_layer_schema(cfg, trailing)
+        s["shared"] = _shared_block_schema(cfg)
+    else:
+        s["layers"] = _tf_layer_schema(cfg, cfg.n_layers)
+    return s
+
+
+def init_params(cfg, key):
+    dtype = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+    return init_from_schema(lm_schema(cfg), key, dtype)
+
+
+def param_axes(cfg):
+    return axes_from_schema(lm_schema(cfg))
+
+
+def abstract_params(cfg):
+    dtype = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+    return abstract_from_schema(lm_schema(cfg), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _tf_block(cfg, lp, h, positions, collect_cache: bool):
+    # seq-parallel: the residual stream (and thus LN + projections + saved
+    # remat activations) lives seq-sharded over `model`; attention gathers
+    # seq / scatters heads internally (Megatron-SP pattern, XLA-inserted).
+    h = constrain(cfg, h, ("dp", "model" if cfg.seq_parallel else None, None))
+    a_in = apply_norm(cfg, h, lp, "ln1")
+    attn_out, (k, v) = causal_attention(cfg, lp, a_in, positions)
+    h = h + attn_out
+    m_in = apply_norm(cfg, h, lp, "ln2")
+    if cfg.n_experts:
+        moe_fn = moe_apply_ep if cfg.moe_ep else moe_apply
+        mo, aux = moe_fn(cfg, lp, m_in)
+    else:
+        mo, aux = mlp_apply(cfg, lp, m_in), jnp.zeros((), jnp.float32)
+    h = h + mo
+    cache = (k, v) if collect_cache else None
+    return h, aux, cache
+
+
+def _ssm_block(cfg, lp, h, h0=None, conv0=None, collect_state: bool = False):
+    h = constrain(cfg, h, ("dp", "model" if cfg.seq_parallel else None, None))
+    a_in = apply_norm(cfg, h, lp, "ln1")
+    if collect_state:
+        out, hf, convf = ssm_apply(cfg, lp, a_in, h0, conv0, return_state=True)
+        return h + out, (hf, convf)
+    return h + ssm_apply(cfg, lp, a_in), None
+
+
+def _maybe_remat(cfg, fn):
+    if cfg.remat:
+        return jax.checkpoint(fn,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg, params, batch, dtype):
+    """Token (+ modality-stub) embedding -> (B, S, D), positions (1, S)."""
+    tok_emb = embed_tokens(params, batch["tokens"], dtype)
+    if cfg.n_vision_tokens and "vision_embeds" in batch:
+        h = jnp.concatenate([batch["vision_embeds"].astype(dtype), tok_emb],
+                            axis=1)
+    else:
+        h = tok_emb
+    positions = jnp.arange(h.shape[1])[None, :]
+    return h, positions
+
+
+def _run_layers(cfg, params, h, positions, collect_cache: bool = False):
+    """Scan the layer stack; returns (h, aux_total, cache_stack_or_None)."""
+    if cfg.family == "ssm":
+        def body(carry, lp):
+            hh, _ = _ssm_block(cfg, lp, carry)
+            return hh, None
+        h, _ = jax.lax.scan(_maybe_remat(cfg, body), h, params["layers"])
+        return h, jnp.zeros((), jnp.float32), None
+
+    if cfg.family == "hybrid":
+        shared = params["shared"]
+
+        def group_body(carry, glp):
+            hh = carry
+            def inner(c, lp):
+                cc, _ = _ssm_block(cfg, lp, c)
+                return cc, None
+            hh, _ = jax.lax.scan(inner, hh, glp)
+            # weight-shared attention + MLP block
+            a_in = apply_norm(cfg, hh, shared, "ln1")
+            attn_out, (k, v) = causal_attention(cfg, shared, a_in, positions)
+            hh = hh + attn_out
+            m_in = apply_norm(cfg, hh, shared, "ln2")
+            hh = hh + mlp_apply(cfg, shared, m_in)
+            return hh, (k, v) if collect_cache else None
+
+        h, kv = jax.lax.scan(_maybe_remat(cfg, group_body), h, params["layers"])
+        if "trailing" in params:
+            def tbody(c, lp):
+                cc, _ = _ssm_block(cfg, lp, c)
+                return cc, None
+            h, _ = jax.lax.scan(tbody, h, params["trailing"])
+        return h, jnp.zeros((), jnp.float32), kv
+
+    def body(carry, lp):
+        hh, aux, cache = _tf_block(cfg, lp, carry, positions, collect_cache)
+        return hh, (aux, cache) if collect_cache else aux
+
+    h, ys = jax.lax.scan(_maybe_remat(cfg, body), h, params["layers"])
+    if collect_cache:
+        auxs, caches = ys
+        return h, jnp.sum(auxs), caches
+    return h, jnp.sum(ys), None
+
+
+def forward_train(cfg, params, batch):
+    dtype = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    h, positions = _embed_inputs(cfg, params, batch, dtype)
+    h, aux, _ = _run_layers(cfg, params, h, positions)
+    h = apply_norm(cfg, h, params, "final")
+    return lm_logits(cfg, params, h), aux
+
+
+def loss_fn(cfg, params, batch, aux_weight: float = 0.01):
+    logits, aux = forward_train(cfg, params, batch)
+    if cfg.n_vision_tokens and "vision_embeds" in batch:
+        nv = batch["vision_embeds"].shape[1]
+        t = batch["targets"].shape[1]
+        logits = jax.lax.dynamic_slice_in_dim(logits, nv - 1, t, axis=1)
+    loss = cross_entropy(logits, batch["targets"], cfg.padded_vocab)
+    return loss + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def prefill(cfg, params, batch):
+    """Forward over the prompt; returns (last-token logits, decode cache)."""
+    dtype = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    h, positions = _embed_inputs(cfg, params, batch, dtype)
+
+    if cfg.family in ("ssm", "hybrid"):
+        cache = _prefill_ssm_like(cfg, params, h, positions)
+        hh = cache.pop("_h")
+        logits = lm_logits(cfg, params, apply_norm(cfg, hh[:, -1:, :], params,
+                                                   "final"))
+        return logits[:, 0], cache
+
+    h, _, caches = _run_layers(cfg, params, h, positions, collect_cache=True)
+    k, v = caches
+    cache = dict(k=k.astype(dtype), v=v.astype(dtype))
+    logits = lm_logits(cfg, params, apply_norm(cfg, h[:, -1:, :], params,
+                                               "final"))
+    return logits[:, 0], cache
+
+
+def _prefill_ssm_like(cfg, params, h, positions):
+    if cfg.family == "ssm":
+        def body(carry, lp):
+            hh = carry
+            hh, (hf, convf) = _ssm_block(cfg, lp, hh, collect_state=True)
+            return hh, (hf, convf)
+        h, (hs, convs) = jax.lax.scan(body, h, params["layers"])
+        return {"_h": h, "ssm": hs, "conv": convs}
+
+    shared = params["shared"]
+
+    def group_body(carry, glp):
+        hh = carry
+        def inner(c, lp):
+            cc, st = _ssm_block(cfg, lp, c, collect_state=True)
+            return cc, st
+        hh, states = jax.lax.scan(inner, hh, glp)
+        a_in = apply_norm(cfg, hh, shared, "ln1")
+        attn_out, (k, v) = causal_attention(cfg, shared, a_in, positions)
+        hh = hh + attn_out
+        m_in = apply_norm(cfg, hh, shared, "ln2")
+        hh = hh + mlp_apply(cfg, shared, m_in)
+        return hh, (states, (k, v))
+
+    h, (states, kv) = jax.lax.scan(group_body, h, params["layers"])
+    cache = {"_h": h, "ssm": states[0], "conv": states[1],
+             "k": kv[0], "v": kv[1]}
+    if "trailing" in params:
+        def tbody(c, lp):
+            cc, st = _ssm_block(cfg, lp, c, collect_state=True)
+            return cc, st
+        h, tstates = jax.lax.scan(tbody, cache.pop("_h"), params["trailing"])
+        cache["_h"] = h
+        cache["t_ssm"], cache["t_conv"] = tstates
+    return cache
+
+
+def cache_schema(cfg, batch: int, seq: int) -> Schema:
+    """Decode-cache schema (shapes + logical axes) for abstract lowering."""
+    hd, hkv = cfg.head_dim_, cfg.n_kv_heads
+    nh, hp, st = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    kc = cfg.conv_kernel - 1
+    kv_axes = ("layers", "batch", "seq", "kv", None)
+    if cfg.strap_decode and cfg.family in ("dense", "moe", "vlm"):
+        # gated decode: seq stays device-local (the gather must be local);
+        # TP moves to the head_dim axis instead.
+        nst = max(seq // cfg.decode_strap_tokens, 1)
+        kv_axes = ("layers", "batch", None, "kv", "headdim")
+        return {
+            "k": ParamSpec((cfg.n_layers, batch, seq, hkv, hd), kv_axes,
+                           "zeros"),
+            "v": ParamSpec((cfg.n_layers, batch, seq, hkv, hd), kv_axes,
+                           "zeros"),
+            "ksum": ParamSpec((cfg.n_layers, batch, nst, hkv, hd),
+                              ("layers", "batch", None, "kv", "headdim"),
+                              "zeros"),
+        }
+
+    if cfg.family == "ssm":
+        return {
+            "ssm": ParamSpec((cfg.n_layers, batch, nh, hp, st),
+                             ("layers", "batch", "heads", None, None), "zeros"),
+            "conv": ParamSpec((cfg.n_layers, batch, kc, conv_dim),
+                              ("layers", "batch", None, "ssm_out"), "zeros"),
+        }
+    if cfg.family == "hybrid":
+        groups, per, trailing = _hybrid_split(cfg)
+        s: Schema = {
+            "ssm": ParamSpec((groups, per, batch, nh, hp, st),
+                             ("layer_groups", "layers", "batch", "heads",
+                              None, None), "zeros"),
+            "conv": ParamSpec((groups, per, batch, kc, conv_dim),
+                              ("layer_groups", "layers", "batch", None,
+                               "ssm_out"), "zeros"),
+            "k": ParamSpec((groups, batch, seq, hkv, hd),
+                           ("layers", "batch", "seq", "kv", None), "zeros"),
+            "v": ParamSpec((groups, batch, seq, hkv, hd),
+                           ("layers", "batch", "seq", "kv", None), "zeros"),
+        }
+        if trailing:
+            s["t_ssm"] = ParamSpec((trailing, batch, nh, hp, st),
+                                   ("layers", "batch", "heads", None, None),
+                                   "zeros")
+            s["t_conv"] = ParamSpec((trailing, batch, kc, conv_dim),
+                                    ("layers", "batch", None, "ssm_out"),
+                                    "zeros")
+        return s
+    return {
+        "k": ParamSpec((cfg.n_layers, batch, seq, hkv, hd), kv_axes, "zeros"),
+        "v": ParamSpec((cfg.n_layers, batch, seq, hkv, hd), kv_axes, "zeros"),
+    }
+
+
+def decode_step(cfg, params, cache, token, pos):
+    """One decode step: (B,1) token ids -> (B, vocab) logits + new cache."""
+    dtype = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    h = embed_tokens(params, token, dtype)                   # (B,1,D)
+
+    if cfg.family == "ssm":
+        def body(carry, xs):
+            lp, hs, cv = xs
+            a_in = apply_norm(cfg, carry, lp, "ln1")
+            out, h_new, cv_new = ssm_decode_step(cfg, lp, a_in, hs, cv)
+            return carry + out, (h_new, cv_new)
+        h, (hs, convs) = jax.lax.scan(
+            body, h, (params["layers"], cache["ssm"], cache["conv"]))
+        new_cache = dict(ssm=hs, conv=convs)
+
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+
+        def group_body(carry, xs):
+            glp, hs_g, cv_g, k_g, v_g = xs
+            hh = carry
+            def inner(c, ys):
+                lp, hs, cv = ys
+                a_in = apply_norm(cfg, c, lp, "ln1")
+                out, h_new, cv_new = ssm_decode_step(cfg, lp, a_in, hs, cv)
+                return c + out, (h_new, cv_new)
+            hh, (hs_new, cv_new) = jax.lax.scan(inner, hh, (glp, hs_g, cv_g))
+            a_in = apply_norm(cfg, hh, shared, "ln1")
+            attn_out, k_new, v_new = decode_attention(cfg, shared, a_in,
+                                                      k_g, v_g, pos)
+            hh = hh + attn_out
+            m_in = apply_norm(cfg, hh, shared, "ln2")
+            hh = hh + mlp_apply(cfg, shared, m_in)
+            return hh, (hs_new, cv_new, k_new, v_new)
+
+        h, (hs, cvs, ks, vs) = jax.lax.scan(
+            group_body, h,
+            (params["layers"], cache["ssm"], cache["conv"],
+             cache["k"], cache["v"]))
+        new_cache = dict(ssm=hs, conv=cvs, k=ks, v=vs)
+        if "t_ssm" in cache:
+            def tbody(c, ys):
+                lp, hs_, cv_ = ys
+                a_in = apply_norm(cfg, c, lp, "ln1")
+                out, h_new, cv_new = ssm_decode_step(cfg, lp, a_in, hs_, cv_)
+                return c + out, (h_new, cv_new)
+            h, (ths, tcvs) = jax.lax.scan(
+                tbody, h, (params["trailing"], cache["t_ssm"],
+                           cache["t_conv"]))
+            new_cache["t_ssm"], new_cache["t_conv"] = ths, tcvs
+
+    elif cfg.strap_decode and cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, xs):
+            lp, k_c, v_c, ks_c = xs
+            a_in = apply_norm(cfg, carry, lp, "ln1")
+            attn_out, k_new, v_new, ks_new = decode_attention_gated(
+                cfg, lp, a_in, k_c, v_c, ks_c, pos)
+            hh = carry + attn_out
+            m_in = apply_norm(cfg, hh, lp, "ln2")
+            if cfg.n_experts:
+                mo, _ = moe_apply(cfg, lp, m_in)
+            else:
+                mo = mlp_apply(cfg, lp, m_in)
+            return hh + mo, (k_new, v_new, ks_new)
+
+        h, (ks, vs, kss) = jax.lax.scan(
+            body, h, (params["layers"], cache["k"], cache["v"],
+                      cache["ksum"]))
+        new_cache = dict(k=ks, v=vs, ksum=kss)
+
+    else:
+        def body(carry, xs):
+            lp, k_c, v_c = xs
+            a_in = apply_norm(cfg, carry, lp, "ln1")
+            attn_out, k_new, v_new = decode_attention(cfg, lp, a_in,
+                                                      k_c, v_c, pos)
+            hh = carry + attn_out
+            m_in = apply_norm(cfg, hh, lp, "ln2")
+            if cfg.n_experts:
+                mo, _ = moe_apply(cfg, lp, m_in)
+            else:
+                mo = mlp_apply(cfg, lp, m_in)
+            return hh + mo, (k_new, v_new)
+
+        h, (ks, vs) = jax.lax.scan(body, h,
+                                   (params["layers"], cache["k"], cache["v"]))
+        new_cache = dict(k=ks, v=vs)
+
+    h = apply_norm(cfg, h, params, "final")
+    logits = lm_logits(cfg, params, h)[:, 0]
+    return logits, new_cache

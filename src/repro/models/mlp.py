@@ -1,0 +1,38 @@
+"""Dense MLP blocks: SwiGLU (llama-family) and GELU (whisper)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, Schema
+
+
+def mlp_schema(cfg, layers: int | None = None, prefix: str = "",
+               d_ff: int | None = None) -> Schema:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    L = (layers,) if layers is not None else ()
+    A = ("layers",) if layers is not None else ()
+    if cfg.act == "swiglu":
+        return {
+            prefix + "w_gate": ParamSpec(L + (d, f), A + ("dmodel", "ff"), "fan_in"),
+            prefix + "w_up": ParamSpec(L + (d, f), A + ("dmodel", "ff"), "fan_in"),
+            prefix + "w_down": ParamSpec(L + (f, d), A + ("ff", "dmodel"), "fan_in"),
+        }
+    return {
+        prefix + "w_in": ParamSpec(L + (d, f), A + ("dmodel", "ff"), "fan_in"),
+        prefix + "b_in": ParamSpec(L + (f,), A + ("ff",), "zeros"),
+        prefix + "w_out": ParamSpec(L + (f, d), A + ("ff", "dmodel"), "fan_in"),
+        prefix + "b_out": ParamSpec(L + (d,), A + ("dmodel",), "zeros"),
+    }
+
+
+def mlp_apply(cfg, p, x, prefix: str = ""):
+    if cfg.act == "swiglu":
+        g = x @ p[prefix + "w_gate"]
+        u = x @ p[prefix + "w_up"]
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        return h @ p[prefix + "w_down"]
+    h = x @ p[prefix + "w_in"] + p[prefix + "b_in"].astype(x.dtype)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return h @ p[prefix + "w_out"] + p[prefix + "b_out"].astype(x.dtype)

@@ -1,0 +1,74 @@
+"""Family dispatch: one uniform model API over lm.py / encdec.py."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import encdec, lm
+from .common import abstract_from_schema, axes_from_schema
+
+
+def _mod(cfg):
+    return encdec if cfg.is_encdec else lm
+
+
+def schema(cfg):
+    return encdec.encdec_schema(cfg) if cfg.is_encdec else lm.lm_schema(cfg)
+
+
+def init_params(cfg, key):
+    return _mod(cfg).init_params(cfg, key)
+
+
+def param_axes(cfg):
+    return _mod(cfg).param_axes(cfg)
+
+
+def abstract_params(cfg):
+    return _mod(cfg).abstract_params(cfg)
+
+
+def forward_train(cfg, params, batch):
+    return _mod(cfg).forward_train(cfg, params, batch)
+
+
+def loss_fn(cfg, params, batch):
+    return _mod(cfg).loss_fn(cfg, params, batch)
+
+
+def prefill(cfg, params, batch):
+    return _mod(cfg).prefill(cfg, params, batch)
+
+
+def decode_step(cfg, params, cache, token, pos):
+    return _mod(cfg).decode_step(cfg, params, cache, token, pos)
+
+
+def cache_schema(cfg, batch: int, seq: int):
+    if cfg.is_encdec:
+        return encdec.cache_schema(cfg, batch, seq // 2)
+    return lm.cache_schema(cfg, batch, seq)
+
+
+def cache_axes(cfg, batch: int, seq: int):
+    return axes_from_schema(cache_schema(cfg, batch, seq))
+
+
+def _cache_dtype(cfg, key):
+    # SSM states and strap key-sums are carried in fp32
+    if "ssm" in key or key == "ksum":
+        return jnp.float32
+    return jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+
+
+def abstract_cache(cfg, batch: int, seq: int):
+    import jax
+    sch = cache_schema(cfg, batch, seq)
+    return {k: jax.ShapeDtypeStruct(v.shape, _cache_dtype(cfg, k))
+            for k, v in sch.items()}
+
+
+def init_cache(cfg, batch: int, seq: int):
+    sch = cache_schema(cfg, batch, seq)
+    return {k: jnp.zeros(v.shape, _cache_dtype(cfg, k))
+            for k, v in sch.items()}

@@ -1,0 +1,363 @@
+"""Mamba2 (SSD — state-space duality) block: chunked train scan + decode step.
+
+Chunked SSD algorithm (Dao & Gu, arXiv:2405.21060): the sequence is split
+into chunks of Q tokens; within a chunk the quadratic dual form runs on the
+MXU (einsums), while a `lax.scan` carries the (nh, headdim, state) SSM state
+across chunks with per-chunk decay.  Per-token recurrence never appears, so
+everything vectorizes; the cross-chunk scan is O(L/Q) sequential steps.
+
+Decode keeps (conv_state, ssm_state) and advances one token in O(1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, Schema, constrain, rmsnorm
+
+
+def ssm_schema(cfg, layers: int | None = None) -> Schema:
+    d, di = cfg.d_model, cfg.d_inner
+    ng, st, nh = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    k = cfg.conv_kernel
+    conv_dim = di + 2 * ng * st
+    d_in_proj = 2 * di + 2 * ng * st + nh
+    L = (layers,) if layers is not None else ()
+    A = ("layers",) if layers is not None else ()
+    if cfg.ssm_split_proj:
+        # shard-aligned split of the fused in_proj/conv: mathematically the
+        # same linear map, but every output slice lands on TP shard
+        # boundaries, so no collective-permute on the z/x/B/C/dt split
+        # (H1 iteration 2, EXPERIMENTS.md SPerf).
+        gs = ng * st
+        return {
+            "in_z": ParamSpec(L + (d, di), A + ("dmodel", "ssm_out"), "fan_in"),
+            "in_x": ParamSpec(L + (d, di), A + ("dmodel", "ssm_out"), "fan_in"),
+            "in_B": ParamSpec(L + (d, gs), A + ("dmodel", "ssm_out"), "fan_in"),
+            "in_C": ParamSpec(L + (d, gs), A + ("dmodel", "ssm_out"), "fan_in"),
+            "in_dt": ParamSpec(L + (d, nh), A + ("dmodel", None), "fan_in"),
+            "conv_x_w": ParamSpec(L + (k, di), A + (None, "ssm_out"), 0.2),
+            "conv_B_w": ParamSpec(L + (k, gs), A + (None, "ssm_out"), 0.2),
+            "conv_C_w": ParamSpec(L + (k, gs), A + (None, "ssm_out"), 0.2),
+            "conv_x_b": ParamSpec(L + (di,), A + ("ssm_out",), "zeros"),
+            "conv_B_b": ParamSpec(L + (gs,), A + ("ssm_out",), "zeros"),
+            "conv_C_b": ParamSpec(L + (gs,), A + ("ssm_out",), "zeros"),
+            "A_log": ParamSpec(L + (nh,), A + (None,), 0.5),
+            "D_skip": ParamSpec(L + (nh,), A + (None,), "ones"),
+            "dt_bias": ParamSpec(L + (nh,), A + (None,), "zeros"),
+            "ssm_norm_w": ParamSpec(L + (di,), A + ("ssm_out",), "ones"),
+            "out_proj": ParamSpec(L + (di, d), A + ("ssm_out", "dmodel"), "fan_in"),
+        }
+    return {
+        "in_proj": ParamSpec(L + (d, d_in_proj), A + ("dmodel", "ssm_out"), "fan_in"),
+        "conv_w": ParamSpec(L + (k, conv_dim), A + (None, "ssm_out"), 0.2),
+        "conv_b": ParamSpec(L + (conv_dim,), A + ("ssm_out",), "zeros"),
+        "A_log": ParamSpec(L + (nh,), A + (None,), 0.5),
+        "D_skip": ParamSpec(L + (nh,), A + (None,), "ones"),
+        "dt_bias": ParamSpec(L + (nh,), A + (None,), "zeros"),
+        "ssm_norm_w": ParamSpec(L + (di,), A + ("ssm_out",), "ones"),
+        "out_proj": ParamSpec(L + (di, d), A + ("ssm_out", "dmodel"), "fan_in"),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di = cfg.d_inner
+    gs = cfg.ssm_ngroups * cfg.ssm_state
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: di + di + 2 * gs]
+    dt = zxbcdt[..., di + di + 2 * gs:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv along seq: xbc (B,L,C), w (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return out + b[None, None, :]
+
+
+def _split_xbc(cfg, xbc):
+    di, ng, st = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    nh, hp = cfg.ssm_nheads, cfg.ssm_headdim
+    b, l, _ = xbc.shape
+    x = xbc[..., :di].reshape(b, l, nh, hp)
+    bmat = xbc[..., di: di + ng * st].reshape(b, l, ng, st)
+    cmat = xbc[..., di + ng * st:].reshape(b, l, ng, st)
+    return x, bmat, cmat
+
+
+def ssd_chunked(cfg, x, bmat, cmat, dt, a_neg, h0=None):
+    """Chunked SSD scan.
+
+    x    : (B, L, nh, hp)   (already conv'd + activated)
+    bmat : (B, L, ng, st)
+    cmat : (B, L, ng, st)
+    dt   : (B, L, nh)       (softplus'd, fp32)
+    a_neg: (nh,)            A = -exp(A_log), fp32
+    h0   : optional (B, nh, hp, st) initial state
+    Returns (y (B,L,nh,hp), h_final).
+    """
+    b, l, nh, hp = x.shape
+    ng, st = bmat.shape[2], bmat.shape[3]
+    q = min(cfg.ssm_chunk, l)
+    while l % q:                      # largest divisor <= ssm_chunk
+        q -= 1
+    nc = l // q
+    rep = nh // ng                            # heads per B/C group
+
+    xq = x.reshape(b, nc, q, nh, hp).astype(jnp.float32)
+    bq = bmat.reshape(b, nc, q, ng, st).astype(jnp.float32)
+    cq = cmat.reshape(b, nc, q, ng, st).astype(jnp.float32)
+    dtq = dt.reshape(b, nc, q, nh)
+    # pin shardings so GSPMD never reshards the big SSD intermediates.
+    # seq-parallel mode shards the CHUNK axis over `model` (chunks align
+    # with shards; the inter-chunk scan passes only the small SSM state
+    # between neighbours) — otherwise TP rides the SSM head axis.
+    seq_ax = "model" if cfg.seq_parallel else None
+    head_ax = None if cfg.seq_parallel else "model"
+    xq = constrain(cfg, xq, ("dp", seq_ax, None, head_ax, None))
+    bq = constrain(cfg, bq, ("dp", seq_ax, None, None, None))
+    cq = constrain(cfg, cq, ("dp", seq_ax, None, None, None))
+    dtq = constrain(cfg, dtq, ("dp", seq_ax, None, head_ax))
+    da = dtq * a_neg[None, None, None, :]     # (B,nc,Q,nh) negative values
+    da = constrain(cfg, da, ("dp", seq_ax, None, head_ax))
+    cs = jnp.cumsum(da, axis=2)               # inclusive cumsum within chunk
+    total = cs[:, :, -1, :]                   # (B,nc,nh)
+
+    # expand B/C groups to heads
+    bh = jnp.repeat(bq, rep, axis=3) if ng > 1 else jnp.broadcast_to(
+        bq, (b, nc, q, 1, st))
+    ch = jnp.repeat(cq, rep, axis=3) if ng > 1 else jnp.broadcast_to(
+        cq, (b, nc, q, 1, st))
+    # head index of each B/C column (ng==1 -> broadcast dim of size 1)
+    def bc(h_idx):                             # not used; clarity only
+        return h_idx // rep
+
+    dtx = xq * dtq[..., None]                 # (B,nc,Q,nh,hp)
+
+    # ---- intra-chunk (dual quadratic form) ------------------------------
+    # decay(qi, si) = exp(cs[qi] - cs[si]) for qi >= si
+    decay = jnp.exp(cs[:, :, :, None, :] - cs[:, :, None, :, :])  # (B,nc,Q,S,nh)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(mask[None, None, :, :, None], decay, 0.0)
+    decay = constrain(cfg, decay, ("dp", seq_ax, None, None, head_ax))
+    if ng == 1:
+        scores = jnp.einsum("bcqgn,bcsgn->bcqs", ch, bh)          # (B,nc,Q,S)
+        y_diag = jnp.einsum("bcqs,bcqsh,bcshp->bcqhp", scores, decay, dtx)
+    else:
+        scores = jnp.einsum("bcqhn,bcshn->bcqsh", ch, bh)
+        y_diag = jnp.einsum("bcqsh,bcqsh,bcshp->bcqhp", scores, decay, dtx)
+
+    # ---- chunk states ----------------------------------------------------
+    decay_to_end = jnp.exp(total[:, :, None, :] - cs)             # (B,nc,Q,nh)
+    if ng == 1:
+        s_chunk = jnp.einsum("bcsgn,bcsh,bcshp->bchpn", bh,
+                             decay_to_end, dtx)
+    else:
+        s_chunk = jnp.einsum("bcshn,bcsh,bcshp->bchpn", bh,
+                             decay_to_end, dtx)
+
+    # ---- inter-chunk scan -------------------------------------------------
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, hp, st), jnp.float32)
+
+    def scan_fn(h, inputs):
+        s_c, tot_c = inputs                    # (B,nh,hp,st), (B,nh)
+        h_prev = h
+        h = h * jnp.exp(tot_c)[:, :, None, None] + s_c
+        return h, h_prev
+
+    (h_final, h_prevs) = jax.lax.scan(
+        scan_fn, h0, (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(total, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)      # (B,nc,nh,hp,st)
+
+    # ---- inter-chunk contribution -----------------------------------------
+    state_decay = jnp.exp(cs)                  # decay from chunk start to qi
+    if ng == 1:
+        y_off = jnp.einsum("bcqgn,bchpn,bcqh->bcqhp", ch, h_prevs, state_decay)
+    else:
+        y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", ch, h_prevs, state_decay)
+
+    y = constrain(cfg, y_diag + y_off, ("dp", seq_ax, None, head_ax, None))
+    y = y.reshape(b, l, nh, hp)
+    return y, h_final
+
+
+def ssm_apply(cfg, p, xin, h0=None, conv0=None, return_state: bool = False):
+    """Full Mamba2 mixer on (B, L, D).  Optionally consumes/returns state."""
+    bsz, l, _ = xin.shape
+    if cfg.ssm_split_proj:
+        return _ssm_apply_split(cfg, p, xin, h0, conv0, return_state)
+    zxbcdt = xin @ p["in_proj"]
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    if conv0 is not None:
+        ctx = jnp.concatenate([conv0.astype(xbc.dtype), xbc], axis=1)
+        xbc_conv = _causal_conv(ctx, p["conv_w"], p["conv_b"])[:, conv0.shape[1]:]
+        conv_out = ctx[:, -(cfg.conv_kernel - 1):, :]
+    else:
+        xbc_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+        conv_out = xbc[:, -(cfg.conv_kernel - 1):, :]
+    xbc_act = jax.nn.silu(xbc_conv.astype(jnp.float32)).astype(xin.dtype)
+    x, bmat, cmat = _split_xbc(cfg, xbc_act)
+    dt32 = jax.nn.softplus(dt.astype(jnp.float32)
+                           + p["dt_bias"].astype(jnp.float32))
+    a_neg = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h_final = ssd_chunked(cfg, x, bmat, cmat, dt32, a_neg, h0)
+    y = y + p["D_skip"].astype(jnp.float32)[None, None, :, None] \
+        * x.astype(jnp.float32)
+    y = y.reshape(bsz, l, cfg.d_inner).astype(xin.dtype)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rmsnorm(y, p["ssm_norm_w"])
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, h_final, conv_out
+    return out
+
+
+def _ssm_apply_split(cfg, p, xin, h0, conv0, return_state):
+    """Split-projection forward: identical math, shard-aligned streams.
+
+    conv state layout: concatenation [x | B | C] along channels (same as
+    the fused path's xbc), so decode caches stay compatible.
+    """
+    bsz, l, _ = xin.shape
+    di, ng, st = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    gs = ng * st
+    nh, hp = cfg.ssm_nheads, cfg.ssm_headdim
+    z = xin @ p["in_z"]
+    xs = xin @ p["in_x"]
+    bs = xin @ p["in_B"]
+    cssr = xin @ p["in_C"]
+    dt = xin @ p["in_dt"]
+
+    def conv_one(stream, w, b_, c0):
+        if c0 is not None:
+            ctx = jnp.concatenate([c0.astype(stream.dtype), stream], axis=1)
+            out = _causal_conv(ctx, w, b_)[:, c0.shape[1]:]
+            tail = ctx[:, -(cfg.conv_kernel - 1):, :]
+        else:
+            out = _causal_conv(stream, w, b_)
+            tail = stream[:, -(cfg.conv_kernel - 1):, :]
+        return out, tail
+
+    cx0 = cb0 = cc0 = None
+    if conv0 is not None:
+        cx0 = conv0[..., :di]
+        cb0 = conv0[..., di:di + gs]
+        cc0 = conv0[..., di + gs:]
+    xc, xt = conv_one(xs, p["conv_x_w"], p["conv_x_b"], cx0)
+    bc_, bt = conv_one(bs, p["conv_B_w"], p["conv_B_b"], cb0)
+    cc_, ct = conv_one(cssr, p["conv_C_w"], p["conv_C_b"], cc0)
+    conv_out = jnp.concatenate([xt, bt, ct], axis=-1)
+
+    act = lambda t: jax.nn.silu(t.astype(jnp.float32)).astype(xin.dtype)
+    x = act(xc).reshape(bsz, l, nh, hp)
+    bmat = act(bc_).reshape(bsz, l, ng, st)
+    cmat = act(cc_).reshape(bsz, l, ng, st)
+    dt32 = jax.nn.softplus(dt.astype(jnp.float32)
+                           + p["dt_bias"].astype(jnp.float32))
+    a_neg = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h_final = ssd_chunked(cfg, x, bmat, cmat, dt32, a_neg, h0)
+    y = y + p["D_skip"].astype(jnp.float32)[None, None, :, None]         * x.astype(jnp.float32)
+    y = y.reshape(bsz, l, di).astype(xin.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rmsnorm(y, p["ssm_norm_w"])
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, h_final, conv_out
+    return out
+
+
+def ssm_decode_step(cfg, p, xin, h, conv_state):
+    """One-token recurrent step.
+
+    xin        : (B, 1, D)
+    h          : (B, nh, hp, st) fp32
+    conv_state : (B, K-1, conv_dim)
+    """
+    bsz = xin.shape[0]
+    nh, hp, st, ng = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_ngroups
+    if cfg.ssm_split_proj:
+        out, h_new, conv_new = _ssm_apply_split(cfg, p, xin, h, conv_state[:, None][:, 0:0] if False else None, True)             if False else _ssm_decode_split(cfg, p, xin, h, conv_state)
+        return out, h_new, conv_new
+    zxbcdt = xin @ p["in_proj"]
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+
+    ctx = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+    conv_new = ctx[:, 1:, :]                                   # (B, K-1, C)
+    xbc_conv = jnp.einsum("bkc,kc->bc", ctx, p["conv_w"].astype(ctx.dtype)) \
+        + p["conv_b"].astype(ctx.dtype)
+    xbc_act = jax.nn.silu(xbc_conv.astype(jnp.float32))        # (B, C)
+
+    di = cfg.d_inner
+    x = xbc_act[:, :di].reshape(bsz, nh, hp)
+    bmat = xbc_act[:, di: di + ng * st].reshape(bsz, ng, st)
+    cmat = xbc_act[:, di + ng * st:].reshape(bsz, ng, st)
+    rep = nh // ng
+    bh = jnp.repeat(bmat, rep, axis=1)                         # (B, nh, st)
+    chh = jnp.repeat(cmat, rep, axis=1)
+
+    dt32 = jax.nn.softplus(dt[:, 0, :].astype(jnp.float32)
+                           + p["dt_bias"].astype(jnp.float32))  # (B, nh)
+    a_neg = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt32 * a_neg[None, :])                        # (B, nh)
+
+    dtx = x * dt32[..., None]                                  # (B, nh, hp)
+    h_new = h * da[..., None, None] + jnp.einsum("bhp,bhn->bhpn", dtx, bh)
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, chh)
+    y = y + p["D_skip"].astype(jnp.float32)[None, :, None] * x
+    y = y.reshape(bsz, 1, di).astype(xin.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rmsnorm(y, p["ssm_norm_w"])
+    return y @ p["out_proj"], h_new, conv_new
+
+
+def _ssm_decode_split(cfg, p, xin, h, conv_state):
+    """One-token step for the split-projection layout."""
+    bsz = xin.shape[0]
+    di, ng, st = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    gs = ng * st
+    nh, hp = cfg.ssm_nheads, cfg.ssm_headdim
+    z = xin @ p["in_z"]
+    xs = xin @ p["in_x"]
+    bs = xin @ p["in_B"]
+    cs_ = xin @ p["in_C"]
+    dt = xin @ p["in_dt"]
+
+    def step_conv(stream, w, b_, c0):
+        ctx = jnp.concatenate([c0.astype(stream.dtype), stream], axis=1)
+        out = jnp.einsum("bkc,kc->bc", ctx, w.astype(ctx.dtype)) \
+            + b_.astype(ctx.dtype)
+        return out, ctx[:, 1:, :]
+
+    cx0 = conv_state[..., :di]
+    cb0 = conv_state[..., di:di + gs]
+    cc0 = conv_state[..., di + gs:]
+    xc, xt = step_conv(xs, p["conv_x_w"], p["conv_x_b"], cx0)
+    bc_, bt = step_conv(bs, p["conv_B_w"], p["conv_B_b"], cb0)
+    cc_, ct = step_conv(cs_, p["conv_C_w"], p["conv_C_b"], cc0)
+    conv_new = jnp.concatenate([xt, bt, ct], axis=-1)
+
+    act32 = lambda t: jax.nn.silu(t.astype(jnp.float32))
+    x = act32(xc).reshape(bsz, nh, hp)
+    bmat = act32(bc_).reshape(bsz, ng, st)
+    cmat = act32(cc_).reshape(bsz, ng, st)
+    rep = nh // ng
+    bh = jnp.repeat(bmat, rep, axis=1)
+    chh = jnp.repeat(cmat, rep, axis=1)
+    dt32 = jax.nn.softplus(dt[:, 0, :].astype(jnp.float32)
+                           + p["dt_bias"].astype(jnp.float32))
+    a_neg = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt32 * a_neg[None, :])
+    dtx = x * dt32[..., None]
+    h_new = h * da[..., None, None] + jnp.einsum("bhp,bhn->bhpn", dtx, bh)
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, chh)
+    y = y + p["D_skip"].astype(jnp.float32)[None, :, None] * x
+    y = y.reshape(bsz, 1, di).astype(xin.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rmsnorm(y, p["ssm_norm_w"])
+    return y @ p["out_proj"], h_new, conv_new

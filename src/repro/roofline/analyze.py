@@ -1,0 +1,170 @@
+"""Three-term roofline from the dry-run artifacts (TPU v5e targets).
+
+  compute    = HLO_FLOPs_total    / (chips * 197e12 FLOP/s bf16)
+  memory     = HLO_bytes_total    / (chips * 819e9  B/s HBM)
+  collective = per-axis collective bytes / (chips * links * 50e9 B/s)
+
+`cost_analysis()` reports per-device (post-SPMD) numbers -> multiply by
+device count for totals.  Collective time uses the parsed per-op bytes:
+in-pod ops ride ICI (~50 GB/s/link; a 2D-torus v5e chip has multiple
+links, we budget 2 effective links for ring traffic on each mesh axis);
+cross-pod bytes ride the DCI at an effective 25 GB/s per chip pair.
+
+Also records MODEL_FLOPS (6*N*D dense / 6*N_active*D MoE; decode counts
+D = global_batch tokens) and the useful-compute ratio.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_LINK_BW = 50e9           # bytes/s per link
+ICI_LINKS_EFFECTIVE = 2.0    # ring traffic rides 2 links per chip
+DCN_BW = 25e9                # cross-pod effective bytes/s per chip
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+@dataclass
+class Roofline:
+    arch: str
+    cell: str
+    mesh: str
+    opt_level: int
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    model_flops: float
+    hlo_flops_total: float
+    useful_ratio: float
+    bytes_per_device: float
+    coll_bytes_total: float
+    cross_pod_bytes: float
+    step_time_est: float
+    mfu_bound: float
+
+    def row(self) -> dict:
+        return self.__dict__.copy()
+
+
+def model_flops_for(d: dict) -> float:
+    """6*N*D where D = trained/processed tokens of the cell."""
+    b, s = d["global_batch"], d["seq_len"]
+    n = d["active_params"]
+    if d["kind"] == "train":
+        return 6.0 * n * b * s
+    if d["kind"] == "prefill":
+        return 2.0 * n * b * s          # forward only
+    return 2.0 * n * b                   # decode: 1 token per sequence
+
+
+def analyze_one(d: dict) -> Roofline:
+    chips = d["devices"]
+    exact = d.get("hlo_exact")
+    if exact:
+        # loop-corrected dot FLOPs (per device) from the optimized HLO
+        flops_total = exact["dot_flops_per_device"] * chips
+        in_pod = exact["in_pod_bytes"]
+        cross = exact["cross_pod_bytes"]
+        coll_total = exact["collective_bytes_total"]
+    else:  # legacy artifacts (uncorrected — kept for comparison only)
+        flops_total = d["flops_per_device"] * chips
+        coll = d.get("collectives", {})
+        in_pod = coll.get("in_pod_bytes", 0.0)
+        cross = coll.get("cross_pod_bytes", 0.0)
+        coll_total = coll.get("total_bytes", 0.0)
+    # recompute the analytic HBM model at analysis time so baseline and
+    # opt-level variants always use the same (latest) traffic model
+    try:
+        from ..configs.registry import get_arch
+        from ..launch.optlevels import apply_opt_level
+        from .analytic import hbm_bytes_per_device
+        cfg = apply_opt_level(get_arch(d["arch"]), d["cell"],
+                              d.get("opt_level", 0))
+        bytes_dev = hbm_bytes_per_device(cfg, d["cell"], chips)
+    except Exception:
+        bytes_dev = d.get("analytic_hbm_bytes_per_device",
+                          d.get("bytes_accessed_per_device", 0.0))
+    t_comp = flops_total / (chips * PEAK_FLOPS)
+    t_mem = bytes_dev / HBM_BW
+    # per-op collective bytes are per-device payloads
+    t_coll = (in_pod / (ICI_LINKS_EFFECTIVE * ICI_LINK_BW)
+              + cross / DCN_BW)
+
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = d.get("model_flops") or model_flops_for(d)
+    useful = mf / flops_total if flops_total else 0.0
+    # perfect-overlap step estimate: max of the three engines
+    t_step = max(terms.values())
+    mfu = (mf / (chips * PEAK_FLOPS)) / t_step if t_step else 0.0
+    return Roofline(
+        arch=d["arch"], cell=d["cell"], mesh=d["mesh"],
+        opt_level=d.get("opt_level", 0),
+        t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+        dominant=dominant, model_flops=mf, hlo_flops_total=flops_total,
+        useful_ratio=useful, bytes_per_device=bytes_dev,
+        coll_bytes_total=coll_total,
+        cross_pod_bytes=cross, step_time_est=t_step, mfu_bound=mfu)
+
+
+def load_all(mesh: str | None = "single", opt_level: int | None = 0
+             ) -> list[Roofline]:
+    out = []
+    for f in sorted(RESULTS.glob("*.json")):
+        d = json.loads(f.read_text())
+        if not d.get("ok"):
+            continue
+        if mesh and d["mesh"] != mesh:
+            continue
+        if opt_level is not None and d.get("opt_level", 0) != opt_level:
+            continue
+        out.append(analyze_one(d))
+    return out
+
+
+def table(rows: list[Roofline]) -> str:
+    hdr = (f"{'arch':22s} {'cell':12s} {'mesh':6s} {'comp(ms)':>9s} "
+           f"{'mem(ms)':>9s} {'coll(ms)':>9s} {'dominant':>10s} "
+           f"{'useful':>7s} {'MFU-bnd':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda r: (r.arch, r.cell)):
+        lines.append(
+            f"{r.arch:22s} {r.cell:12s} {r.mesh:6s} "
+            f"{1e3 * r.t_compute:9.3f} {1e3 * r.t_memory:9.3f} "
+            f"{1e3 * r.t_collective:9.3f} {r.dominant:>10s} "
+            f"{r.useful_ratio:7.3f} {r.mfu_bound:8.3f}")
+    return "\n".join(lines)
+
+
+def interesting_cells(rows: list[Roofline]) -> dict:
+    """Hillclimb candidates: worst roofline fraction, most collective-bound,
+    most paper-representative (largest decode memory term = the StrapCache /
+    C_BL analogue)."""
+    trains = [r for r in rows if r.cell == "train_4k"]
+    worst = min(trains, key=lambda r: r.mfu_bound) if trains else None
+    coll = max(rows, key=lambda r: (r.t_collective /
+                                    max(r.step_time_est, 1e-12)))
+    decodes = [r for r in rows if "decode" in r.cell or "long" in r.cell]
+    paper = max(decodes, key=lambda r: r.t_memory) if decodes else None
+    return dict(worst_mfu=worst, most_collective=coll, paper_rep=paper)
+
+
+def main():
+    rows = load_all()
+    print(table(rows))
+    print()
+    picks = interesting_cells(rows)
+    for k, r in picks.items():
+        if r:
+            print(f"{k}: {r.arch} / {r.cell} (dominant={r.dominant}, "
+                  f"MFU-bound={r.mfu_bound:.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Parse collective traffic out of optimized HLO text.
+
+`compiled.cost_analysis()` gives FLOPs and memory bytes but NOT collective
+bytes; we recover those by scanning the post-SPMD HLO for
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops and summing operand sizes.  Each op is attributed to the mesh axes its
+replica groups span — in particular whether it crosses the pod boundary
+(devices 0..255 vs 256..511), which is what the strapped-collective
+analysis cares about.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(?:[a-z0-9_]+)\[[^\]]*\])?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.I)
+
+SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str, pod_size: int = 256) -> dict:
+    """Returns per-type byte totals + pod-crossing split.
+
+    Bytes counted = output operand size of each collective op (the payload
+    that actually moves once; all-reduce ~2x for ring but roofline uses the
+    standard 2(n-1)/n model applied downstream).
+    """
+    out = dict(by_type=defaultdict(int), cross_pod_bytes=0,
+               in_pod_bytes=0, ops=0)
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if m is None:
+            continue
+        op = m.group(1).lower()
+        if "-done(" in line:
+            continue  # avoid double counting async pairs
+        # output shape: the lhs "x[...] = <shape> op(...)" — take the first
+        # shape on the line (the result type)
+        head = line.split("=", 1)
+        shape_src = head[1] if len(head) > 1 else line
+        nbytes = _shape_bytes(shape_src.split("(", 1)[0])
+        if nbytes == 0:
+            # tuple result: fall back to everything before the op name
+            nbytes = _shape_bytes(shape_src)
+        out["by_type"][op] += nbytes
+        out["ops"] += 1
+        # replica-group span
+        crosses = False
+        gm = re.search(r"replica_groups=\{(.*?)\}\s*(?:,|$)", line)
+        if gm:
+            groups = re.findall(r"\{([0-9,]+)\}", gm.group(0))
+            for g in groups:
+                ids = [int(x) for x in g.split(",") if x]
+                if ids and (max(ids) // pod_size) != (min(ids) // pod_size):
+                    crosses = True
+                    break
+        else:
+            # iota-style v2 groups: [N,M]<=[...] form
+            gm2 = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\]"
+                            r"(?:T\(([0-9,]+)\))?", line)
+            if gm2:
+                ngroups, gsize = int(gm2.group(1)), int(gm2.group(2))
+                dims = [int(x) for x in gm2.group(3).split(",")]
+                perm = gm2.group(4)
+                # reconstruct the device list and group assignment
+                import numpy as np
+                arr = np.arange(int(np.prod(dims))).reshape(dims)
+                if perm:
+                    arr = arr.transpose([int(x) for x in perm.split(",")])
+                arr = arr.reshape(ngroups, gsize)
+                for row in arr:
+                    if (row.max() // pod_size) != (row.min() // pod_size):
+                        crosses = True
+                        break
+        if crosses:
+            out["cross_pod_bytes"] += nbytes
+        else:
+            out["in_pod_bytes"] += nbytes
+    out["by_type"] = dict(out["by_type"])
+    out["total_bytes"] = sum(out["by_type"].values())
+    return out

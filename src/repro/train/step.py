@@ -1,0 +1,77 @@
+"""Step factories: train_step / serve_prefill / serve_decode.
+
+These are the functions the dry-run lowers and the launchers execute.  All
+are pure; sharding is attached by the caller (jax.jit in_shardings built
+from repro.distributed.sharding).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..models import registry as M
+from .optimizer import OptConfig, make_optimizer
+
+
+def make_train_step(cfg, oc: OptConfig | None = None,
+                    microbatch: int | None = None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    `microbatch`: number of gradient-accumulation slices of the global batch
+    (sequential lax.scan), trading step latency for activation memory.
+    """
+    opt = make_optimizer(cfg.optimizer, oc)
+
+    def loss_of(params, batch):
+        return M.loss_fn(cfg, params, batch)
+
+    def grads_of(params, batch):
+        if not microbatch or microbatch <= 1:
+            return jax.value_and_grad(loss_of)(params, batch)
+
+        def slice_mb(i, x):
+            mb = x.shape[0] // microbatch
+            return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+        def body(carry, i):
+            acc, loss_acc = carry
+            mb_batch = jax.tree.map(functools.partial(slice_mb, i), batch)
+            loss, g = jax.value_and_grad(loss_of)(params, mb_batch)
+            acc = jax.tree.map(jnp.add, acc, g)
+            return (acc, loss_acc + loss), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, lsum), _ = jax.lax.scan(body, (zeros, jnp.zeros(())),
+                                       jnp.arange(microbatch))
+        scale = 1.0 / microbatch
+        return lsum * scale, jax.tree.map(lambda g: g * scale, gsum)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        # global-norm clip at 1.0
+        clip = jnp.minimum(1.0, 1.0 / (gnorm + 1e-6))
+        grads = jax.tree.map(lambda g: g * clip, grads)
+        params, opt_state = opt.update(grads, opt_state, params)
+        metrics = dict(loss=loss, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step, opt
+
+
+def make_serve_prefill(cfg):
+    def serve_prefill(params, batch):
+        return M.prefill(cfg, params, batch)
+    return serve_prefill
+
+
+def make_serve_decode(cfg):
+    def serve_decode(params, cache, token, pos):
+        logits, new_cache = M.decode_step(cfg, params, cache, token, pos)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token[:, None], logits, new_cache
+    return serve_decode

@@ -1,0 +1,17 @@
+import os
+import sys
+from pathlib import Path
+
+# tests must see exactly ONE device (the dry-run alone forces 512)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture()
+def rng():
+    # function-scoped: test inputs must not depend on execution order
+    return np.random.default_rng(0)

@@ -1,0 +1,141 @@
+"""Core STCO engine behaviour: transient vs closed form, routing story,
+DSE feasibility logic, device models."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import calibration as cal
+from repro.core.calibration import AOS, D1B, SI
+from repro.core.device_models import (AOS_ACCESS, IGO_SELECTOR, SI_ACCESS,
+                                      ids_ua, retention_time_ms,
+                                      subthreshold_swing_mv_dec)
+from repro.core.dse import best_design, evaluate_grid, full_sweep, pareto_front
+from repro.core.netlist import build_bl_ladder, effective_cbl_ff
+from repro.core.routing import SCHEMES, bonding_geometry
+from repro.core.sense import charge_share_mv, sense_margin_mv
+from repro.kernels import ref
+
+
+class TestTransientVsAnalytic:
+    def test_single_rc_decay(self):
+        """One node discharging through a clamp: v(t)=v0*exp(-t/RC)."""
+        r, c, dt, t = 10.0, 5.0, 0.0005, 600      # dt/tau = 0.01
+        cN = jnp.asarray([[c, 1e-6]])
+        g = jnp.asarray([[1e-9]])                 # access branch ~open
+        gc = jnp.asarray([[1.0 / r, 0.0]])
+        vc = jnp.zeros((1, 2))
+        v0 = jnp.asarray([[1.0, 0.0]])
+        ramp = jnp.zeros((t,))
+        tr = ref.rc_multistep_ref(cN, g, gc, vc, v0, ramp, dt)
+        tau = r * c * 1e-3                         # ns
+        ts = (np.arange(t) + 1) * dt
+        expect = np.exp(-ts / tau)
+        # implicit-Euler drift bound: exp(N (dt/tau)^2 / 2) ~ 3% at the tail
+        np.testing.assert_allclose(np.array(tr[:, 0, 0]), expect,
+                                   rtol=0.04, atol=1e-4)
+
+    def test_charge_sharing_asymptote(self):
+        """Two capacitors through a resistor settle to the weighted mean."""
+        c1, c2, r = 6.6, 4.0, 50.0
+        cN = jnp.asarray([[c1, c2]])
+        g = jnp.asarray([[1.0 / r]])
+        gc = jnp.zeros((1, 2))
+        vc = jnp.zeros((1, 2))
+        v0 = jnp.asarray([[0.55, 1.1]])
+        ramp = jnp.ones((4000,))
+        tr = ref.rc_multistep_ref(cN, g, gc, vc, v0, ramp, 0.005)
+        vfinal = float(tr[-1, 0, 0])
+        expect = (c1 * 0.55 + c2 * 1.1) / (c1 + c2)
+        assert abs(vfinal - expect) < 1e-3
+        # and the analytic charge-share margin agrees
+        dv = expect - 0.55
+        model = float(charge_share_mv(SI, "sel_strap",
+                                      jnp.asarray([137]))[0]) / 1e3
+        cbl = float(effective_cbl_ff(SI, "sel_strap", jnp.asarray([137]))[0])
+        assert abs(dv - 0.55 * 4.0 / (4.0 + 6.6)) < 1e-3
+        assert abs(model - 0.55 * 4.0 / (4.0 + cbl)) < 1e-4
+
+
+class TestRoutingStory:
+    """The paper's Fig. 3(c) narrative must emerge from the models."""
+
+    def test_direct_lowest_cbl(self):
+        L = jnp.asarray([137])
+        cbls = {s: float(effective_cbl_ff(SI, s, L)[0]) for s in SCHEMES}
+        assert cbls["direct"] == min(cbls.values())
+        assert cbls["strap"] == max(cbls.values())
+        assert cbls["strap"] > 2.5 * cbls["sel_strap"]
+
+    def test_only_sel_strap_is_viable(self):
+        L = jnp.asarray([137])
+        viable = {}
+        for s in SCHEMES:
+            margin_ok = (float(sense_margin_mv(SI, s, L)[0])
+                         >= cal.MIN_FUNCTIONAL_MARGIN_MV
+                         and float(sense_margin_mv(SI, s, L, True)[0])
+                         >= cal.MIN_DISTURBED_MARGIN_MV)
+            pitch_ok = bool(bonding_geometry(SI, s).manufacturable)
+            viable[s] = margin_ok and pitch_ok
+        assert viable == {"direct": False, "strap": False,
+                          "core_mux": False, "sel_strap": True}
+
+    def test_selector_isolation_cuts_cbl(self):
+        L = jnp.asarray([137])
+        with_sel = float(effective_cbl_ff(SI, "sel_strap", L)[0])
+        without = float(effective_cbl_ff(SI, "strap", L)[0])
+        assert without / with_sel > 2.0
+
+
+class TestDSE:
+    def test_sweep_and_best_design(self):
+        pts = full_sweep(layer_grid=np.array([64, 87, 137, 200]),
+                         with_transient=False)
+        best = best_design(pts)
+        assert best is not None
+        assert best.scheme == "sel_strap"
+        assert best.density_gb_mm2 >= 2.6 - 1e-6
+
+    def test_pareto_nonempty_and_nondominated(self):
+        pts = evaluate_grid(SI, "sel_strap", np.array([64, 100, 137]),
+                            with_transient=False)
+        front = pareto_front(pts, require_feasible=False)
+        assert front
+        for p in front:
+            assert not any(
+                q.density_gb_mm2 >= p.density_gb_mm2
+                and q.margin_disturbed_mv > p.margin_disturbed_mv
+                and q.e_read_fj <= p.e_read_fj for q in front if q is not p
+                if q.density_gb_mm2 > p.density_gb_mm2)
+
+
+class TestDeviceModels:
+    def test_igo_ion_anchor(self):
+        """IGO selector: Ion > 50 uA at Vgs=2 V (paper Fig. 6)."""
+        ion = float(ids_ua(IGO_SELECTOR, 2.0, 1.0))
+        assert ion > 50.0
+
+    def test_subthreshold_slopes(self):
+        assert abs(float(subthreshold_swing_mv_dec(IGO_SELECTOR)) - 60) < 8
+        assert abs(float(subthreshold_swing_mv_dec(AOS_ACCESS)) - 65) < 8
+        assert abs(float(subthreshold_swing_mv_dec(SI_ACCESS)) - 85) < 10
+
+    def test_aos_retention_advantage(self):
+        t_aos = float(retention_time_ms(AOS_ACCESS, 4.0))
+        t_si = float(retention_time_ms(SI_ACCESS, 4.0))
+        assert t_aos > 1000 * t_si          # oxide channel ~1e-19 A
+        assert t_aos > 64.0                 # beats the refresh window
+
+    def test_ids_monotone_in_vgs(self):
+        v = jnp.linspace(0.0, 2.0, 41)
+        i = np.array(ids_ua(SI_ACCESS, v, 0.5))
+        assert (np.diff(i) > 0).all()
+
+
+class TestLadder:
+    def test_ladder_caps_sum_to_cbl_plus_cs(self):
+        L = jnp.asarray([137])
+        lad = build_bl_ladder(SI, "sel_strap", L)
+        total = float(lad.c.sum())
+        cbl = float(effective_cbl_ff(SI, "sel_strap", L)[0])
+        assert abs(total - (cbl + cal.CS_FF)) < 1e-4

@@ -1,0 +1,126 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.rc_transient import rc_multistep_pallas
+from repro.kernels.strap_gather import strap_attend_pallas
+
+
+def random_ladder(rng, b, n, dtype):
+    c = rng.uniform(1, 5, (b, n)).astype(dtype)
+    g = rng.uniform(0.05, 0.2, (b, n - 1)).astype(dtype)
+    gc = np.zeros((b, n), dtype)
+    gc[:, 0] = 0.2
+    vc = np.full((b, n), 0.55, dtype)
+    v0 = rng.uniform(0, 1.1, (b, n)).astype(dtype)
+    return map(jnp.asarray, (c, g, gc, vc, v0))
+
+
+class TestRCTransientKernel:
+    @pytest.mark.parametrize("b,n,t", [(1, 6, 16), (9, 6, 50), (64, 8, 33),
+                                       (130, 4, 25), (256, 6, 10)])
+    def test_shapes(self, rng, b, n, t):
+        c, g, gc, vc, v0 = random_ladder(rng, b, n, np.float32)
+        ramp = jnp.asarray(np.clip(np.arange(t) / 8, 0, 1), jnp.float32)
+        out_ref = ref.rc_multistep_ref(c, g, gc, vc, v0, ramp, 0.02)
+        out_pl = rc_multistep_pallas(c, g, gc, vc, v0, ramp, 0.02,
+                                     interpret=True)
+        assert out_pl.shape == (t, b, n)
+        np.testing.assert_allclose(np.array(out_ref), np.array(out_pl),
+                                   rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("dtype", [np.float32, np.float64])
+    def test_dtypes(self, rng, dtype):
+        if dtype == np.float64:
+            pytest.skip("x64 disabled in test session")
+        c, g, gc, vc, v0 = random_ladder(rng, 7, 6, dtype)
+        ramp = jnp.ones((20,), dtype)
+        out_ref = ref.rc_multistep_ref(c, g, gc, vc, v0, ramp, 0.01)
+        out_pl = rc_multistep_pallas(c, g, gc, vc, v0, ramp, 0.01,
+                                     interpret=True)
+        np.testing.assert_allclose(np.array(out_ref), np.array(out_pl),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_block_partitioning(self, rng):
+        """Batch larger than one block must tile correctly."""
+        c, g, gc, vc, v0 = random_ladder(rng, 300, 6, np.float32)
+        ramp = jnp.ones((12,), jnp.float32)
+        out_ref = ref.rc_multistep_ref(c, g, gc, vc, v0, ramp, 0.02)
+        out_pl = rc_multistep_pallas(c, g, gc, vc, v0, ramp, 0.02,
+                                     b_blk=128, interpret=True)
+        np.testing.assert_allclose(np.array(out_ref), np.array(out_pl),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestTridiag:
+    @pytest.mark.parametrize("b,n", [(1, 3), (5, 7), (16, 32)])
+    def test_vs_dense_solve(self, rng, b, n):
+        d = rng.uniform(2, 4, (b, n))
+        dl = rng.uniform(-1, 0, (b, n)); dl[:, 0] = 0
+        du = rng.uniform(-1, 0, (b, n)); du[:, -1] = 0
+        rhs = rng.normal(size=(b, n))
+        x = np.array(ref.tridiag_solve_ref(*map(jnp.asarray,
+                                                (dl, d, du, rhs))))
+        for i in range(b):
+            a = np.diag(d[i]) + np.diag(dl[i, 1:], -1) + np.diag(du[i, :-1], 1)
+            np.testing.assert_allclose(a @ x[i], rhs[i], rtol=1e-4,
+                                       atol=1e-5)
+
+
+class TestStrapAttendKernel:
+    @pytest.mark.parametrize(
+        "b,p,page,hkv,d,hq,g",
+        [(2, 8, 16, 2, 64, 8, 2), (1, 4, 8, 1, 128, 4, 4),
+         (3, 6, 32, 3, 32, 6, 3), (2, 16, 8, 4, 64, 16, 4),
+         (1, 8, 128, 2, 128, 2, 2)])
+    def test_shapes(self, rng, b, p, page, hkv, d, hq, g):
+        s = p // g
+        q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, p, page, hkv, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, p, page, hkv, d)), jnp.float32)
+        ids = np.stack([rng.permutation(p // g)[:s] for _ in range(b)])
+        if s > 1:
+            ids[0, -1] = -1                       # masked strap
+        ids = jnp.asarray(ids, jnp.int32)
+        o_ref = ref.strap_attend_ref(q, k, v, ids, g)
+        o_pl = strap_attend_pallas(q, k, v, ids, g, interpret=True)
+        np.testing.assert_allclose(np.array(o_ref), np.array(o_pl),
+                                   rtol=3e-5, atol=3e-5)
+
+    def test_bf16(self, rng):
+        b, p, page, hkv, d, hq, g = 2, 4, 16, 2, 64, 4, 2
+        q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.bfloat16)
+        k = jnp.asarray(rng.normal(size=(b, p, page, hkv, d)), jnp.bfloat16)
+        v = jnp.asarray(rng.normal(size=(b, p, page, hkv, d)), jnp.bfloat16)
+        ids = jnp.asarray([[0, 1], [1, 0]], jnp.int32)
+        o_ref = ref.strap_attend_ref(q, k, v, ids, g)
+        o_pl = strap_attend_pallas(q, k, v, ids, g, interpret=True)
+        np.testing.assert_allclose(np.array(o_ref, np.float32),
+                                   np.array(o_pl, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+
+    def test_subset_equals_dense_subset(self, rng):
+        """Gated attention over straps S == dense attention over exactly
+        those tokens."""
+        b, p, page, hkv, d, hq, g = 1, 8, 4, 1, 16, 2, 2
+        q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, p, page, hkv, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, p, page, hkv, d)), jnp.float32)
+        ids = jnp.asarray([[1, 3]], jnp.int32)
+        o = np.array(ref.strap_attend_ref(q, k, v, ids, g))
+        # dense oracle over tokens of straps 1,3 (pages 2,3,6,7)
+        sel_pages = [2, 3, 6, 7]
+        kk = np.array(k)[:, sel_pages].reshape(b, -1, hkv, d)
+        vv = np.array(v)[:, sel_pages].reshape(b, -1, hkv, d)
+        scale = d ** -0.5
+        qq = np.array(q).reshape(b, hkv, hq // hkv, d)
+        logits = np.einsum("bhgd,bshd->bhgs", qq, kk) * scale
+        w = np.exp(logits - logits.max(-1, keepdims=True))
+        w = w / w.sum(-1, keepdims=True)
+        oo = np.einsum("bhgs,bshd->bhgd", w, vv).reshape(b, hq, d)
+        np.testing.assert_allclose(o, oo, rtol=1e-5, atol=1e-5)

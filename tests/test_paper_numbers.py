@@ -1,0 +1,119 @@
+"""The engine must reproduce every endpoint the paper reports.
+
+These are the validation anchors of the faithful reproduction (DESIGN.md
+§7.1).  Tolerances: 3% for analytic quantities, 2% for the transient tRC.
+"""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import calibration as cal
+from repro.core.calibration import AOS, D1B, SI
+from repro.core.density import (bit_density_gb_mm2, density_scaling_vs_d1b,
+                                layers_for_density, stack_height_um)
+from repro.core.energy import read_energy_fj, write_energy_fj
+from repro.core.netlist import effective_cbl_ff
+from repro.core.routing import bonding_geometry
+from repro.core.sense import sense_margin_mv
+from repro.core.transient import simulate_row_cycle
+
+L_SI = jnp.asarray([137])
+L_AOS = jnp.asarray([87])
+ONE = jnp.asarray([1])
+
+
+def rel(a, b):
+    return abs(a - b) / abs(b)
+
+
+class TestCBL:
+    def test_sel_strap_si(self):
+        assert rel(float(effective_cbl_ff(SI, "sel_strap", L_SI)[0]), 6.6) < 0.03
+
+    def test_d1b(self):
+        assert float(effective_cbl_ff(D1B, "direct", ONE)[0]) == pytest.approx(20.0)
+
+
+class TestSenseMargin:
+    def test_si_130mv(self):
+        assert rel(float(sense_margin_mv(SI, "sel_strap", L_SI)[0]), 130.0) < 0.03
+
+    def test_aos_189mv(self):
+        assert rel(float(sense_margin_mv(AOS, "sel_strap", L_AOS)[0]), 189.0) < 0.03
+
+    def test_d1b_54mv(self):
+        assert rel(float(sense_margin_mv(D1B, "direct", ONE)[0]), 54.0) < 0.03
+
+    def test_si_disturbed_70mv(self):
+        got = float(sense_margin_mv(SI, "sel_strap", L_SI, with_disturb=True)[0])
+        assert rel(got, 70.0) < 0.03
+
+
+class TestEnergy:
+    def test_write(self):
+        assert rel(float(write_energy_fj(SI, "sel_strap", L_SI)[0]), 6.26) < 0.03
+        assert rel(float(write_energy_fj(AOS, "sel_strap", L_AOS)[0]), 5.38) < 0.03
+
+    def test_read(self):
+        assert rel(float(read_energy_fj(SI, "sel_strap", L_SI)[0]), 1.57) < 0.03
+        assert rel(float(read_energy_fj(AOS, "sel_strap", L_AOS)[0]), 1.35) < 0.03
+
+    def test_60pct_reduction_vs_d1b(self):
+        wr = 1 - float(write_energy_fj(SI, "sel_strap", L_SI)[0]
+                       / write_energy_fj(D1B, "direct", ONE)[0])
+        rd = 1 - float(read_energy_fj(SI, "sel_strap", L_SI)[0]
+                       / read_energy_fj(D1B, "direct", ONE)[0])
+        assert 0.54 < wr < 0.66 and 0.54 < rd < 0.68   # "~60% reduction"
+
+
+class TestDensity:
+    def test_26_gb_mm2(self):
+        assert rel(float(bit_density_gb_mm2(SI, L_SI)[0]), 2.6) < 0.01
+        assert rel(float(bit_density_gb_mm2(AOS, L_AOS)[0]), 2.6) < 0.01
+
+    def test_layer_counts(self):
+        assert int(layers_for_density(SI, 2.6)[()]) == 137
+        assert int(layers_for_density(AOS, 2.6)[()]) == 87
+
+    def test_stack_heights(self):
+        assert rel(float(stack_height_um(SI, L_SI)[0]), 9.6) < 0.01
+        assert rel(float(stack_height_um(AOS, L_AOS)[0]), 6.9) < 0.01
+
+    def test_6x_over_d1b(self):
+        assert rel(float(density_scaling_vs_d1b(SI, L_SI)[0]), 6.0) < 0.02
+
+
+class TestBonding:
+    def test_hcb_pitches(self):
+        assert rel(float(bonding_geometry(SI, "sel_strap").hcb_pitch_um), 0.75) < 0.01
+        assert rel(float(bonding_geometry(AOS, "sel_strap").hcb_pitch_um), 0.62) < 0.01
+        assert rel(float(bonding_geometry(SI, "direct").hcb_pitch_um), 0.26) < 0.03
+        assert rel(float(bonding_geometry(AOS, "direct").hcb_pitch_um), 0.22) < 0.01
+
+    def test_blsa_areas(self):
+        assert rel(float(bonding_geometry(SI, "sel_strap").blsa_area_um2), 1.12) < 0.01
+        assert rel(float(bonding_geometry(AOS, "sel_strap").blsa_area_um2), 0.76) < 0.02
+
+    def test_manufacturability_window(self):
+        assert bool(bonding_geometry(SI, "sel_strap").manufacturable)
+        assert not bool(bonding_geometry(SI, "direct").manufacturable)
+        assert not bool(bonding_geometry(AOS, "core_mux").manufacturable)
+
+
+class TestTRC:
+    def test_si(self):
+        got = float(simulate_row_cycle(SI, "sel_strap", L_SI).trc_ns[0])
+        assert rel(got, 10.9) < 0.02
+
+    def test_aos(self):
+        got = float(simulate_row_cycle(AOS, "sel_strap", L_AOS).trc_ns[0])
+        assert rel(got, 10.5) < 0.02
+
+    def test_d1b(self):
+        got = float(simulate_row_cycle(D1B, "direct", ONE).trc_ns[0])
+        assert rel(got, 21.3) < 0.02
+
+    def test_2x_speedup(self):
+        si = float(simulate_row_cycle(SI, "sel_strap", L_SI).trc_ns[0])
+        d1b = float(simulate_row_cycle(D1B, "direct", ONE).trc_ns[0])
+        assert d1b / si > 1.9

@@ -1,0 +1,188 @@
+"""Perf-lever correctness: gated decode, EP MoE, activation constraints.
+
+Invariant: every optimization must be exact (or exactly characterized) —
+gated decode with ALL straps selected == dense decode; EP MoE == baseline
+MoE; constrain() is a no-op without a mesh.
+"""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.models import registry as M
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+class TestGatedDecode:
+    def _setup(self, top):
+        rng = np.random.default_rng(3)
+        cfg = get_arch("deepseek-67b-smoke")
+        cfgG = dataclasses.replace(cfg, strap_decode=True,
+                                   decode_strap_tokens=16,
+                                   decode_top_straps=top)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        B, T = 2, 48
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T + 1)),
+                           jnp.int32)
+        _, cache = M.prefill(cfg, params, {"tokens": toks[:, :T]})
+        pad = lambda x: jnp.pad(x, [(0, 0), (0, 0), (0, 16), (0, 0), (0, 0)])
+        S = T + 16
+        nst = S // 16
+        kp = pad(cache["k"])
+        ksum = kp.reshape(cfg.n_layers, B, nst, 16, cfg.n_kv_heads,
+                          cfg.head_dim_).astype(jnp.float32).sum(3)
+        cacheD = {k: pad(v) for k, v in cache.items()}
+        cacheG = dict(k=kp, v=pad(cache["v"]), ksum=ksum)
+        pos = jnp.full((B,), T, jnp.int32)
+        return cfg, cfgG, params, toks, cacheD, cacheG, pos, T
+
+    def test_all_straps_equals_exact(self):
+        cfg, cfgG, params, toks, cacheD, cacheG, pos, T = self._setup(top=64)
+        dl, _ = M.decode_step(cfg, params, cacheD, toks[:, T:T + 1], pos)
+        dg, _ = M.decode_step(cfgG, params, cacheG, toks[:, T:T + 1], pos)
+        np.testing.assert_allclose(np.array(dg), np.array(dl),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_gated_subset_runs_and_updates_cache(self):
+        cfg, cfgG, params, toks, cacheD, cacheG, pos, T = self._setup(top=2)
+        dg, newc = M.decode_step(cfgG, params, cacheG, toks[:, T:T + 1], pos)
+        assert np.isfinite(np.array(dg)).all()
+        # the new token's key must land in the cache at position T
+        assert not np.allclose(np.array(newc["k"][:, :, T]),
+                               np.array(cacheG["k"][:, :, T]))
+        # ksum of the newest strap changed
+        strap = T // 16
+        assert not np.allclose(np.array(newc["ksum"][:, :, strap]),
+                               np.array(cacheG["ksum"][:, :, strap]))
+
+    def test_cache_schema_has_ksum(self):
+        cfgG = dataclasses.replace(get_arch("deepseek-67b"),
+                                   strap_decode=True)
+        sch = M.cache_schema(cfgG, 128, 32768)
+        assert "ksum" in sch
+        assert sch["ksum"].shape[2] == 32768 // cfgG.decode_strap_tokens
+
+
+EP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np, jax, jax.numpy as jnp, dataclasses
+    from repro.launch.mesh import make_test_mesh
+    from repro.distributed import context as mesh_ctx
+    from repro.configs.registry import get_arch
+    from repro.models import registry as M
+    from repro.models.moe import moe_apply, moe_apply_ep
+
+    mesh = make_test_mesh((2, 2, 2), ("pod", "data", "model"))
+    mesh_ctx.set_mesh(mesh)
+    cfg = get_arch("phi3.5-moe-42b-a6.6b-smoke")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    lp = jax.tree.map(lambda x: x[0], params["layers"])
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(4, 32, cfg.d_model)) * 0.1, jnp.float32)
+    with mesh:
+        y0, _ = jax.jit(lambda lp, x: moe_apply(cfg, lp, x))(lp, x)
+        y1, _ = jax.jit(lambda lp, x: moe_apply_ep(cfg, lp, x))(lp, x)
+    err = float(np.max(np.abs(np.array(y0) - np.array(y1))))
+    # gated train step on the same mesh
+    cfg5 = dataclasses.replace(cfg, moe_ep=True, shard_acts=True)
+    from repro.train.step import make_train_step
+    step, opt = make_train_step(cfg5)
+    o = opt.init(params)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32)), jnp.int32)
+    with mesh:
+        _, _, m = jax.jit(step)(params, o, {"tokens": toks, "targets": toks})
+    print(json.dumps(dict(err=err, loss=float(m["loss"]))))
+""")
+
+
+def test_ep_moe_matches_baseline_on_mesh():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("JAX_PLATFORMS", None)
+    r = subprocess.run([sys.executable, "-c", EP_SCRIPT],
+                       capture_output=True, text=True, env=env, timeout=560)
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["err"] < 2e-4
+    assert np.isfinite(out["loss"])
+
+
+class TestConstrainNoOp:
+    def test_no_mesh_no_op(self):
+        from repro.models.common import constrain
+        cfg = dataclasses.replace(get_arch("mamba2-780m-smoke"),
+                                  shard_acts=True)
+        x = jnp.ones((4, 8, 16))
+        y = constrain(cfg, x, ("dp", None, "model"))
+        np.testing.assert_array_equal(np.array(x), np.array(y))
+
+    def test_shard_acts_model_still_correct(self):
+        """shard_acts=True must not change numerics on a single device."""
+        cfg = get_arch("mamba2-780m-smoke")
+        cfgS = dataclasses.replace(cfg, shard_acts=True)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        toks = jnp.asarray(np.random.default_rng(0).integers(
+            0, cfg.vocab_size, (2, 64)), jnp.int32)
+        y0, _ = M.forward_train(cfg, params, {"tokens": toks})
+        y1, _ = M.forward_train(cfgS, params, {"tokens": toks})
+        np.testing.assert_allclose(np.array(y0), np.array(y1), atol=1e-6)
+
+
+class TestSplitProjection:
+    """opt7: shard-aligned SSM projections == fused (exact re-partition)."""
+
+    def _split_params(self, cfg, params):
+        di = cfg.d_inner
+        gs = cfg.ssm_ngroups * cfg.ssm_state
+
+        def split_layer(lp):
+            w, cw, cb = lp["in_proj"], lp["conv_w"], lp["conv_b"]
+            out = {k: v for k, v in lp.items()
+                   if k not in ("in_proj", "conv_w", "conv_b")}
+            out["in_z"] = w[..., :, :di]
+            out["in_x"] = w[..., :, di:2 * di]
+            out["in_B"] = w[..., :, 2 * di:2 * di + gs]
+            out["in_C"] = w[..., :, 2 * di + gs:2 * di + 2 * gs]
+            out["in_dt"] = w[..., :, 2 * di + 2 * gs:]
+            out["conv_x_w"] = cw[..., :, :di]
+            out["conv_x_b"] = cb[..., :di]
+            out["conv_B_w"] = cw[..., :, di:di + gs]
+            out["conv_B_b"] = cb[..., di:di + gs]
+            out["conv_C_w"] = cw[..., :, di + gs:]
+            out["conv_C_b"] = cb[..., di + gs:]
+            return out
+
+        ps = dict(params)
+        ps["layers"] = split_layer(params["layers"])
+        return ps
+
+    def test_forward_and_decode_equivalence(self, rng):
+        cfg = get_arch("mamba2-780m-smoke")
+        cfgS = dataclasses.replace(cfg, ssm_split_proj=True)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        paramsS = self._split_params(cfg, params)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 64)),
+                           jnp.int32)
+        y0, _ = M.forward_train(cfg, params, {"tokens": toks})
+        y1, _ = M.forward_train(cfgS, paramsS, {"tokens": toks})
+        np.testing.assert_allclose(np.array(y0), np.array(y1),
+                                   rtol=1e-4, atol=1e-4)
+        _, c0 = M.prefill(cfg, params, {"tokens": toks[:, :32]})
+        _, c1 = M.prefill(cfgS, paramsS, {"tokens": toks[:, :32]})
+        pos = jnp.full((2,), 32, jnp.int32)
+        d0, _ = M.decode_step(cfg, params, c0, toks[:, 32:33], pos)
+        d1, _ = M.decode_step(cfgS, paramsS, c1, toks[:, 32:33], pos)
+        np.testing.assert_allclose(np.array(d0), np.array(d1),
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,136 @@
+"""Hypothesis property tests on system invariants."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.calibration import AOS, SI
+from repro.core.energy import read_energy_fj, write_energy_fj
+from repro.core.netlist import effective_cbl_ff
+from repro.core.sense import sense_margin_mv
+from repro.kernels import ref
+from repro.models.common import apply_rope
+from repro.models.moe import _capacity
+from repro.train.optimizer import _dq8, _q8
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(l1=st.integers(16, 300), l2=st.integers(16, 300),
+       tech=st.sampled_from([SI, AOS]))
+def test_margin_monotone_decreasing_in_layers(l1, l2, tech):
+    lo, hi = sorted((l1, l2))
+    m = sense_margin_mv(tech, "sel_strap", jnp.asarray([lo, hi]))
+    assert float(m[0]) >= float(m[1]) - 1e-6
+
+
+@settings(**SETTINGS)
+@given(layers=st.integers(16, 300), tech=st.sampled_from([SI, AOS]))
+def test_energy_increases_with_cbl(layers, tech):
+    L = jnp.asarray([layers, layers + 50])
+    ew = write_energy_fj(tech, "sel_strap", L)
+    er = read_energy_fj(tech, "sel_strap", L)
+    assert float(ew[1]) > float(ew[0])
+    assert float(er[1]) > float(er[0])
+    cbl = effective_cbl_ff(tech, "sel_strap", L)
+    assert float(cbl[1]) > float(cbl[0])
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 24), st.integers(1, 6), st.data())
+def test_thomas_solves_diag_dominant_systems(n, b, data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 31)))
+    d = rng.uniform(2.5, 5, (b, n))
+    dl = rng.uniform(-1, 0, (b, n)); dl[:, 0] = 0
+    du = rng.uniform(-1, 0, (b, n)); du[:, -1] = 0
+    rhs = rng.normal(size=(b, n))
+    x = np.array(ref.tridiag_solve_ref(*map(jnp.asarray, (dl, d, du, rhs))))
+    for i in range(b):
+        a = np.diag(d[i]) + np.diag(dl[i, 1:], -1) + np.diag(du[i, :-1], 1)
+        np.testing.assert_allclose(a @ x[i], rhs[i], rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31))
+def test_rc_step_is_contraction_without_sources(seed):
+    """With no clamps, node voltages stay within [min(v0), max(v0)]
+    (passive RC network maximum principle)."""
+    rng = np.random.default_rng(seed)
+    b, n, t = 3, 6, 40
+    c = jnp.asarray(rng.uniform(0.5, 5, (b, n)), jnp.float32)
+    g = jnp.asarray(rng.uniform(0.01, 0.5, (b, n - 1)), jnp.float32)
+    zero = jnp.zeros((b, n), jnp.float32)
+    v0 = jnp.asarray(rng.uniform(0, 1.1, (b, n)), jnp.float32)
+    tr = ref.rc_multistep_ref(c, g, zero, zero, v0, jnp.ones((t,)), 0.05)
+    assert float(tr.max()) <= float(v0.max()) + 1e-5
+    assert float(tr.min()) >= float(v0.min()) - 1e-5
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31))
+def test_rc_conserves_charge(seed):
+    """No clamps: total charge sum(C_i * v_i) is invariant."""
+    rng = np.random.default_rng(seed)
+    b, n, t = 2, 5, 60
+    c = jnp.asarray(rng.uniform(0.5, 5, (b, n)), jnp.float32)
+    g = jnp.asarray(rng.uniform(0.01, 0.5, (b, n - 1)), jnp.float32)
+    zero = jnp.zeros((b, n), jnp.float32)
+    v0 = jnp.asarray(rng.uniform(0, 1.1, (b, n)), jnp.float32)
+    tr = ref.rc_multistep_ref(c, g, zero, zero, v0, jnp.ones((t,)), 0.02)
+    q0 = float((c * v0).sum(-1).max())
+    qt = np.array((np.array(c)[None] * np.array(tr)).sum(-1))
+    np.testing.assert_allclose(qt, np.array((c * v0).sum(-1))[None].repeat(t, 0),
+                               rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 8), st.integers(1, 1024), st.integers(0, 2 ** 31))
+def test_q8_roundtrip_error_bound(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(rows, cols)).astype(np.float32) * rng.uniform(0.01, 10)
+    q, s = _q8(jnp.asarray(x))
+    back = np.array(_dq8(q, s))
+    step = np.abs(x).max(-1, keepdims=True) / 127.0
+    assert (np.abs(back - x) <= step * 0.5 + 1e-9).all()
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 64), st.integers(0, 2 ** 31))
+def test_rope_preserves_norm_and_relative_angles(pos, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(1, 4, 2, 32)).astype(np.float32))
+    pos_arr = jnp.full((1, 4), pos)
+    y = apply_rope(x, pos_arr, 1e4)
+    np.testing.assert_allclose(np.linalg.norm(np.array(y), axis=-1),
+                               np.linalg.norm(np.array(x), axis=-1),
+                               rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(64, 4096), st.integers(2, 64))
+def test_moe_capacity_bounds(tokens, experts):
+    class C:
+        top_k = 2
+        n_experts = experts
+        capacity_factor = 1.25
+    cap = _capacity(C, tokens)
+    assert cap >= C.top_k * 4
+    assert cap * experts >= tokens * C.top_k          # cf>=1: no global loss
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31))
+def test_softmax_attention_convexity(seed):
+    """Attention output lies in the convex hull of V rows (max principle)."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, 2, 8)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 2, 4, 1, 8)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 2, 4, 1, 8)).astype(np.float32))
+    ids = jnp.asarray([[0, 1]], jnp.int32)
+    o = np.array(ref.strap_attend_ref(q, k, v, ids, 1))
+    vmin = np.array(v).reshape(1, -1, 8).min(1)
+    vmax = np.array(v).reshape(1, -1, 8).max(1)
+    assert (o >= vmin[:, None, :] - 1e-4).all()
+    assert (o <= vmax[:, None, :] + 1e-4).all()

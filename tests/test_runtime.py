@@ -1,0 +1,180 @@
+"""Checkpointing, fault tolerance, stragglers, elastic replanning, data."""
+
+import math
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.ckpt.manager import CheckpointManager
+from repro.data.pipeline import (DataLoader, LoaderConfig, MemmapSource,
+                                 SyntheticSource)
+from repro.runtime.fault import (ElasticPlan, FailureInjector,
+                                 FaultTolerantRunner, HeartbeatMonitor,
+                                 StragglerPolicy, replan_mesh)
+
+
+class TestCheckpoint:
+    def tree(self, rng):
+        return dict(params=dict(w=jnp.asarray(rng.normal(size=(4, 8)),
+                                              jnp.float32),
+                                b=jnp.asarray(rng.normal(size=(8,)),
+                                              jnp.bfloat16)),
+                    count=jnp.asarray(7, jnp.int32))
+
+    def test_roundtrip(self, rng, tmp_path):
+        cm = CheckpointManager(tmp_path)
+        t = self.tree(rng)
+        cm.save(3, t)
+        got, step = cm.restore(like=t)
+        assert step == 3
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+    def test_async_and_gc(self, rng, tmp_path):
+        cm = CheckpointManager(tmp_path, keep=2)
+        t = self.tree(rng)
+        for s in (1, 2, 3, 4):
+            cm.save(s, t, blocking=False)
+            cm.wait()
+        assert cm.all_steps() == [3, 4]
+
+    def test_restores_latest(self, rng, tmp_path):
+        cm = CheckpointManager(tmp_path)
+        t = self.tree(rng)
+        cm.save(1, t)
+        t2 = jax.tree.map(lambda x: x + 1 if x.dtype != jnp.int32 else x, t)
+        cm.save(5, t2)
+        got, step = cm.restore(like=t)
+        assert step == 5
+        np.testing.assert_allclose(np.asarray(got["params"]["w"]),
+                                   np.asarray(t2["params"]["w"]))
+
+
+class TestFaultRunner:
+    def test_crash_restart_resumes_correctly(self, tmp_path):
+        saves = {}
+        state0 = {"x": 0}
+
+        def step_fn(state, step):
+            return {"x": state["x"] + 1}, dict(loss=1.0 / (step + 1))
+
+        def save_fn(step, state):
+            saves[step] = dict(state)
+
+        def restore_fn():
+            step = max(saves)
+            return dict(saves[step]), step
+
+        inj = FailureInjector({7: "crash", 13: "nan"})
+        saves[0] = dict(state0)
+        r = FaultTolerantRunner(step_fn, save_fn, restore_fn, inj,
+                                ckpt_every=5)
+        state, log = r.run(state0, 20)
+        assert r.restarts == 2
+        assert state["x"] == 20              # every step eventually executed
+        assert [m["step"] for m in log][-1] == 19
+
+    def test_nan_detection(self):
+        def step_fn(state, step):
+            return state, dict(loss=float("nan") if step == 3 else 0.5)
+        calls = {"restore": 0}
+        def restore_fn():
+            calls["restore"] += 1
+            return {}, 4                      # skip the poisoned step
+        r = FaultTolerantRunner(step_fn, lambda *a: None, restore_fn,
+                                ckpt_every=100)
+        r.run({}, 6)
+        assert calls["restore"] == 1
+
+
+class TestStraggler:
+    def test_drops_only_stragglers(self):
+        pol = StragglerPolicy(quorum_fraction=0.75, deadline_factor=2.0)
+        durations = {f"w{i}": 1.0 for i in range(15)}
+        durations["w15"] = 10.0              # straggler
+        admitted, rescale = pol.admit(durations)
+        assert "w15" not in admitted
+        assert len(admitted) == 15
+        assert abs(rescale - 16 / 15) < 1e-9
+
+    def test_no_stragglers_keeps_all(self):
+        pol = StragglerPolicy()
+        durations = {f"w{i}": 1.0 + 0.01 * i for i in range(16)}
+        admitted, rescale = pol.admit(durations)
+        assert len(admitted) == 16 and rescale == 1.0
+
+
+class TestElastic:
+    def test_replan_keeps_model_parallel(self):
+        p = replan_mesh(240, model_parallel=16)
+        assert p == ElasticPlan(data=15, model=16)
+
+    def test_replan_degrades_below_mp(self):
+        p = replan_mesh(12, model_parallel=16)
+        assert p.devices <= 12 and p.model == 8
+
+
+class TestHeartbeat:
+    def test_detection_by_timeout(self):
+        t = {"now": 0.0}
+        hb = HeartbeatMonitor(["a", "b"], timeout_s=5.0,
+                              clock=lambda: t["now"])
+        t["now"] = 3.0
+        hb.beat("a")
+        t["now"] = 7.0
+        assert hb.dead() == ["b"]
+        assert hb.alive() == ["a"]
+
+
+class TestData:
+    def test_deterministic_and_shifted(self):
+        src = SyntheticSource(1000, seed=3)
+        c = LoaderConfig(batch_size=2, seq_len=32, seed=3)
+        dl = DataLoader(src, c)
+        b1 = dl.batch_at(5)
+        b2 = dl.batch_at(5)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        np.testing.assert_array_equal(b1["tokens"][:, 1:],
+                                      b2["targets"][:, :-1])
+        dl.close()
+
+    def test_shards_disjoint(self):
+        src = SyntheticSource(1000, seed=0)
+        a = DataLoader(src, LoaderConfig(2, 16, shard_id=0, num_shards=2))
+        b = DataLoader(src, LoaderConfig(2, 16, shard_id=1, num_shards=2))
+        ba, bb = a.batch_at(0), b.batch_at(0)
+        assert not np.array_equal(ba["tokens"], bb["tokens"])
+        a.close(); b.close()
+
+    def test_memmap_source(self, tmp_path):
+        path = tmp_path / "toks.bin"
+        MemmapSource.write(path, np.arange(10_000) % 256)
+        src = MemmapSource(path)
+        s = src.sequence(3, 64)
+        assert s.shape == (65,)
+        assert (s >= 0).all()
+
+    def test_prefetch_thread(self):
+        src = SyntheticSource(100, seed=1)
+        dl = DataLoader(src, LoaderConfig(1, 8, prefetch=2))
+        batches = [next(dl) for _ in range(3)]
+        assert all(b["tokens"].shape == (1, 8) for b in batches)
+        dl.close()
+
+
+class TestLoopIntegration:
+    def test_train_improves_and_survives_crash(self, tmp_path):
+        from repro.configs.registry import get_arch
+        from repro.train.loop import TrainConfig, train
+        cfg = get_arch("qwen2-1.5b-smoke")
+        tc = TrainConfig(steps=25, batch_size=4, seq_len=64, ckpt_every=8,
+                         ckpt_dir=str(tmp_path), log_every=100,
+                         failure_schedule={12: "crash"})
+        out = train(cfg, tc, verbose=False)
+        assert out["restarts"] == 1
+        assert out["final_loss"] < out["first_loss"]

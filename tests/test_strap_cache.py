@@ -1,0 +1,115 @@
+"""StrapCache semantics: exact == dense, append == bulk, gating reduces
+traffic, selector keeps the newest strap."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.memory.strap_cache import StrapCacheConfig, StrapKVCache
+from repro.models import registry as M
+from repro.serving.engine import ServeEngine
+
+
+def dense_attention(q, k, v):
+    """(B,Hq,hd) x (B,S,Hkv,hd) oracle."""
+    b, hq, d = q.shape
+    hkv = k.shape[2]
+    grp = hq // hkv
+    qg = q.reshape(b, hkv, grp, d).astype(np.float32)
+    logits = np.einsum("bhgd,bshd->bhgs", qg, k.astype(np.float32))
+    logits *= d ** -0.5
+    w = np.exp(logits - logits.max(-1, keepdims=True))
+    w /= w.sum(-1, keepdims=True)
+    o = np.einsum("bhgs,bshd->bhgd", w, v.astype(np.float32))
+    return o.reshape(b, hq, d)
+
+
+class TestStrapKVCache:
+    def setup_method(self, _):
+        self.rng = np.random.default_rng(0)
+
+    def make(self, b=2, s=64, hkv=2, hd=16, page=8, g=2, top=0):
+        cfg = StrapCacheConfig(page_size=page, pages_per_strap=g,
+                               top_straps=top)
+        sc = StrapKVCache.create(cfg, b, s, hkv, hd, jnp.float32)
+        k = self.rng.normal(size=(b, s, hkv, hd)).astype(np.float32)
+        v = self.rng.normal(size=(b, s, hkv, hd)).astype(np.float32)
+        return sc, jnp.asarray(k), jnp.asarray(v)
+
+    def test_bulk_equals_append(self):
+        sc, k, v = self.make(s=32)
+        bulk = sc.bulk_load(k, v)
+        inc = sc
+        for t in range(32):
+            inc = inc.append(k[:, t], v[:, t])
+        np.testing.assert_allclose(np.array(bulk.k_pages),
+                                   np.array(inc.k_pages), atol=1e-6)
+        np.testing.assert_allclose(np.array(bulk.strap_key_sum),
+                                   np.array(inc.strap_key_sum), atol=1e-4)
+        np.testing.assert_array_equal(np.array(bulk.length),
+                                      np.array(inc.length))
+
+    def test_exact_attend_matches_dense(self):
+        sc, k, v = self.make(s=64)
+        sc = sc.bulk_load(k, v)
+        q = jnp.asarray(self.rng.normal(size=(2, 4, 16)).astype(np.float32))
+        out = sc.attend(q, backend="ref")
+        want = dense_attention(np.array(q), np.array(k), np.array(v))
+        np.testing.assert_allclose(np.array(out), want, rtol=2e-5, atol=2e-5)
+
+    def test_gated_reduces_traffic(self):
+        sc, k, v = self.make(s=256, page=8, g=2, top=4)
+        sc = sc.bulk_load(k, v)
+        gated, dense = sc.hbm_bytes_per_token()
+        assert gated < dense / 3            # 4 straps of 16 selected
+        q = jnp.asarray(self.rng.normal(size=(2, 4, 16)).astype(np.float32))
+        ids = sc.select_straps(q)
+        assert ids.shape == (2, 4)
+        assert (np.array(ids) >= 0).all()
+
+    def test_selector_always_keeps_newest(self):
+        sc, k, v = self.make(s=256, page=8, g=2, top=2)
+        sc = sc.bulk_load(k, v)
+        q = jnp.asarray(self.rng.normal(size=(2, 4, 16)).astype(np.float32))
+        ids = np.array(sc.select_straps(q))
+        newest = (256 // (8 * 2)) - 1
+        assert (ids == newest).any(axis=1).all()
+
+    def test_partial_fill_masks_invalid_straps(self):
+        sc, k, v = self.make(s=64)
+        sc = sc.bulk_load(k[:, :24], v[:, :24])   # 24 tokens = 1.5 straps
+        q = jnp.asarray(self.rng.normal(size=(2, 4, 16)).astype(np.float32))
+        ids = np.array(sc.select_straps(q))
+        valid = ids[ids >= 0]
+        assert valid.max() <= 1                  # straps 0 and 1 only
+
+
+class TestServeEngineStrap:
+    def test_exact_strap_equals_dense_engine(self):
+        cfg = get_arch("qwen2-1.5b-smoke")
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 32)),
+                              jnp.int32)
+        e1 = ServeEngine(cfg, params, max_tokens=48, cache_backend="dense")
+        o1 = e1.generate(prompts, 6)
+        e2 = ServeEngine(cfg, params, max_tokens=48, cache_backend="strap",
+                         strap_cfg=StrapCacheConfig(page_size=8,
+                                                    pages_per_strap=2))
+        o2 = e2.generate(prompts, 6)
+        np.testing.assert_array_equal(np.array(o1), np.array(o2))
+
+    def test_gated_strap_traffic_reduction_reported(self):
+        cfg = get_arch("qwen2-1.5b-smoke")
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 64)),
+                              jnp.int32)
+        eng = ServeEngine(cfg, params, max_tokens=80, cache_backend="strap",
+                          strap_cfg=StrapCacheConfig(page_size=8,
+                                                     pages_per_strap=2,
+                                                     top_straps=2))
+        eng.generate(prompts, 4)
+        assert eng.stats.traffic_reduction < 0.75

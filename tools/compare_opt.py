@@ -1,0 +1,41 @@
+"""Compare dry-run artifacts across opt levels: the §Perf iteration viewer.
+
+  PYTHONPATH=src python tools/compare_opt.py arctic-480b train_4k single
+"""
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.roofline.analyze import analyze_one  # noqa: E402
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def main():
+    arch, cell, mesh = sys.argv[1:4]
+    base = f"{arch}__{cell}__{mesh}"
+    rows = []
+    for f in sorted(RESULTS.glob(base + "*.json")):
+        d = json.loads(f.read_text())
+        if not d.get("ok"):
+            continue
+        r = analyze_one(d)
+        he = d.get("hlo_exact", {})
+        rows.append((d.get("opt_level", 0), r, he))
+    print(f"{'opt':>4s} {'comp(ms)':>10s} {'mem(ms)':>9s} {'coll(ms)':>10s} "
+          f"{'cross-pod B':>12s} {'dominant':>10s} {'useful':>7s} {'MFU':>6s}")
+    for lvl, r, he in sorted(rows):
+        print(f"{lvl:4d} {1e3 * r.t_compute:10.1f} {1e3 * r.t_memory:9.1f} "
+              f"{1e3 * r.t_collective:10.1f} {r.cross_pod_bytes:12.3e} "
+              f"{r.dominant:>10s} {r.useful_ratio:7.3f} {r.mfu_bound:6.3f}")
+        if he.get("collective_bytes_by_type"):
+            parts = ", ".join(f"{k}={v:.2e}" for k, v in
+                              sorted(he["collective_bytes_by_type"].items()))
+            print(f"     {parts}")
+
+
+if __name__ == "__main__":
+    main()
