@@ -1,5 +1,10 @@
 """Paper Fig. 8: full row-cycle transient waveforms (SPICE analogue) +
-solver throughput on a DSE-sized batch of design points."""
+solver throughput on a DSE-sized batch of design points.
+
+The waveform rows exercise the phased engine (``traces=True`` — the path
+that materializes the Fig. 8 (T, B, N) waveforms); the batch-throughput
+row uses the default fused trace-free engine the DSE sweeps run on.  See
+``bench_fused_row_cycle`` for the head-to-head comparison."""
 
 from __future__ import annotations
 
@@ -13,23 +18,24 @@ def main():
     from repro.core.calibration import AOS, D1B, SI
     from repro.core.transient import simulate_row_cycle
 
-    # waveform fidelity row (single design point each)
+    # waveform fidelity row (single design point each, full traces)
     for tech, scheme in ((SI, "sel_strap"), (AOS, "sel_strap"),
                          (D1B, "direct")):
         L = jnp.asarray([tech.layers_target])
-        dt, res = timeit(simulate_row_cycle, tech, scheme, L, repeats=2)
+        dt, res = timeit(simulate_row_cycle, tech, scheme, L,
+                         traces=True, repeats=2)
         emit(f"fig8_transient_{tech.name}", dt * 1e6,
              f"tRC={float(res.trc_ns[0]):.2f}ns;"
              f"sense={float(res.t_sense_ns[0]):.2f};"
              f"restore={float(res.t_restore_ns[0]):.2f};"
-             f"pre={float(res.t_precharge_ns[0]):.2f}")
+             f"pre={float(res.t_precharge_ns[0]):.2f};engine=phased")
 
-    # batched DSE throughput: 256 design points in one vmapped transient
+    # batched DSE throughput: 256 design points through the fused engine
     layers = jnp.asarray(np.linspace(32, 288, 256).astype(np.float32))
     dt, res = timeit(simulate_row_cycle, SI, "sel_strap", layers, repeats=2)
     per = dt / 256 * 1e6
     emit("fig8_transient_batch256", per,
-         f"designs_per_s={256 / dt:,.0f};phases=3;dt=0.02ns")
+         f"designs_per_s={256 / dt:,.0f};engine=fused;dt=0.02ns")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,48 @@
+"""Fused vs phased row-cycle engine on a DSE-sized design batch.
+
+The fused engine runs all three row-cycle phases in one kernel with
+in-kernel crossing detection (O(B) outputs, early exit when every design
+point is done); the phased reference materializes three (T, B, N) traces
+and scans them for crossings.  Emits both wall-clocks, the speedup, and
+the worst-case tRC disagreement in units of the integration step.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .common import emit, timeit
+
+# DSE scale: the sweeps this engine exists for span thousands of design
+# points (tech x scheme x layers); small batches under-utilize the
+# vectorized solver and are gated by per-step dispatch overhead.
+BATCH = 1024
+
+
+def main():
+    from repro.core.calibration import SI
+    from repro.core.transient import (DT_NS, simulate_row_cycle,
+                                      simulate_row_cycle_phased)
+
+    layers = jnp.asarray(np.linspace(32, 288, BATCH).astype(np.float32))
+    run_fused = lambda: jax.block_until_ready(
+        simulate_row_cycle(SI, "sel_strap", layers).trc_ns)
+    run_phased = lambda: jax.block_until_ready(
+        simulate_row_cycle_phased(SI, "sel_strap", layers).trc_ns)
+
+    dt_fused, trc_fused = timeit(run_fused, repeats=3)
+    dt_phased, trc_phased = timeit(run_phased, repeats=2)
+    err_dt = float(jnp.max(jnp.abs(trc_fused - trc_phased))) / DT_NS
+
+    emit("fused_row_cycle_b%d" % BATCH, dt_fused * 1e6,
+         f"designs_per_s={BATCH / dt_fused:,.0f};max_trc_err_dt={err_dt:.2f}")
+    emit("phased_row_cycle_b%d" % BATCH, dt_phased * 1e6,
+         f"designs_per_s={BATCH / dt_phased:,.0f}")
+    emit("fused_vs_phased_speedup", (dt_phased - dt_fused) * 1e6,
+         f"speedup={dt_phased / dt_fused:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

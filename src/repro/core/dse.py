@@ -22,7 +22,7 @@ from .energy import read_energy_fj, write_energy_fj
 from .netlist import effective_cbl_ff
 from .routing import SCHEMES, bonding_geometry
 from .sense import sense_margin_mv
-from .transient import simulate_row_cycle
+from .transient import simulate_row_cycle, simulate_row_cycle_many
 
 
 @dataclass(frozen=True)
@@ -44,8 +44,13 @@ class DesignPoint:
 
 
 def evaluate_grid(tech: TechCal, scheme: str, layers: np.ndarray,
-                  with_transient: bool = True) -> list[DesignPoint]:
-    """Evaluate a vector of layer counts for one (tech, scheme)."""
+                  with_transient: bool = True,
+                  trc: np.ndarray | None = None) -> list[DesignPoint]:
+    """Evaluate a vector of layer counts for one (tech, scheme).
+
+    `trc` may carry precomputed row-cycle times (e.g. from the batched
+    fused sweep in `full_sweep`); otherwise the transient engine runs here.
+    """
     arr = jnp.asarray(layers)
     dens = np.asarray(bit_density_gb_mm2(tech, arr))
     height = np.asarray(stack_height_um(tech, arr))
@@ -58,7 +63,9 @@ def evaluate_grid(tech: TechCal, scheme: str, layers: np.ndarray,
     pitch = float(geom.hcb_pitch_um)
     blsa = float(geom.blsa_area_um2)
     manufacturable = bool(geom.manufacturable) or tech.name == "d1b"
-    if with_transient:
+    if trc is not None:
+        trc = np.asarray(trc)
+    elif with_transient:
         trc = np.asarray(simulate_row_cycle(tech, scheme, arr).trc_ns)
     else:
         trc = np.full(len(layers), np.nan)
@@ -78,18 +85,38 @@ def evaluate_grid(tech: TechCal, scheme: str, layers: np.ndarray,
     return pts
 
 
-def full_sweep(layer_grid: np.ndarray | None = None,
-               with_transient: bool = True) -> list[DesignPoint]:
-    if layer_grid is None:
-        layer_grid = np.array([32, 48, 64, 87, 100, 120, 137, 160, 200])
-    out: list[DesignPoint] = []
+def sweep_combos(layer_grid: np.ndarray) -> list[tuple[TechCal, str, np.ndarray]]:
+    """The (tech, scheme, layer-grid) combos of the full design space."""
+    combos: list[tuple[TechCal, str, np.ndarray]] = []
     for tname, tech in TECHS.items():
         if tname == "d1b":
-            out.extend(evaluate_grid(tech, "direct", np.array([1]),
-                                     with_transient))
+            combos.append((tech, "direct", np.array([1])))
             continue
         for scheme in SCHEMES:
-            out.extend(evaluate_grid(tech, scheme, layer_grid, with_transient))
+            combos.append((tech, scheme, layer_grid))
+    return combos
+
+
+def full_sweep(layer_grid: np.ndarray | None = None,
+               with_transient: bool = True) -> list[DesignPoint]:
+    """Sweep the whole (tech x scheme x layers) design space.
+
+    The transient row-cycle times for ALL combos are produced by one
+    batched, chunked pass through the fused engine
+    (`simulate_row_cycle_many`) — not by per-combo transient calls.
+    """
+    if layer_grid is None:
+        layer_grid = np.array([32, 48, 64, 87, 100, 120, 137, 160, 200])
+    combos = sweep_combos(layer_grid)
+    if with_transient:
+        trcs = [np.asarray(r.trc_ns)
+                for r in simulate_row_cycle_many(combos)]
+    else:
+        trcs = [None] * len(combos)
+    out: list[DesignPoint] = []
+    for (tech, scheme, grid), trc in zip(combos, trcs):
+        out.extend(evaluate_grid(tech, scheme, grid,
+                                 with_transient=with_transient, trc=trc))
     return out
 
 

@@ -14,8 +14,18 @@ exactly like a DRAM row cycle:
 
 tRC = t_overhead + t(ACT+RESTORE) + t(PRE).
 
-Everything is vmap-able over a batch of design points; the inner loop is
-`repro.kernels.ops.rc_multistep` (Pallas on TPU, jnp oracle on CPU).
+Two execution engines, same physics:
+
+  fused (default)      — one `repro.kernels.ops.row_cycle_fused` call runs
+          all three phases with in-kernel crossing detection and returns
+          O(B) event times/voltages; no (T, B, N) trace ever exists.  This
+          is what the DSE sweeps thousands of design points through, and
+          `simulate_row_cycle_many` batches arbitrary (tech, scheme,
+          layers) combos through ONE fused evaluation (VMEM-bounded by
+          batch chunking).
+  phased (traces=True) — three `rc_multistep` calls that materialize the
+          per-phase waveforms for Fig. 8 plotting; also the reference the
+          fused engine is regression-tested against (within one dt).
 """
 
 from __future__ import annotations
@@ -26,7 +36,7 @@ import jax.numpy as jnp
 
 from . import calibration as cal
 from .calibration import TechCal
-from .netlist import Ladder, N_BL_SEGMENTS, build_bl_ladder
+from .netlist import Ladder, build_bl_ladder
 from ..kernels import ops
 from .units import tau_ns
 
@@ -34,6 +44,13 @@ DT_NS = 0.02
 T_ACT_NS = 16.0
 T_RESTORE_NS = 20.0
 T_PRE_NS = 10.0
+
+N_ACT_STEPS = int(T_ACT_NS / DT_NS)
+N_RESTORE_STEPS = int(T_RESTORE_NS / DT_NS)
+N_PRE_STEPS = int(T_PRE_NS / DT_NS)
+
+# default fused-engine chunk: bounds device memory for arbitrary DSE grids
+DEFAULT_B_CHUNK = 2048
 
 
 @dataclass(frozen=True)
@@ -43,7 +60,7 @@ class RowCycleResult:
     t_precharge_ns: jnp.ndarray   # precharge duration (tRP analogue)
     trc_ns: jnp.ndarray           # total row cycle
     dv_sense_v: jnp.ndarray       # developed signal at SA enable
-    traces: dict                  # phase -> (T, B, N) waveforms
+    traces: dict                  # phase -> (T, B, N) waveforms (phased only)
 
 
 def _first_crossing_ns(trace_ok: jnp.ndarray, dt: float, t_max: float) -> jnp.ndarray:
@@ -60,13 +77,172 @@ def wl_ramp(tech: TechCal, t_ns: jnp.ndarray, rising: bool = True) -> jnp.ndarra
     return x if rising else 1.0 - x
 
 
+def _regen_and_totals(tech_sa_tau, tech_overhead, t_dev, dv_sense,
+                      t_res_dur, t_pre):
+    """BLSA latch regeneration + phase roll-up (shared by both engines)."""
+    vdd = cal.VDD_ARRAY
+    t_regen = tech_sa_tau * jnp.log(
+        jnp.maximum((vdd / 2.0) / jnp.maximum(dv_sense, 1e-4), 1.001))
+    t_sense = t_dev + t_regen
+    t_restore = t_sense + t_res_dur
+    trc = tech_overhead + t_restore + t_pre
+    return t_sense, t_restore, trc
+
+
+def _fused_operands(ladder: Ladder, tech: TechCal, store_v: float):
+    """Assemble the fused-engine operand arrays for one (tech, scheme)."""
+    b, n = ladder.c.shape
+    vdd, vpre = cal.VDD_ARRAY, cal.VBL_PRE
+    c = ladder.c.astype(jnp.float32)
+    g = ladder.g_branch.astype(jnp.float32)
+    zeros = jnp.zeros((b, n), jnp.float32)
+    gc_res = zeros.at[:, 0].set(1.0 / tech.r_sa_drive_kohm)
+    gc_pre = zeros.at[:, : n - 1].set(1.0 / tech.r_pre_kohm)
+    v0 = jnp.full((b, n), vpre, jnp.float32).at[:, n - 1].set(store_v)
+
+    cbl = c[:, : n - 1].sum(-1)
+    cs = c[:, n - 1]
+    dv_inf = (store_v - vpre) * cs / (cs + cbl)
+    tau_wl = tau_ns(tech.r_wl_kohm, tech.c_wl_ff)
+    params = jnp.stack([
+        jnp.full((b,), tau_wl, jnp.float32),
+        0.9 * dv_inf.astype(jnp.float32),
+        jnp.full((b,), vdd, jnp.float32),
+        jnp.full((b,), vpre, jnp.float32),
+        jnp.ones((b,), jnp.float32),
+    ], axis=1)
+    return c, g, gc_res, gc_pre, v0, params
+
+
+# Fused-engine batches are padded (with inactive design points) up to a
+# multiple of this, so arbitrary small batches share one compiled shape —
+# the while-loop engine's jit trace is the dominant one-off cost.
+B_ALIGN = 64
+
+
+def _pad_operands(operands, pad: int):
+    """Append `pad` inactive design points (params[:, ACTIVE] = 0)."""
+    if not pad:
+        return list(operands)
+    padf = lambda x, v: jnp.pad(x, ((0, pad), (0, 0)), constant_values=v)
+    padded = [padf(x, 1.0) for x in operands[:5]]
+    padded.append(padf(operands[5], 0.0))
+    return padded
+
+
+def _row_cycle_fused_chunked(operands, backend: str, b_chunk: int):
+    """Feed (c, g, gc_res, gc_pre, v0, params) through the fused engine in
+    fixed-size chunks so arbitrary sweep grids fit VMEM/HBM.
+
+    Every call is padded with inactive design points to a B_ALIGN (or
+    b_chunk) multiple, so calls share compiled shapes.
+    """
+    c = operands[0]
+    b = c.shape[0]
+    if b <= b_chunk:
+        target = min(-(-b // B_ALIGN) * B_ALIGN, max(b_chunk, B_ALIGN))
+        padded = _pad_operands(operands, target - b)
+        evt, v_end = ops.row_cycle_fused(*padded, DT_NS, N_ACT_STEPS,
+                                         N_RESTORE_STEPS, N_PRE_STEPS,
+                                         backend=backend)
+        return evt[:b], v_end[:b]
+    pad = (-b) % b_chunk
+    ops_padded = _pad_operands(operands, pad)
+    evts, vends = [], []
+    for lo in range(0, b + pad, b_chunk):
+        chunk = [x[lo:lo + b_chunk] for x in ops_padded]
+        evt, v_end = ops.row_cycle_fused(*chunk, DT_NS, N_ACT_STEPS,
+                                         N_RESTORE_STEPS, N_PRE_STEPS,
+                                         backend=backend)
+        evts.append(evt)
+        vends.append(v_end)
+    return (jnp.concatenate(evts, axis=0)[:b],
+            jnp.concatenate(vends, axis=0)[:b])
+
+
 def simulate_row_cycle(tech: TechCal, scheme: str, layers,
                        store_v: float | None = None,
-                       backend: str = "ref") -> RowCycleResult:
-    """Simulate ACT/RESTORE/PRE on the ladder; batched over `layers`."""
+                       backend: str = "auto",
+                       traces: bool = False,
+                       b_chunk: int = DEFAULT_B_CHUNK) -> RowCycleResult:
+    """Simulate ACT/RESTORE/PRE on the ladder; batched over `layers`.
+
+    Default path is the fused trace-free engine; pass ``traces=True`` to run
+    the phased three-call engine and get the full (T, B, N) waveforms
+    (Fig. 8 plotting).
+    """
+    if traces:
+        return simulate_row_cycle_phased(tech, scheme, layers,
+                                         store_v=store_v, backend=backend)
+    ladder = build_bl_ladder(tech, scheme, layers)
+    vpre = cal.VBL_PRE
+    if store_v is None:
+        store_v = tech.writeback_eff * cal.VDD_ARRAY
+    operands = _fused_operands(ladder, tech, store_v)
+    evt, _ = _row_cycle_fused_chunked(operands, backend, b_chunk)
+    t_dev, dv_sense, t_res_dur, t_pre = (evt[:, 0], evt[:, 1],
+                                         evt[:, 2], evt[:, 3])
+    t_sense, t_restore, trc = _regen_and_totals(
+        tech.sa_tau_ns, tech.t_overhead_ns, t_dev, dv_sense, t_res_dur, t_pre)
+    return RowCycleResult(
+        t_sense_ns=t_sense, t_restore_ns=t_restore, t_precharge_ns=t_pre,
+        trc_ns=trc, dv_sense_v=dv_sense, traces={})
+
+
+def simulate_row_cycle_many(entries, backend: str = "auto",
+                            b_chunk: int = DEFAULT_B_CHUNK) -> list[RowCycleResult]:
+    """Fused row-cycle over many (tech, scheme, layers) combos at once.
+
+    `entries` is a sequence of (TechCal, scheme, layers-array) tuples.  All
+    design points are flattened into ONE batch through the fused engine
+    (chunked to `b_chunk`), instead of one transient call per combo — this
+    is what makes `dse.full_sweep(with_transient=True)` a single vectorized
+    evaluation.  Returns one trace-free RowCycleResult per entry.
+    """
+    per_entry = []
+    cs, gs, gcrs, gcps, v0s, pars = [], [], [], [], [], []
+    sa_taus, overheads = [], []
+    for tech, scheme, layers in entries:
+        ladder = build_bl_ladder(tech, scheme, layers)
+        store_v = tech.writeback_eff * cal.VDD_ARRAY
+        c, g, gc_res, gc_pre, v0, params = _fused_operands(
+            ladder, tech, store_v)
+        b = c.shape[0]
+        per_entry.append(b)
+        cs.append(c); gs.append(g); gcrs.append(gc_res); gcps.append(gc_pre)
+        v0s.append(v0); pars.append(params)
+        sa_taus.append(jnp.full((b,), tech.sa_tau_ns, jnp.float32))
+        overheads.append(jnp.full((b,), tech.t_overhead_ns, jnp.float32))
+
+    operands = tuple(jnp.concatenate(xs, axis=0)
+                     for xs in (cs, gs, gcrs, gcps, v0s, pars))
+    evt, _ = _row_cycle_fused_chunked(operands, backend, b_chunk)
+    sa_tau = jnp.concatenate(sa_taus)
+    overhead = jnp.concatenate(overheads)
+    t_sense, t_restore, trc = _regen_and_totals(
+        sa_tau, overhead, evt[:, 0], evt[:, 1], evt[:, 2], evt[:, 3])
+
+    results, lo = [], 0
+    for b in per_entry:
+        sl = slice(lo, lo + b)
+        results.append(RowCycleResult(
+            t_sense_ns=t_sense[sl], t_restore_ns=t_restore[sl],
+            t_precharge_ns=evt[sl, 3], trc_ns=trc[sl],
+            dv_sense_v=evt[sl, 1], traces={}))
+        lo += b
+    return results
+
+
+def simulate_row_cycle_phased(tech: TechCal, scheme: str, layers,
+                              store_v: float | None = None,
+                              backend: str = "ref") -> RowCycleResult:
+    """Phased three-call engine: materializes full (T, B, N) waveforms.
+
+    This is the Fig. 8 plotting path and the reference the fused engine is
+    validated against (event times within one dt).
+    """
     ladder = build_bl_ladder(tech, scheme, layers)
     b, n = ladder.c.shape
-    k = N_BL_SEGMENTS
     vdd, vpre = cal.VDD_ARRAY, cal.VBL_PRE
     if store_v is None:
         store_v = tech.writeback_eff * vdd
@@ -76,7 +252,7 @@ def simulate_row_cycle(tech: TechCal, scheme: str, layers,
     zero_clamp = jnp.zeros((b, n), jnp.float32)
 
     # ---------------- ACT: WL up, charge share --------------------------
-    n_act = int(T_ACT_NS / DT_NS)
+    n_act = N_ACT_STEPS
     t_grid = (jnp.arange(n_act) + 1) * DT_NS
     ramp_up = wl_ramp(tech, t_grid).astype(jnp.float32)
     v0 = jnp.full((b, n), vpre, jnp.float32).at[:, n - 1].set(store_v)
@@ -93,13 +269,8 @@ def simulate_row_cycle(tech: TechCal, scheme: str, layers,
     idx_dev = jnp.clip((t_dev / DT_NS).astype(jnp.int32) - 1, 0, n_act - 1)
     dv_sense = trace_act[idx_dev, jnp.arange(b), 0] - vpre
 
-    # latch regeneration from dv to VDD/2 rail excursion
-    t_regen = tech.sa_tau_ns * jnp.log(
-        jnp.maximum((vdd / 2.0) / jnp.maximum(dv_sense, 1e-4), 1.001))
-    t_sense = t_dev + t_regen
-
     # ---------------- RESTORE: SA drives the rail -----------------------
-    n_res = int(T_RESTORE_NS / DT_NS)
+    n_res = N_RESTORE_STEPS
     # state at SA enable: take the trace at t_dev (per design point)
     v_at_dev = trace_act[idx_dev, jnp.arange(b), :]
     g_clamp_res = zero_clamp.at[:, 0].set(1.0 / tech.r_sa_drive_kohm)
@@ -109,10 +280,9 @@ def simulate_row_cycle(tech: TechCal, scheme: str, layers,
                                  ramp_on, DT_NS, backend=backend)
     restored = trace_res[:, :, n - 1] >= 0.95 * vdd
     t_res_dur = _first_crossing_ns(restored, DT_NS, T_RESTORE_NS)
-    t_restore = t_sense + t_res_dur
 
     # ---------------- PRE: WL down, equalize ----------------------------
-    n_pre = int(T_PRE_NS / DT_NS)
+    n_pre = N_PRE_STEPS
     t_grid_pre = (jnp.arange(n_pre) + 1) * DT_NS
     ramp_down = wl_ramp(tech, t_grid_pre, rising=False).astype(jnp.float32)
     idx_res = jnp.clip((t_res_dur / DT_NS).astype(jnp.int32) - 1, 0, n_res - 1)
@@ -124,7 +294,8 @@ def simulate_row_cycle(tech: TechCal, scheme: str, layers,
     equalized = jnp.max(jnp.abs(trace_pre[:, :, :n - 1] - vpre), axis=-1) <= 5e-3
     t_pre = _first_crossing_ns(equalized, DT_NS, T_PRE_NS)
 
-    trc = tech.t_overhead_ns + t_restore + t_pre
+    t_sense, t_restore, trc = _regen_and_totals(
+        tech.sa_tau_ns, tech.t_overhead_ns, t_dev, dv_sense, t_res_dur, t_pre)
     return RowCycleResult(
         t_sense_ns=t_sense, t_restore_ns=t_restore, t_precharge_ns=t_pre,
         trc_ns=trc, dv_sense_v=dv_sense,

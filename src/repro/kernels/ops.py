@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .rc_transient import rc_multistep_pallas
+from .row_cycle import row_cycle_fused_pallas
 from .strap_gather import strap_attend_pallas
 
 
@@ -32,6 +33,25 @@ def rc_multistep(c, g_branch, g_clamp, v_clamp, v0, ramp, dt,
         return rc_multistep_pallas(c, g_branch, g_clamp, v_clamp, v0, ramp,
                                    dt, interpret=not _on_tpu())
     return ref.rc_multistep_ref(c, g_branch, g_clamp, v_clamp, v0, ramp, dt)
+
+
+@functools.partial(jax.jit, static_argnames=("dt", "n_act", "n_res",
+                                             "n_pre", "backend"))
+def row_cycle_fused(c, g_branch, gc_res, gc_pre, v0, params, dt,
+                    n_act, n_res, n_pre, backend: str = "auto"):
+    """Fused ACT/RESTORE/PRE row-cycle engine -> (events (B,4), v_end (B,N)).
+
+    Trace-free: O(B) outputs regardless of the number of time steps.  See
+    `ref.row_cycle_fused_ref` for the params layout and event semantics.
+    """
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "ref"
+    if backend == "pallas":
+        return row_cycle_fused_pallas(c, g_branch, gc_res, gc_pre, v0,
+                                      params, dt, n_act, n_res, n_pre,
+                                      interpret=not _on_tpu())
+    return ref.row_cycle_fused_ref(c, g_branch, gc_res, gc_pre, v0, params,
+                                   dt, n_act, n_res, n_pre)
 
 
 @functools.partial(jax.jit, static_argnames=("pages_per_strap", "scale", "backend"))

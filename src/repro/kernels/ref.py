@@ -99,6 +99,138 @@ def rc_multistep_ref(c: jnp.ndarray, g_branch: jnp.ndarray,
 
 
 # --------------------------------------------------------------------------
+# Fused ACT/RESTORE/PRE row-cycle engine (event-driven, trace-free)
+# --------------------------------------------------------------------------
+
+# params / events column layouts (shared with kernels.row_cycle)
+_PAR_TAU_WL, _PAR_THR_REL, _PAR_VDD, _PAR_VPRE, _PAR_ACTIVE = range(5)
+ROW_CYCLE_N_PARAMS = 5
+ROW_CYCLE_N_EVENTS = 4
+_RESTORE_FRAC = 0.95
+_EQUALIZE_TOL_V = 5e-3
+
+
+def _thomas_small(dl, d, du, rhs):
+    """Thomas solve unrolled over the last (static, small) axis."""
+    n = d.shape[-1]
+    cp = [None] * n
+    dp = [None] * n
+    cp[0] = du[..., 0] / d[..., 0]
+    dp[0] = rhs[..., 0] / d[..., 0]
+    for i in range(1, n):
+        denom = d[..., i] - dl[..., i] * cp[i - 1]
+        cp[i] = du[..., i] / denom
+        dp[i] = (rhs[..., i] - dl[..., i] * dp[i - 1]) / denom
+    x = [None] * n
+    x[n - 1] = dp[n - 1]
+    for i in range(n - 2, -1, -1):
+        x[i] = dp[i] - cp[i] * x[i + 1]
+    return jnp.stack(x, axis=-1)
+
+
+def row_cycle_fused_ref(c: jnp.ndarray, g_branch: jnp.ndarray,
+                        gc_res: jnp.ndarray, gc_pre: jnp.ndarray,
+                        v0: jnp.ndarray, params: jnp.ndarray,
+                        dt: float, n_act: int, n_res: int, n_pre: int):
+    """Oracle for the fused row-cycle engine: one pass over ACT/RESTORE/PRE.
+
+    Each design point runs its own phase state machine
+    (0=ACT, 1=RESTORE, 2=PRE, 3=DONE):
+
+      ACT    : access branch scaled by the rising WL ramp 1 - e^{-t/tau};
+               advances when v[0] - vpre >= thr_rel or after n_act steps.
+      RESTORE: access branch fully on, clamp (gc_res -> vdd);
+               advances when v[N-1] >= 0.95 * vdd or after n_res steps.
+      PRE    : falling WL ramp e^{-t/tau}, clamp (gc_pre -> vpre);
+               done when max |v[:N-1] - vpre| <= 5 mV or after n_pre steps.
+
+    Event times are first-crossing times (idx+1)*dt measured from the phase
+    start, or the full phase window on timeout — identical semantics to the
+    phased `core.transient` reference, which this oracle (and the Pallas
+    kernel validated against it) reproduces to within one dt.
+
+    c, gc_res, gc_pre, v0 : (B, N);  g_branch : (B, N-1);  params : (B, 5)
+    with columns [tau_wl_ns, thr_rel_v, vdd, vpre, active].
+
+    Returns (events, v_end): (B, 4) [t_dev, dv_sense, t_res_dur, t_pre]
+    and (B, N) final node voltages.
+    """
+    b, n = c.shape
+    cdt = c / dt * 1e-3  # fF/ns = uS; G in 1/kOhm = mS -> 1e-3 factor
+    tau = jnp.maximum(params[:, _PAR_TAU_WL], 1e-3)
+    thr_rel = params[:, _PAR_THR_REL]
+    vdd = params[:, _PAR_VDD]
+    vpre = params[:, _PAR_VPRE]
+    active = params[:, _PAR_ACTIVE] > 0.5
+    t_total = n_act + n_res + n_pre
+    caps = jnp.asarray([n_act, n_res, n_pre], jnp.int32)
+
+    def cond(state):
+        t, phase, _, _, _ = state
+        return jnp.logical_and(t < t_total, jnp.any(phase < 3))
+
+    def body(state):
+        t, phase, tin, v, evt = state
+        in_act = phase == 0
+        in_res = phase == 1
+        in_pre = phase == 2
+        done = phase >= 3
+
+        t_ns = (tin.astype(jnp.float32) + 1.0) * dt
+        e = jnp.exp(-t_ns / tau)
+        s = jnp.where(in_act, 1.0 - e,
+                      jnp.where(in_res, 1.0, jnp.where(in_pre, e, 0.0)))
+        gc = jnp.where(in_res[:, None], gc_res,
+                       jnp.where(in_pre[:, None], gc_pre, 0.0))
+        gcv = jnp.where(in_res[:, None], gc_res * vdd[:, None],
+                        jnp.where(in_pre[:, None],
+                                  gc_pre * vpre[:, None], 0.0))
+
+        g = jnp.concatenate(
+            [g_branch[:, : n - 2], g_branch[:, n - 2:] * s[:, None]], axis=1)
+        zeros = jnp.zeros_like(c[:, :1])
+        g_lo = jnp.concatenate([zeros, g], axis=1)
+        g_hi = jnp.concatenate([g, zeros], axis=1)
+        d = cdt + g_lo + g_hi + gc
+        dl = jnp.concatenate([zeros, -g], axis=1)
+        du = jnp.concatenate([-g, zeros], axis=1)
+        v_sol = _thomas_small(dl, d, du, cdt * v + gcv)
+        v_next = jnp.where(done[:, None], v, v_sol)
+
+        cross = jnp.stack([
+            v_next[:, 0] - vpre >= thr_rel,
+            v_next[:, n - 1] >= _RESTORE_FRAC * vdd,
+            jnp.max(jnp.abs(v_next[:, : n - 1] - vpre[:, None]),
+                    axis=-1) <= _EQUALIZE_TOL_V,
+        ])
+        tin1 = tin + 1
+        phase_c = jnp.clip(phase, 0, 2)
+        crossed = jnp.take_along_axis(cross, phase_c[None, :], axis=0)[0]
+        cap = caps[phase_c]
+        advance = jnp.logical_and(~done,
+                                  jnp.logical_or(crossed, tin1 >= cap))
+        t_evt = jnp.where(crossed, tin1.astype(jnp.float32) * dt,
+                          cap.astype(jnp.float32) * dt)
+
+        rec = lambda ph: jnp.logical_and(advance, phase == ph)
+        evt = evt.at[:, 0].set(jnp.where(rec(0), t_evt, evt[:, 0]))
+        evt = evt.at[:, 1].set(
+            jnp.where(rec(0), v_next[:, 0] - vpre, evt[:, 1]))
+        evt = evt.at[:, 2].set(jnp.where(rec(1), t_evt, evt[:, 2]))
+        evt = evt.at[:, 3].set(jnp.where(rec(2), t_evt, evt[:, 3]))
+
+        phase = jnp.where(advance, phase + 1, phase)
+        tin = jnp.where(advance, 0, jnp.where(done, tin, tin1))
+        return t + 1, phase, tin, v_next, evt
+
+    state = (jnp.int32(0), jnp.where(active, 0, 3).astype(jnp.int32),
+             jnp.zeros((b,), jnp.int32), v0.astype(jnp.float32),
+             jnp.zeros((b, ROW_CYCLE_N_EVENTS), jnp.float32))
+    _, _, _, v_fin, evt_fin = jax.lax.while_loop(cond, body, state)
+    return evt_fin, v_fin
+
+
+# --------------------------------------------------------------------------
 # Selector+strap gated KV gather + flash-decode attention
 # --------------------------------------------------------------------------
 

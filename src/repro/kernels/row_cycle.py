@@ -1,0 +1,199 @@
+"""Pallas TPU kernel: fused ACT/RESTORE/PRE row-cycle transient engine.
+
+The phased engine (`rc_transient.rc_multistep_pallas` called three times from
+`core.transient`) materializes a full (T, B, N) waveform per phase in HBM and
+then scans it on the host side for the threshold crossings (90% signal
+development, 95% restore, 5 mV equalization).  For the DSE — thousands of
+(tech x scheme x layers) design points — those traces are pure waste: the
+sweep only consumes O(B) event times and end-state voltages.
+
+This kernel runs the *whole* row cycle in one `pallas_call`:
+
+  - each design point carries its own phase state machine
+    (0=ACT, 1=RESTORE, 2=PRE, 3=DONE) and a step-in-phase counter, so
+    points cross thresholds and switch phases independently;
+  - the WL ramp is evaluated analytically from the per-point WL tau
+    (no (T,) ramp table, no gather);
+  - crossings are detected in-VMEM right after each implicit-Euler step;
+  - a `while_loop` exits as soon as every point in the block is DONE,
+    so the typical step count is the sum of the *actual* phase durations,
+    not the sum of the worst-case phase windows;
+  - HBM traffic is one read of the netlist and one write of the O(B)
+    events — independent of the number of time steps.
+
+Phase semantics replicate `core.transient.simulate_row_cycle` (the phased
+reference) step-for-step, so event times agree to within one dt.
+
+Grid:      (ceil(B / B_BLK),)  — batch is the only blocked axis.
+Outputs:   events (B, 4) = [t_dev_ns, dv_sense_v, t_restore_dur_ns,
+           t_pre_ns] and v_end (B, N).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import _thomas_small
+
+DEFAULT_B_BLK = 128
+
+# params (B, 5) column layout
+PAR_TAU_WL = 0      # WL driver RC time constant [ns]
+PAR_THR_REL = 1     # ACT threshold: v[0] - vpre >= thr_rel  [V]
+PAR_VDD = 2         # restore rail (SA drives sense node here) [V]
+PAR_VPRE = 3        # precharge / equalize target [V]
+PAR_ACTIVE = 4      # 1.0 = live design point, 0.0 = padding (starts DONE)
+N_PARAMS = 5
+
+# events (B, 4) column layout
+EVT_T_DEV = 0       # ACT: time to 90% signal development [ns]
+EVT_DV_SENSE = 1    # developed signal at SA enable [V]
+EVT_T_RES = 2       # RESTORE: duration to 95% VDD in the cell [ns]
+EVT_T_PRE = 3       # PRE: duration to 5 mV equalization [ns]
+N_EVENTS = 4
+
+RESTORE_FRAC = 0.95     # cell restored when v_cell >= RESTORE_FRAC * VDD
+EQUALIZE_TOL_V = 5e-3   # BL equalized when max |v - vpre| <= 5 mV
+
+
+def _row_cycle_kernel(c_ref, g_ref, gcr_ref, gcp_ref, v0_ref, par_ref,
+                      evt_ref, vend_ref, *, n_act: int, n_res: int,
+                      n_pre: int, dt: float):
+    """One batch-block: phase state machine until every point is DONE."""
+    c = c_ref[...]                 # (B_blk, N)
+    g_br = g_ref[...]              # (B_blk, N-1)
+    gc_res = gcr_ref[...]          # (B_blk, N)
+    gc_pre = gcp_ref[...]          # (B_blk, N)
+    tau = jnp.maximum(par_ref[..., PAR_TAU_WL], 1e-3)
+    thr_rel = par_ref[..., PAR_THR_REL]
+    vdd = par_ref[..., PAR_VDD]
+    vpre = par_ref[..., PAR_VPRE]
+    active = par_ref[..., PAR_ACTIVE] > 0.5
+    b, n = c.shape
+    cdt = c / dt * 1e-3            # fF/ns = uS -> mS (match G in 1/kOhm)
+    t_total = n_act + n_res + n_pre
+    n_phase = jnp.stack([
+        jnp.full((b,), n_act, jnp.int32),
+        jnp.full((b,), n_res, jnp.int32),
+        jnp.full((b,), n_pre, jnp.int32),
+    ])
+
+    def cond(state):
+        t, phase, _, _, _ = state
+        return jnp.logical_and(t < t_total, jnp.any(phase < 3))
+
+    def body(state):
+        t, phase, tin, v, evt = state
+        in_act = phase == 0
+        in_res = phase == 1
+        in_pre = phase == 2
+        done = phase >= 3
+
+        # WL ramp, analytic (matches transient.wl_ramp): x = 1 - e^{-t/tau}
+        t_ns = (tin.astype(jnp.float32) + 1.0) * dt
+        e = jnp.exp(-t_ns / tau)
+        s = jnp.where(in_act, 1.0 - e,
+                      jnp.where(in_res, 1.0, jnp.where(in_pre, e, 0.0)))
+
+        # per-phase clamp network (ACT has none)
+        gc = jnp.where(in_res[:, None], gc_res,
+                       jnp.where(in_pre[:, None], gc_pre, 0.0))
+        gcv = jnp.where(in_res[:, None], gc_res * vdd[:, None],
+                        jnp.where(in_pre[:, None],
+                                  gc_pre * vpre[:, None], 0.0))
+
+        # tridiagonal assembly: A = C/dt + G(s); access branch scaled by s
+        g_last = g_br[:, n - 2] * s
+        g = jnp.concatenate([g_br[:, : n - 2], g_last[:, None]], axis=1)
+        zeros = jnp.zeros_like(c[:, :1])
+        g_lo = jnp.concatenate([zeros, g], axis=1)
+        g_hi = jnp.concatenate([g, zeros], axis=1)
+        diag = cdt + g_lo + g_hi + gc
+        dl = jnp.concatenate([zeros, -g], axis=1)
+        du = jnp.concatenate([-g, zeros], axis=1)
+        rhs = cdt * v + gcv
+        v_sol = _thomas_small(dl, diag, du, rhs)
+        v_next = jnp.where(done[:, None], v, v_sol)
+
+        # threshold crossings on the fresh state
+        cross = jnp.stack([
+            v_next[:, 0] - vpre >= thr_rel,
+            v_next[:, n - 1] >= RESTORE_FRAC * vdd,
+            jnp.max(jnp.abs(v_next[:, : n - 1] - vpre[:, None]),
+                    axis=-1) <= EQUALIZE_TOL_V,
+        ])
+
+        tin1 = tin + 1
+        phase_c = jnp.clip(phase, 0, 2)
+        crossed = jnp.take_along_axis(cross, phase_c[None, :], axis=0)[0]
+        cap = jnp.take_along_axis(n_phase, phase_c[None, :], axis=0)[0]
+        advance = jnp.logical_and(~done,
+                                  jnp.logical_or(crossed, tin1 >= cap))
+        # first-crossing time: (idx+1)*dt, or the full window if timed out
+        t_evt = jnp.where(crossed, tin1.astype(jnp.float32) * dt,
+                          cap.astype(jnp.float32) * dt)
+
+        rec = lambda ph: jnp.logical_and(advance, phase == ph)
+        evt = evt.at[:, EVT_T_DEV].set(
+            jnp.where(rec(0), t_evt, evt[:, EVT_T_DEV]))
+        evt = evt.at[:, EVT_DV_SENSE].set(
+            jnp.where(rec(0), v_next[:, 0] - vpre, evt[:, EVT_DV_SENSE]))
+        evt = evt.at[:, EVT_T_RES].set(
+            jnp.where(rec(1), t_evt, evt[:, EVT_T_RES]))
+        evt = evt.at[:, EVT_T_PRE].set(
+            jnp.where(rec(2), t_evt, evt[:, EVT_T_PRE]))
+
+        phase = jnp.where(advance, phase + 1, phase)
+        tin = jnp.where(advance, 0, jnp.where(done, tin, tin1))
+        return t + 1, phase, tin, v_next, evt
+
+    phase0 = jnp.where(active, 0, 3).astype(jnp.int32)
+    state = (jnp.int32(0), phase0, jnp.zeros((b,), jnp.int32),
+             v0_ref[...], jnp.zeros((b, N_EVENTS), jnp.float32))
+    _, _, _, v_fin, evt_fin = jax.lax.while_loop(cond, body, state)
+    evt_ref[...] = evt_fin
+    vend_ref[...] = v_fin
+
+
+def row_cycle_fused_pallas(c: jnp.ndarray, g_branch: jnp.ndarray,
+                           gc_res: jnp.ndarray, gc_pre: jnp.ndarray,
+                           v0: jnp.ndarray, params: jnp.ndarray,
+                           dt: float, n_act: int, n_res: int, n_pre: int,
+                           *, b_blk: int = DEFAULT_B_BLK,
+                           interpret: bool = True):
+    """Pallas-backed equivalent of `ref.row_cycle_fused_ref`.
+
+    Returns (events, v_end) with shapes ((B, 4), (B, N)).
+    """
+    b, n = c.shape
+    b_blk = min(b_blk, b)
+    n_blocks = pl.cdiv(b, b_blk)
+
+    pad = n_blocks * b_blk - b
+    if pad:
+        padf = lambda x, v: jnp.pad(x, ((0, pad), (0, 0)), constant_values=v)
+        c, g_branch, gc_res, gc_pre, v0 = (
+            padf(x, 1.0) for x in (c, g_branch, gc_res, gc_pre, v0))
+        # padded rows get active=0 -> they start DONE and never step
+        params = padf(params, 0.0)
+
+    kernel = functools.partial(_row_cycle_kernel, n_act=n_act, n_res=n_res,
+                               n_pre=n_pre, dt=dt)
+    bspec = lambda w: pl.BlockSpec((b_blk, w), lambda i: (i, 0))
+    events, v_end = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[bspec(n), bspec(n - 1), bspec(n), bspec(n), bspec(n),
+                  bspec(N_PARAMS)],
+        out_specs=[bspec(N_EVENTS), bspec(n)],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks * b_blk, N_EVENTS), jnp.float32),
+            jax.ShapeDtypeStruct((n_blocks * b_blk, n), c.dtype),
+        ],
+        interpret=interpret,
+    )(c, g_branch, gc_res, gc_pre, v0, params)
+    return events[:b], v_end[:b]

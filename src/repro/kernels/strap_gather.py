@@ -34,6 +34,13 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
+def _compiler_params(**kw):
+    """TPU compiler params across jax versions (CompilerParams was renamed)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kw)
+
+
 def _strap_kernel(strap_ids_ref,          # scalar prefetch: (B, S)
                   q_ref,                  # (1, grp, D)
                   k_ref,                  # (1, G*page, 1, D)
@@ -148,7 +155,7 @@ def strap_attend_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, grp, d), q.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(raw_ids, q_g, k_flat, v_flat)
     return out.reshape(b, hq, d)

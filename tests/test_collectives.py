@@ -13,6 +13,9 @@ from pathlib import Path
 
 import pytest
 
+# 8-forced-host-device subprocess with XLA compiles: minutes on CPU
+pytestmark = pytest.mark.slow
+
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 SCRIPT = textwrap.dedent("""
@@ -59,7 +62,10 @@ SCRIPT = textwrap.dedent("""
 @pytest.fixture(scope="module")
 def subproc_result():
     env = dict(os.environ, PYTHONPATH=SRC)
-    env.pop("JAX_PLATFORMS", None)
+    # pin the child to CPU: with libtpu installed, an unset
+    # JAX_PLATFORMS makes jax probe for TPU hardware for minutes
+    # before falling back (the forced-host-device flag wants CPU anyway)
+    env["JAX_PLATFORMS"] = "cpu"
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                        text=True, env=env, timeout=300)
     assert r.returncode == 0, r.stderr[-2000:]

@@ -13,6 +13,9 @@ from pathlib import Path
 
 import pytest
 
+# multi-minute subprocess integration (8 forced host devices + XLA compiles)
+pytestmark = pytest.mark.slow
+
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 SCRIPT = textwrap.dedent("""
@@ -97,7 +100,10 @@ SCRIPT = textwrap.dedent("""
 @pytest.fixture(scope="module")
 def result():
     env = dict(os.environ, PYTHONPATH=SRC)
-    env.pop("JAX_PLATFORMS", None)
+    # pin the child to CPU: with libtpu installed, an unset
+    # JAX_PLATFORMS makes jax probe for TPU hardware for minutes
+    # before falling back (the forced-host-device flag wants CPU anyway)
+    env["JAX_PLATFORMS"] = "cpu"
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                        text=True, env=env, timeout=560)
     assert r.returncode == 0, r.stderr[-3000:]

@@ -8,6 +8,7 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.rc_transient import rc_multistep_pallas
+from repro.kernels.row_cycle import row_cycle_fused_pallas
 from repro.kernels.strap_gather import strap_attend_pallas
 
 
@@ -22,8 +23,12 @@ def random_ladder(rng, b, n, dtype):
 
 
 class TestRCTransientKernel:
-    @pytest.mark.parametrize("b,n,t", [(1, 6, 16), (9, 6, 50), (64, 8, 33),
-                                       (130, 4, 25), (256, 6, 10)])
+    @pytest.mark.parametrize(
+        "b,n,t",
+        [(1, 6, 16), (130, 4, 25),
+         pytest.param(9, 6, 50, marks=pytest.mark.slow),
+         pytest.param(64, 8, 33, marks=pytest.mark.slow),
+         pytest.param(256, 6, 10, marks=pytest.mark.slow)])
     def test_shapes(self, rng, b, n, t):
         c, g, gc, vc, v0 = random_ladder(rng, b, n, np.float32)
         ramp = jnp.asarray(np.clip(np.arange(t) / 8, 0, 1), jnp.float32)
@@ -46,8 +51,10 @@ class TestRCTransientKernel:
         np.testing.assert_allclose(np.array(out_ref), np.array(out_pl),
                                    rtol=1e-5, atol=1e-6)
 
+    @pytest.mark.slow
     def test_block_partitioning(self, rng):
-        """Batch larger than one block must tile correctly."""
+        """Batch larger than one block must tile correctly (the fused
+        engine's padded-tail test covers block tiling in the fast tier)."""
         c, g, gc, vc, v0 = random_ladder(rng, 300, 6, np.float32)
         ramp = jnp.ones((12,), jnp.float32)
         out_ref = ref.rc_multistep_ref(c, g, gc, vc, v0, ramp, 0.02)
@@ -55,6 +62,91 @@ class TestRCTransientKernel:
                                      b_blk=128, interpret=True)
         np.testing.assert_allclose(np.array(out_ref), np.array(out_pl),
                                    rtol=1e-5, atol=1e-6)
+
+
+def random_row_cycle_inputs(rng, b, n, dtype=np.float32):
+    """Random fused-engine operands with realistic clamp networks."""
+    c = rng.uniform(1, 5, (b, n)).astype(dtype)
+    g = rng.uniform(0.05, 0.2, (b, n - 1)).astype(dtype)
+    gc_res = np.zeros((b, n), dtype)
+    gc_res[:, 0] = 0.125
+    gc_pre = np.zeros((b, n), dtype)
+    gc_pre[:, :n - 1] = 0.125
+    v0 = np.full((b, n), 0.55, dtype)
+    v0[:, n - 1] = 1.0
+    params = np.stack([
+        rng.uniform(0.5, 4.0, b),       # tau_wl
+        rng.uniform(0.01, 0.2, b),      # thr_rel
+        np.full(b, 1.1),                # vdd
+        np.full(b, 0.55),               # vpre
+        np.ones(b),                     # active
+    ], axis=1).astype(dtype)
+    return tuple(map(jnp.asarray, (c, g, gc_res, gc_pre, v0, params)))
+
+
+class TestRowCycleFusedKernel:
+    """Pallas fused ACT/RESTORE/PRE engine vs the jnp oracle."""
+
+    DT = 0.02
+
+    def check(self, args, n_act, n_res, n_pre, **kw):
+        evt_ref, vend_ref = ref.row_cycle_fused_ref(
+            *args, self.DT, n_act, n_res, n_pre)
+        evt_pl, vend_pl = row_cycle_fused_pallas(
+            *args, self.DT, n_act, n_res, n_pre, interpret=True, **kw)
+        # event times must agree to within one integration step (usually
+        # exactly; float32 noise at a threshold can flip one step)
+        t_ref = np.asarray(evt_ref)[:, [0, 2, 3]]
+        t_pl = np.asarray(evt_pl)[:, [0, 2, 3]]
+        assert np.abs(t_ref - t_pl).max() <= self.DT + 1e-9
+        np.testing.assert_allclose(np.asarray(evt_ref)[:, 1],
+                                   np.asarray(evt_pl)[:, 1],
+                                   rtol=1e-3, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(vend_ref),
+                                   np.asarray(vend_pl),
+                                   rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("b,n,n_act,n_res,n_pre",
+                             [(9, 6, 30, 15, 10), (64, 8, 18, 12, 10),
+                              pytest.param(1, 6, 20, 18, 12,
+                                           marks=pytest.mark.slow),
+                              pytest.param(130, 4, 20, 15, 10,
+                                           marks=pytest.mark.slow),
+                              pytest.param(256, 6, 16, 12, 10,
+                                           marks=pytest.mark.slow)])
+    def test_shapes_and_phase_durations(self, rng, b, n, n_act, n_res, n_pre):
+        args = random_row_cycle_inputs(rng, b, n)
+        self.check(args, n_act, n_res, n_pre)
+
+    def test_padded_batch_tail(self, rng):
+        """B=150 with b_blk=64 exercises a multi-block grid with a padded
+        last block; inactive padding rows must not perturb live points."""
+        args = random_row_cycle_inputs(rng, 150, 6)
+        self.check(args, 12, 10, 8, b_blk=64)
+
+    def test_inactive_points_never_step(self, rng):
+        """active=0 rows start DONE: zero event times, untouched state."""
+        args = list(random_row_cycle_inputs(rng, 8, 6))
+        params = np.array(args[5])
+        params[3:, 4] = 0.0
+        args[5] = jnp.asarray(params)
+        evt, v_end = row_cycle_fused_pallas(*args, self.DT, 10, 10, 10,
+                                            interpret=True)
+        np.testing.assert_array_equal(np.asarray(evt)[3:], 0.0)
+        np.testing.assert_allclose(np.asarray(v_end)[3:],
+                                   np.asarray(args[4])[3:])
+
+    def test_timeout_records_full_window(self, rng):
+        """An uncrossable ACT threshold must report the full phase window."""
+        args = list(random_row_cycle_inputs(rng, 4, 6))
+        params = np.array(args[5])
+        params[:, 1] = 1e9                    # thr_rel no signal can reach
+        args[5] = jnp.asarray(params)
+        n_act = 15
+        evt, _ = row_cycle_fused_pallas(*args, self.DT, n_act, 10, 10,
+                                        interpret=True)
+        np.testing.assert_allclose(np.asarray(evt)[:, 0], n_act * self.DT,
+                                   rtol=1e-6)
 
 
 class TestTridiag:
@@ -75,9 +167,11 @@ class TestTridiag:
 class TestStrapAttendKernel:
     @pytest.mark.parametrize(
         "b,p,page,hkv,d,hq,g",
-        [(2, 8, 16, 2, 64, 8, 2), (1, 4, 8, 1, 128, 4, 4),
-         (3, 6, 32, 3, 32, 6, 3), (2, 16, 8, 4, 64, 16, 4),
-         (1, 8, 128, 2, 128, 2, 2)])
+        [(2, 8, 16, 2, 64, 8, 2),
+         pytest.param(1, 4, 8, 1, 128, 4, 4, marks=pytest.mark.slow),
+         pytest.param(3, 6, 32, 3, 32, 6, 3, marks=pytest.mark.slow),
+         pytest.param(2, 16, 8, 4, 64, 16, 4, marks=pytest.mark.slow),
+         pytest.param(1, 8, 128, 2, 128, 2, 2, marks=pytest.mark.slow)])
     def test_shapes(self, rng, b, p, page, hkv, d, hq, g):
         s = p // g
         q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
@@ -92,6 +186,7 @@ class TestStrapAttendKernel:
         np.testing.assert_allclose(np.array(o_ref), np.array(o_pl),
                                    rtol=3e-5, atol=3e-5)
 
+    @pytest.mark.slow
     def test_bf16(self, rng):
         b, p, page, hkv, d, hq, g = 2, 4, 16, 2, 64, 4, 2
         q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.bfloat16)

@@ -16,6 +16,13 @@ from repro.train.step import make_train_step
 
 ALL_ARCHS = sorted(ARCHS)
 
+# model smoke compiles are the heaviest CPU tests in the suite: the fast
+# tier covers the numerics (SSD equivalences) and leaves every per-arch
+# XLA compile to the slow tier
+FAST_ARCHS: set = set()
+_arch_params = [a if a in FAST_ARCHS else pytest.param(a, marks=pytest.mark.slow)
+                for a in ALL_ARCHS]
+
 
 def make_batch(cfg, rng, cell="smoke"):
     specs = input_specs(cfg, cell)
@@ -29,7 +36,7 @@ def make_batch(cfg, rng, cell="smoke"):
     return out
 
 
-@pytest.mark.parametrize("arch", ALL_ARCHS)
+@pytest.mark.parametrize("arch", _arch_params)
 def test_smoke_forward_and_train_step(arch, rng):
     cfg = get_arch(arch + "-smoke")
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -54,9 +61,11 @@ def test_smoke_forward_and_train_step(arch, rng):
     assert delta > 0
 
 
-@pytest.mark.parametrize("arch", ["deepseek-67b", "qwen2-1.5b", "olmo-1b",
-                                  "phi3.5-moe-42b-a6.6b", "mamba2-780m",
-                                  "zamba2-7b", "pixtral-12b"])
+@pytest.mark.parametrize("arch", [
+    a if a in FAST_ARCHS else pytest.param(a, marks=pytest.mark.slow)
+    for a in ["deepseek-67b", "qwen2-1.5b", "olmo-1b",
+              "phi3.5-moe-42b-a6.6b", "mamba2-780m",
+              "zamba2-7b", "pixtral-12b"]])
 def test_decode_matches_forward(arch, rng):
     cfg = get_arch(arch + "-smoke")
     params = M.init_params(cfg, jax.random.PRNGKey(1))
@@ -83,6 +92,7 @@ def test_decode_matches_forward(arch, rng):
     assert err < 2e-2, err
 
 
+@pytest.mark.slow
 def test_whisper_decode_runs(rng):
     cfg = get_arch("whisper-tiny-smoke")
     params = M.init_params(cfg, jax.random.PRNGKey(2))
@@ -132,6 +142,7 @@ class TestSSD:
         np.testing.assert_allclose(np.array(y), y_ref, rtol=2e-4, atol=2e-4)
         np.testing.assert_allclose(np.array(h), h_ref, rtol=2e-4, atol=2e-4)
 
+    @pytest.mark.slow
     def test_state_carry_across_calls(self, rng):
         """ssd(x) == ssd(x2 | state from x1) concatenated."""
         from repro.configs.registry import get_arch

@@ -25,6 +25,8 @@ SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 
 class TestGatedDecode:
+    pytestmark = pytest.mark.slow
+
     def _setup(self, top):
         rng = np.random.default_rng(3)
         cfg = get_arch("deepseek-67b-smoke")
@@ -108,9 +110,13 @@ EP_SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_ep_moe_matches_baseline_on_mesh():
     env = dict(os.environ, PYTHONPATH=SRC)
-    env.pop("JAX_PLATFORMS", None)
+    # pin the child to CPU: with libtpu installed, an unset
+    # JAX_PLATFORMS makes jax probe for TPU hardware for minutes
+    # before falling back (the forced-host-device flag wants CPU anyway)
+    env["JAX_PLATFORMS"] = "cpu"
     r = subprocess.run([sys.executable, "-c", EP_SCRIPT],
                        capture_output=True, text=True, env=env, timeout=560)
     assert r.returncode == 0, r.stderr[-3000:]
@@ -128,6 +134,7 @@ class TestConstrainNoOp:
         y = constrain(cfg, x, ("dp", None, "model"))
         np.testing.assert_array_equal(np.array(x), np.array(y))
 
+    @pytest.mark.slow
     def test_shard_acts_model_still_correct(self):
         """shard_acts=True must not change numerics on a single device."""
         cfg = get_arch("mamba2-780m-smoke")
@@ -140,6 +147,7 @@ class TestConstrainNoOp:
         np.testing.assert_allclose(np.array(y0), np.array(y1), atol=1e-6)
 
 
+@pytest.mark.slow
 class TestSplitProjection:
     """opt7: shard-aligned SSM projections == fused (exact re-partition)."""
 

@@ -1,8 +1,15 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+Hypothesis is an optional dependency: when absent the whole module is
+skipped at collection instead of erroring the tier-1 `-x` run.
+"""
 
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.calibration import AOS, SI

@@ -168,6 +168,7 @@ class TestData:
 
 
 class TestLoopIntegration:
+    @pytest.mark.slow
     def test_train_improves_and_survives_crash(self, tmp_path):
         from repro.configs.registry import get_arch
         from repro.train.loop import TrainConfig, train

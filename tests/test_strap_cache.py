@@ -38,6 +38,7 @@ class TestStrapKVCache:
         v = self.rng.normal(size=(b, s, hkv, hd)).astype(np.float32)
         return sc, jnp.asarray(k), jnp.asarray(v)
 
+    @pytest.mark.slow
     def test_bulk_equals_append(self):
         sc, k, v = self.make(s=32)
         bulk = sc.bulk_load(k, v)
@@ -86,6 +87,7 @@ class TestStrapKVCache:
         assert valid.max() <= 1                  # straps 0 and 1 only
 
 
+@pytest.mark.slow
 class TestServeEngineStrap:
     def test_exact_strap_equals_dense_engine(self):
         cfg = get_arch("qwen2-1.5b-smoke")

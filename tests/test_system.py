@@ -63,7 +63,10 @@ MINI_DRYRUN = textwrap.dedent("""
                      out_shardings=(ns(p_specs), ns(o_specs), None))
         with mesh:
             compiled = jt.lower(abs_p, abs_o, batch).compile()
-        flops = (compiled.cost_analysis() or {}).get("flops", -1)
+        ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):   # older jax returns [dict]
+            ca = ca[0] if ca else {}
+        flops = ca.get("flops", -1)
         # decode path too
         bsz, seq = 2, 128
         cache_abs = M.abstract_cache(cfg, bsz, seq)
@@ -82,9 +85,13 @@ MINI_DRYRUN = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_mini_multipod_dryrun_compiles():
     env = dict(os.environ, PYTHONPATH=SRC)
-    env.pop("JAX_PLATFORMS", None)
+    # pin the child to CPU: with libtpu installed, an unset
+    # JAX_PLATFORMS makes jax probe for TPU hardware for minutes
+    # before falling back (the forced-host-device flag wants CPU anyway)
+    env["JAX_PLATFORMS"] = "cpu"
     r = subprocess.run([sys.executable, "-c", MINI_DRYRUN],
                        capture_output=True, text=True, env=env, timeout=560)
     assert r.returncode == 0, r.stderr[-3000:]

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Pre-merge gate: lint-free compile of every tree + the fast test tier.
+#
+#   tools/ci_check.sh            # what CI runs on every PR
+#   tools/ci_check.sh --slow     # additionally run the slow tier (manual)
+#
+# The fast tier (`pytest -x -q`, which deselects @slow via pytest.ini)
+# must stay green and finish in well under a minute; see tests/README.md.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== compile check =="
+python -m compileall -q src tests benchmarks tools examples
+
+echo "== fast test tier =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+
+if [[ "${1:-}" == "--slow" ]]; then
+    echo "== slow test tier =="
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m slow
+fi
+
+echo "ci_check: OK"
