@@ -1,39 +1,58 @@
 """End-to-end design-space exploration — the paper's co-optimization flow.
 
-Sweeps (technology x routing scheme x layer count), applies the paper's
-feasibility rules (sense margin incl. FBE/RH, manufacturable HCB pitch),
-prints the Pareto front and the selected design point, and compares it to
-the D1b baseline — i.e., regenerates the substance of Table I / Fig. 9(c).
+Array-native API: declare a `DesignSpace`, score it in ONE vectorized
+`dse.sweep` (density, margins, energy, bonding geometry, and the fused
+row-cycle tRC all as flat batch arrays), then extract the Pareto front and
+the selected design with masked array ops — i.e., regenerates the
+substance of Table I / Fig. 9(c) without a single per-combo Python loop.
 
-Run:  PYTHONPATH=src python examples/dram_codesign.py
+Run:  PYTHONPATH=src python examples/dram_codesign.py [--smoke]
+
+`--smoke` sweeps a reduced layer grid on CPU — the fast API-regression
+mode `tools/ci_check.sh` runs pre-merge.
 """
+
+import argparse
 
 import numpy as np
 
 from repro.core import calibration as cal
-from repro.core.dse import best_design, full_sweep, pareto_front
+from repro.core import dse
+from repro.core.space import DesignSpace
 
-print("sweeping design space (2 techs x 4 routing schemes x 9 layer "
-      "counts, full transient per point)...")
-pts = full_sweep()
+parser = argparse.ArgumentParser()
+parser.add_argument("--smoke", action="store_true",
+                    help="reduced layer grid (fast CI smoke mode)")
+args = parser.parse_args()
 
-feas = [p for p in pts if p.feasible]
-print(f"\n{len(pts)} design points, {len(feas)} feasible "
+grid = (64, 87, 137) if args.smoke else None
+space = DesignSpace.paper_grid(layer_grid=grid)
+print(f"sweeping design space ({len(space)} design points, one fused "
+      "transient batch)...")
+batch = dse.sweep(space)
+
+n_feas = int(np.asarray(batch.feasible).sum())
+print(f"\n{len(batch)} design points, {n_feas} feasible "
       f"(margin nominal>={cal.MIN_FUNCTIONAL_MARGIN_MV:.0f} mV, "
       f"disturbed>={cal.MIN_DISTURBED_MARGIN_MV:.0f} mV, "
       f"pitch>={cal.HCB_MIN_MANUFACTURABLE_PITCH_UM} um)")
 
-front = pareto_front(pts)
+front = dse.pareto_front(batch)          # DesignBatch -> DesignBatch
 print(f"\nPareto front ({len(front)} points):")
 print(f"{'tech':5s} {'scheme':10s} {'L':>4s} {'Gb/mm2':>7s} {'dV(mV)':>7s} "
       f"{'dV+dist':>8s} {'tRC(ns)':>8s} {'Erd(fJ)':>8s} {'pitch':>6s}")
-for p in sorted(front, key=lambda p: -p.density_gb_mm2)[:12]:
-    print(f"{p.tech:5s} {p.scheme:10s} {p.layers:4d} "
-          f"{p.density_gb_mm2:7.2f} {p.margin_mv:7.0f} "
-          f"{p.margin_disturbed_mv:8.0f} {p.trc_ns:8.2f} "
-          f"{p.e_read_fj:8.2f} {p.hcb_pitch_um:6.2f}")
+order = np.argsort(-np.asarray(front.density_gb_mm2))[:12]
+for i in order:
+    print(f"{front.tech_col[i]:5s} {front.scheme_col[i]:10s} "
+          f"{int(front.layers[i]):4d} "
+          f"{float(front.density_gb_mm2[i]):7.2f} "
+          f"{float(front.margin_mv[i]):7.0f} "
+          f"{float(front.margin_disturbed_mv[i]):8.0f} "
+          f"{float(front.trc_ns[i]):8.2f} "
+          f"{float(front.e_read_fj[i]):8.2f} "
+          f"{float(front.hcb_pitch_um[i]):6.2f}")
 
-best = best_design(pts)
+best = dse.best_design(batch)            # paper's selection rule
 print(f"\nselected design (paper's rule: hit {cal.DENSITY_TARGET_GB_MM2} "
       f"Gb/mm2, min tRC):")
 print(f"  {best.tech} / {best.scheme} @ {best.layers} layers -> "
@@ -42,7 +61,28 @@ print(f"  {best.tech} / {best.scheme} @ {best.layers} layers -> "
       f"w/ FBE+RH), E_rd {best.e_read_fj:.2f} fJ, "
       f"HCB pitch {best.hcb_pitch_um:.2f} um")
 
-d1b = [p for p in pts if p.tech == "d1b"][0]
-print(f"\nvs D1b baseline: density x{best.density_gb_mm2 / d1b.density_gb_mm2:.1f}, "
-      f"tRC x{d1b.trc_ns / best.trc_ns:.2f} faster, "
-      f"E_rd x{d1b.e_read_fj / best.e_read_fj:.2f} lower")
+# Table-1 anchors, read straight off the batch columns
+tech_col, scheme_col = batch.tech_col, batch.scheme_col
+def row(tech, scheme, layers):
+    (i,) = [i for i in range(len(batch))
+            if tech_col[i] == tech and scheme_col[i] == scheme
+            and int(batch.layers[i]) == layers]
+    return i
+
+print("\nTable I anchors (from the DesignBatch):")
+for tech, scheme, L in (("si", "sel_strap", 137), ("aos", "sel_strap", 87),
+                        ("d1b", "direct", 1)):
+    i = row(tech, scheme, L)
+    print(f"  {tech:4s} {scheme:10s} @{L:3d}L: "
+          f"{float(batch.density_gb_mm2[i]):4.2f} Gb/mm2  "
+          f"tRC {float(batch.trc_ns[i]):5.2f} ns  "
+          f"E_wr {float(batch.e_write_fj[i]):5.2f} fJ  "
+          f"E_rd {float(batch.e_read_fj[i]):4.2f} fJ")
+
+i_d1b = row("d1b", "direct", 1)
+d1b_trc = float(batch.trc_ns[i_d1b])
+d1b_erd = float(batch.e_read_fj[i_d1b])
+d1b_dens = float(batch.density_gb_mm2[i_d1b])
+print(f"\nvs D1b baseline: density x{best.density_gb_mm2 / d1b_dens:.1f}, "
+      f"tRC x{d1b_trc / best.trc_ns:.2f} faster, "
+      f"E_rd x{d1b_erd / best.e_read_fj:.2f} lower")

@@ -12,20 +12,17 @@ import jax.numpy as jnp
 import numpy as np
 
 # ---------------------------------------------------------------- paper --
-from repro.core.calibration import AOS, D1B, SI
-from repro.core.netlist import effective_cbl_ff
-from repro.core.sense import sense_margin_mv
-from repro.core.transient import simulate_row_cycle
+from repro.core import dse
+from repro.core.space import DesignSpace
 
 print("== 1. Paper reproduction (selector+strap vs D1b) ==")
-for tech, scheme, L in ((SI, "sel_strap", 137), (AOS, "sel_strap", 87),
-                        (D1B, "direct", 1)):
-    layers = jnp.asarray([L])
-    cbl = float(effective_cbl_ff(tech, scheme, layers)[0])
-    margin = float(sense_margin_mv(tech, scheme, layers)[0])
-    trc = float(simulate_row_cycle(tech, scheme, layers).trc_ns[0])
-    print(f"  {tech.name:4s}: C_BL={cbl:5.2f} fF  margin={margin:5.0f} mV  "
-          f"tRC={trc:5.2f} ns")
+# One vectorized sweep of the Table-1 target points; the printed numbers
+# are read straight off the DesignBatch columns.
+batch = dse.sweep(DesignSpace.paper_targets())
+for i, tech in enumerate(batch.tech_col):
+    print(f"  {tech:4s}: C_BL={float(batch.cbl_ff[i]):5.2f} fF  "
+          f"margin={float(batch.margin_mv[i]):5.0f} mV  "
+          f"tRC={float(batch.trc_ns[i]):5.2f} ns")
 
 # ---------------------------------------------------------------- train --
 from repro.configs.registry import get_arch

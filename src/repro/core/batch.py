@@ -1,0 +1,216 @@
+"""Structure-of-arrays design batches — the result half of the DSE API.
+
+A `DesignBatch` holds every scored metric of a design-space sweep as one
+flat jnp array per field (plus a validity mask), registered as a JAX
+pytree: it `jit`s, `tree_map`s, and shards.  The batch axis is the ONLY
+axis, so distributing a million-point sweep is literally
+
+    batch = jax.device_put(batch, NamedSharding(mesh, P("batch")))
+
+(or `batch.device_put(sharding)`), after `pad_to()`-aligning the axis to
+the device count.  `to_points()` is the thin legacy view producing the old
+`list[DesignPoint]` contract.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class DesignPoint:
+    """Scalar view of one design point.
+
+    Deprecated as a bulk interface: `dse.sweep` returns a `DesignBatch`,
+    and list-of-points consumers should migrate to its array fields.
+    `DesignBatch.to_points()` keeps this contract alive in the meantime.
+    """
+    tech: str
+    scheme: str
+    layers: int
+    density_gb_mm2: float
+    height_um: float
+    cbl_ff: float
+    margin_mv: float
+    margin_disturbed_mv: float
+    trc_ns: float
+    e_write_fj: float
+    e_read_fj: float
+    hcb_pitch_um: float
+    blsa_area_um2: float
+    feasible: bool
+
+
+# Array leaves of the pytree, in flatten order.  All shaped (B,) on the
+# single shardable batch axis.
+ARRAY_FIELDS = (
+    "tech_idx", "scheme_idx", "layers",
+    "density_gb_mm2", "height_um", "cbl_ff",
+    "margin_mv", "margin_disturbed_mv",
+    "trc_ns", "t_sense_ns",
+    "e_write_fj", "e_read_fj",
+    "hcb_pitch_um", "blsa_area_um2",
+    "manufacturable", "feasible", "valid",
+)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class DesignBatch:
+    """One design-space sweep as a structure-of-arrays pytree.
+
+    `tech_idx`/`scheme_idx` index the static `tech_names`/`scheme_names`
+    tables (pytree aux data, so they survive jit/flatten round-trips
+    without becoming tracers).  `valid` masks padding rows added by
+    `pad_to`; every reduction in the DSE layer respects it.
+    """
+
+    tech_idx: jnp.ndarray            # (B,) int32 into tech_names
+    scheme_idx: jnp.ndarray          # (B,) int32 into scheme_names
+    layers: jnp.ndarray              # (B,) float32
+    density_gb_mm2: jnp.ndarray      # (B,) float32
+    height_um: jnp.ndarray           # (B,) float32
+    cbl_ff: jnp.ndarray              # (B,) float32
+    margin_mv: jnp.ndarray           # (B,) float32
+    margin_disturbed_mv: jnp.ndarray # (B,) float32
+    trc_ns: jnp.ndarray              # (B,) float32 (NaN when transient off)
+    t_sense_ns: jnp.ndarray          # (B,) float32 (NaN when transient off)
+    e_write_fj: jnp.ndarray          # (B,) float32
+    e_read_fj: jnp.ndarray           # (B,) float32
+    hcb_pitch_um: jnp.ndarray        # (B,) float32
+    blsa_area_um2: jnp.ndarray       # (B,) float32
+    manufacturable: jnp.ndarray      # (B,) bool
+    feasible: jnp.ndarray            # (B,) bool
+    valid: jnp.ndarray               # (B,) bool
+    corners: dict                    # axis name -> (B,) float32
+    tech_names: tuple = ()           # static lookup tables (aux data)
+    scheme_names: tuple = ()
+
+    # ------------------------------------------------------------ pytree --
+    def tree_flatten(self):
+        children = tuple(getattr(self, f) for f in ARRAY_FIELDS)
+        children += (self.corners,)
+        return children, (self.tech_names, self.scheme_names)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        tech_names, scheme_names = aux
+        kwargs = dict(zip(ARRAY_FIELDS, children[:-1]))
+        return cls(corners=children[-1], tech_names=tech_names,
+                   scheme_names=scheme_names, **kwargs)
+
+    # ------------------------------------------------------------- shape --
+    def __len__(self) -> int:
+        return int(self.tech_idx.shape[0])
+
+    @property
+    def n_valid(self) -> int:
+        return int(np.asarray(self.valid).sum())
+
+    @property
+    def tech_col(self) -> list:
+        """Per-row tech names (host-side convenience)."""
+        return [self.tech_names[i] for i in np.asarray(self.tech_idx)]
+
+    @property
+    def scheme_col(self) -> list:
+        """Per-row scheme names (host-side convenience)."""
+        return [self.scheme_names[i] for i in np.asarray(self.scheme_idx)]
+
+    def select(self, where) -> "DesignBatch":
+        """Rows selected by a boolean mask or index array (host-side)."""
+        idx = np.asarray(where)
+        if idx.dtype == bool:
+            idx = np.flatnonzero(idx)
+        take = lambda a: jnp.asarray(a)[idx]
+        return jax.tree_util.tree_map(take, self)
+
+    def pad_to(self, multiple: int) -> "DesignBatch":
+        """Pad the batch axis up to a multiple (sharding/chunk alignment).
+
+        Padding rows have `valid=False` and zeros elsewhere; every DSE
+        reduction and `to_points()` ignores them.
+        """
+        b = len(self)
+        pad = (-b) % multiple
+        if not pad:
+            return self
+        def padarr(a):
+            a = jnp.asarray(a)
+            return jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1))
+        return jax.tree_util.tree_map(padarr, self)
+
+    def device_put(self, sharding) -> "DesignBatch":
+        """Place every leaf with the given jax.sharding / device."""
+        return jax.device_put(self, sharding)
+
+    # ------------------------------------------------------ legacy views --
+    def point(self, i: int) -> DesignPoint:
+        """Scalar `DesignPoint` view of row `i`."""
+        col = lambda f: np.asarray(getattr(self, f))[i]
+        return DesignPoint(
+            tech=self.tech_names[int(col("tech_idx"))],
+            scheme=self.scheme_names[int(col("scheme_idx"))],
+            layers=int(col("layers")),
+            density_gb_mm2=float(col("density_gb_mm2")),
+            height_um=float(col("height_um")),
+            cbl_ff=float(col("cbl_ff")),
+            margin_mv=float(col("margin_mv")),
+            margin_disturbed_mv=float(col("margin_disturbed_mv")),
+            trc_ns=float(col("trc_ns")),
+            e_write_fj=float(col("e_write_fj")),
+            e_read_fj=float(col("e_read_fj")),
+            hcb_pitch_um=float(col("hcb_pitch_um")),
+            blsa_area_um2=float(col("blsa_area_um2")),
+            feasible=bool(col("feasible")))
+
+    def to_points(self) -> list:
+        """Deprecated compatibility view: the old `list[DesignPoint]`
+        contract of `full_sweep`.  Skips invalid (padding) rows.  New code
+        should consume the array fields directly."""
+        valid = np.asarray(self.valid)
+        return [self.point(i) for i in np.flatnonzero(valid)]
+
+    @classmethod
+    def from_points(cls, points) -> "DesignBatch":
+        """Build a batch from legacy `DesignPoint`s (or anything with the
+        same attributes); the bridge for list-based callers.
+
+        `DesignPoint` does not record manufacturability (only the combined
+        `feasible` verdict), so the bridged `manufacturable` column is a
+        placeholder (all True) — consume it only on batches produced by
+        `dse.sweep`.  `t_sense_ns` is likewise NaN here."""
+        points = list(points)
+        tech_names: list = []
+        scheme_names: list = []
+        for p in points:
+            if p.tech not in tech_names:
+                tech_names.append(p.tech)
+            if p.scheme not in scheme_names:
+                scheme_names.append(p.scheme)
+        f32 = lambda f: jnp.asarray([getattr(p, f) for p in points],
+                                    jnp.float32)
+        b = len(points)
+        return cls(
+            tech_idx=jnp.asarray([tech_names.index(p.tech) for p in points],
+                                 jnp.int32),
+            scheme_idx=jnp.asarray(
+                [scheme_names.index(p.scheme) for p in points], jnp.int32),
+            layers=f32("layers"),
+            density_gb_mm2=f32("density_gb_mm2"), height_um=f32("height_um"),
+            cbl_ff=f32("cbl_ff"), margin_mv=f32("margin_mv"),
+            margin_disturbed_mv=f32("margin_disturbed_mv"),
+            trc_ns=f32("trc_ns"),
+            t_sense_ns=jnp.full((b,), jnp.nan, jnp.float32),
+            e_write_fj=f32("e_write_fj"), e_read_fj=f32("e_read_fj"),
+            hcb_pitch_um=f32("hcb_pitch_um"),
+            blsa_area_um2=f32("blsa_area_um2"),
+            manufacturable=jnp.ones((b,), bool),   # not in DesignPoint
+            feasible=jnp.asarray([bool(p.feasible) for p in points], bool),
+            valid=jnp.ones((b,), bool),
+            corners={},
+            tech_names=tuple(tech_names), scheme_names=tuple(scheme_names))

@@ -53,6 +53,17 @@ RH_TOGGLES_PER_64MS = 10_000
 TRC_CYCLES_PER_64MS = 1.5e6
 REFRESH_WINDOW_MS = 64.0
 
+# D1b fixed reference values (not derived from geometry).
+D1B_C_BL_FF = 20.0
+D1B_BIT_DENSITY_GB_MM2 = 0.435
+D1B_TRC_NS = 21.3
+D1B_BLSA_AREA_UM2 = 0.44
+D1B_E_SA_FJ = 0.9            # larger SA, higher-voltage internal nodes
+
+# 3D design energy calibration
+E_SA_FJ = 0.59               # BLSA latch energy per sense (3D design)
+ENERGY_EFF = 0.975           # switching activity / adiabatic factor
+
 
 # --------------------------------------------------------------------------
 # Per-technology calibration
@@ -96,6 +107,19 @@ class TechCal:
     sa_tau_ns: float            # BLSA regenerative time constant
     r_pre_kohm: float           # precharge/equalize device resistance
     r_sa_drive_kohm: float      # SA restore drive resistance
+    # --- declarative sweep capabilities (design-space registry) ---
+    # These replace name-based special cases: a 2D baseline, its allowed
+    # routing schemes, and its valid layer grid are *declared* here, so
+    # registry-added technologies sweep correctly without editing the DSE.
+    baseline_2d: bool = False             # planar reference (no CBA bonding)
+    allowed_schemes: tuple | None = None  # None -> every registered scheme
+    layer_grid: tuple | None = None       # None -> the sweep's layer grid
+    fixed_c_bl_ff: float = 0.0            # baseline_2d: tabulated C_BL
+    fixed_density_gb_mm2: float = 0.0     # baseline_2d: tabulated density
+    fixed_blsa_area_um2: float = 0.0      # baseline_2d: tabulated BLSA area
+    baseline_label: str = ""              # baseline_2d: report row label
+    e_sa_fj: float = E_SA_FJ              # BLSA latch energy per sense
+    vpp: float = VPP_3D                   # WL overdrive
 
     def with_(self, **kw) -> "TechCal":
         return replace(self, **kw)
@@ -153,20 +177,54 @@ D1B = TechCal(
     fbe_loss_mv=0.0, rh_loss_mv=12.0,
     hcb_route_span_um=0.0,
     t_overhead_ns=11.5, sa_tau_ns=1.2, r_pre_kohm=8.0, r_sa_drive_kohm=8.0,
+    baseline_2d=True, allowed_schemes=("direct",), layer_grid=(1,),
+    fixed_c_bl_ff=D1B_C_BL_FF, fixed_density_gb_mm2=D1B_BIT_DENSITY_GB_MM2,
+    fixed_blsa_area_um2=D1B_BLSA_AREA_UM2, baseline_label="D1b 2D baseline",
+    e_sa_fj=D1B_E_SA_FJ, vpp=VPP_D1B,
 )
 
-TECHS = {"si": SI, "aos": AOS, "d1b": D1B}
 
-# D1b fixed reference values (not derived from geometry).
-D1B_C_BL_FF = 20.0
-D1B_BIT_DENSITY_GB_MM2 = 0.435
-D1B_TRC_NS = 21.3
-D1B_BLSA_AREA_UM2 = 0.44
-D1B_E_SA_FJ = 0.9            # larger SA, higher-voltage internal nodes
+# --------------------------------------------------------------------------
+# Technology registry
+# --------------------------------------------------------------------------
+# TECHS is the live registry: `register_tech` adds calibration corners
+# without editing this module, and every DesignSpace builder reads it.
 
-# 3D design energy calibration
-E_SA_FJ = 0.59               # BLSA latch energy per sense (3D design)
-ENERGY_EFF = 0.975           # switching activity / adiabatic factor
+TECHS: dict = {}
+
+
+def register_tech(tech: TechCal, overwrite: bool = False) -> TechCal:
+    """Register a technology corner so DSE builders can sweep it.
+
+    The tech's declarative capability fields (`baseline_2d`,
+    `allowed_schemes`, `layer_grid`) tell the design-space builders how to
+    sweep it — no name-based special cases anywhere downstream.
+    """
+    if not tech.name:
+        raise ValueError("technology must have a non-empty name")
+    if tech.name in TECHS and not overwrite:
+        raise ValueError(f"technology {tech.name!r} is already registered "
+                         "(pass overwrite=True to replace it)")
+    TECHS[tech.name] = tech
+    return tech
+
+
+def unregister_tech(name: str) -> None:
+    """Remove a registered technology (primarily for test cleanup)."""
+    TECHS.pop(name, None)
+
+
+def get_tech(name: str) -> TechCal:
+    try:
+        return TECHS[name]
+    except KeyError:
+        raise KeyError(f"unknown technology {name!r}; registered: "
+                       f"{sorted(TECHS)}") from None
+
+
+for _tech in (SI, AOS, D1B):
+    register_tech(_tech)
+del _tech
 
 # Strap organization (Fig. 5): 16 WLs and 8 BLs share one strap region.
 WLS_PER_STRAP = 16

@@ -7,6 +7,7 @@
 
 from __future__ import annotations
 
+import numpy as np
 import jax.numpy as jnp
 
 from . import calibration as cal
@@ -19,12 +20,27 @@ def cell_area_nm2(tech: TechCal) -> float:
 
 
 def bit_density_gb_mm2(tech: TechCal, layers) -> jnp.ndarray:
-    if tech.name == "d1b":
+    if tech.baseline_2d:
         return jnp.full_like(jnp.asarray(layers, jnp.float32),
-                             cal.D1B_BIT_DENSITY_GB_MM2)
+                             tech.fixed_density_gb_mm2)
     layers = jnp.asarray(layers, jnp.float32)
     per_layer = tech.array_efficiency / cell_area_nm2(tech) * NM2_PER_MM2 / GBIT
     return layers * per_layer
+
+
+def bit_density_lowered(view) -> jnp.ndarray:
+    """Array-native bit density over a lowered design space (see core.space)."""
+    baseline = view.tech("baseline_2d")
+    area = view.tech("cell_x_nm") * view.tech("cell_y_nm")
+    per_layer = (view.tech("array_efficiency")
+                 / np.where(area > 0, area, 1.0) * NM2_PER_MM2 / GBIT)
+    return jnp.where(baseline, view.tech("fixed_density_gb_mm2"),
+                     view.layers * per_layer).astype(jnp.float32)
+
+
+def stack_height_lowered(view) -> jnp.ndarray:
+    """Array-native stack height over a lowered design space."""
+    return (view.layers * view.tech("layer_height_nm") * 1e-3).astype(jnp.float32)
 
 
 def layers_for_density(tech: TechCal, density_gb_mm2) -> jnp.ndarray:

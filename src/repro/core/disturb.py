@@ -43,9 +43,31 @@ def disturb_loss_mv(tech: TechCal, scheme: str, layers,
     # non-isolated schemes keep every cell coupled to global-BL swings:
     # additional BL-disturb term (half the FBE-equivalent, both techs).
     bl_disturb = jnp.where(
-        SCHEME_ISOLATES_UNSELECTED.get(scheme, True) or tech.name == "d1b",
+        SCHEME_ISOLATES_UNSELECTED.get(scheme, True) or tech.baseline_2d,
         0.0, 15.0 * layer_scale * duty_fbe)
     return fbe + rh + bl_disturb
+
+
+def disturb_loss_lowered(view) -> jnp.ndarray:
+    """Array-native FBE+RH loss over a lowered design space (core.space).
+
+    Disturb-duty corner axes registered on the space
+    (`DesignSpace.with_corners(rh_toggles=..., trc_cycles=...)`) flow in
+    here per design point — Monte-Carlo corners are just more batch rows.
+    """
+    layer_scale = view.layers / jnp.maximum(
+        jnp.asarray(view.tech("layers_target"), jnp.float32), 1.0)
+    duty_rh = (view.corner("rh_toggles", cal.RH_TOGGLES_PER_64MS)
+               / cal.RH_TOGGLES_PER_64MS)
+    duty_fbe = (view.corner("trc_cycles", cal.TRC_CYCLES_PER_64MS)
+                / cal.TRC_CYCLES_PER_64MS)
+
+    fbe = view.tech("fbe_loss_mv") * layer_scale * duty_fbe
+    rh = view.tech("rh_loss_mv") * layer_scale * duty_rh
+    bl_disturb = jnp.where(
+        view.scheme("isolates_unselected") | view.tech("baseline_2d"),
+        0.0, 15.0 * layer_scale * duty_fbe)
+    return (fbe + rh + bl_disturb).astype(jnp.float32)
 
 
 def off_state_leakage_note(tech: TechCal) -> str:

@@ -1,55 +1,203 @@
 """Design-space exploration — the "co-optimization" of the paper's title.
 
-Sweeps (technology x routing scheme x layer count) fully vectorized, scores
-every design point on density / margin / latency / energy / bonding
-feasibility, and extracts the feasible Pareto front.  This is what turns
-the calibrated physics models into the paper's conclusion: the selector+
-strap topology is the only corner that is simultaneously manufacturable
-(pitch), functional (margin), and fast/efficient.
+Array-native flow (the public API):
+
+    space = DesignSpace.paper_grid()        # declarative (core.space)
+    batch = sweep(space)                    # ONE vectorized evaluation
+    front = pareto_front(batch)             # masked array dominance
+    best  = best_design(batch)              # paper's selection rule
+
+`sweep` lowers the whole (tech x scheme x layers [x corners]) space to a
+flat operand batch and pipes every metric — density, margin, energy,
+bonding geometry, and the fused row-cycle tRC — through array ops end to
+end: no per-combo Python loop anywhere, and the resulting `DesignBatch`
+is a jit/vmap/sharding-compatible pytree (see core.batch).
+
+This is what turns the calibrated physics models into the paper's
+conclusion: the selector+strap topology is the only corner that is
+simultaneously manufacturable (pitch), functional (margin), and
+fast/efficient.
+
+Legacy surface: `full_sweep` / `evaluate_grid` still return the old
+`list[DesignPoint]` (deprecated; thin views over the batch), and
+`pareto_front` / `best_design` accept either a `DesignBatch` or a list.
 """
 
 from __future__ import annotations
-
-from dataclasses import dataclass
 
 import numpy as np
 import jax.numpy as jnp
 
 from . import calibration as cal
+from .batch import DesignBatch, DesignPoint
 from .calibration import TECHS, TechCal
-from .density import bit_density_gb_mm2, stack_height_um
-from .energy import read_energy_fj, write_energy_fj
-from .netlist import effective_cbl_ff
-from .routing import SCHEMES, bonding_geometry
-from .sense import sense_margin_mv
+from .density import (bit_density_gb_mm2, bit_density_lowered,
+                      stack_height_lowered, stack_height_um)
+from .energy import (read_energy_fj, read_energy_lowered, write_energy_fj,
+                     write_energy_lowered)
+from .netlist import build_ladder_lowered, effective_cbl_ff
+from .parasitics import bl_parasitics_lowered
+from .routing import SCHEMES, bonding_geometry, bonding_geometry_lowered
+from .sense import sense_margin_lowered, sense_margin_mv
+from .space import DesignSpace
+from . import transient
 from .transient import simulate_row_cycle, simulate_row_cycle_many
 
+__all__ = [
+    "DesignBatch", "DesignPoint", "DesignSpace",
+    "sweep", "pareto_mask", "pareto_front", "best_design",
+    "full_sweep", "evaluate_grid", "sweep_combos",
+]
 
-@dataclass(frozen=True)
-class DesignPoint:
-    tech: str
-    scheme: str
-    layers: int
-    density_gb_mm2: float
-    height_um: float
-    cbl_ff: float
-    margin_mv: float
-    margin_disturbed_mv: float
-    trc_ns: float
-    e_write_fj: float
-    e_read_fj: float
-    hcb_pitch_um: float
-    blsa_area_um2: float
-    feasible: bool
+# Corner axes `sweep` knows how to route into the physics models.
+SUPPORTED_CORNER_AXES = ("rh_toggles", "trc_cycles")
 
+
+# ---------------------------------------------------------------------------
+# The vectorized sweep
+# ---------------------------------------------------------------------------
+
+def sweep(space: DesignSpace | None = None, with_transient: bool = True,
+          backend: str = "auto",
+          b_chunk: int = transient.DEFAULT_B_CHUNK) -> DesignBatch:
+    """Score a whole `DesignSpace` in one vectorized pass -> `DesignBatch`.
+
+    All metrics are computed as flat (B,) arrays over the lowered space;
+    the transient row-cycle times come from ONE chunked pass through the
+    fused engine (`transient.simulate_row_cycle_many` on the lowered
+    operand batch) — never a per-combo transient call.
+    """
+    if space is None:
+        space = DesignSpace.paper_grid()
+    sp = space.lower()
+    unknown = [k for k in sp.corners if k not in SUPPORTED_CORNER_AXES]
+    if unknown:
+        raise ValueError(f"unsupported corner axes {unknown}; sweep "
+                         f"understands {SUPPORTED_CORNER_AXES}")
+
+    par = bl_parasitics_lowered(sp)
+    cbl = par.c_bl_total_ff
+    dens = bit_density_lowered(sp)
+    height = stack_height_lowered(sp)
+    margin = sense_margin_lowered(sp, cbl_ff=cbl)
+    margin_d = sense_margin_lowered(sp, with_disturb=True, cbl_ff=cbl)
+    e_wr = write_energy_lowered(sp, cbl_ff=cbl)
+    e_rd = read_energy_lowered(sp, cbl_ff=cbl)
+    geom = bonding_geometry_lowered(sp)
+
+    if with_transient:
+        ladder_c, ladder_g = build_ladder_lowered(sp, par)
+        operands = transient.lower_design_operands(
+            sp, ladder_c=ladder_c, ladder_g=ladder_g)
+        res = simulate_row_cycle_many(operands, backend=backend,
+                                      b_chunk=b_chunk)
+        trc, t_sense = res.trc_ns, res.t_sense_ns
+    else:
+        trc = jnp.full((len(sp),), jnp.nan, jnp.float32)
+        t_sense = trc
+
+    valid = jnp.asarray(sp.valid)
+    feasible = (geom.manufacturable
+                & (margin >= cal.MIN_FUNCTIONAL_MARGIN_MV - 1e-9)
+                & (margin_d >= cal.MIN_DISTURBED_MARGIN_MV - 1e-9)
+                & valid)
+
+    return DesignBatch(
+        tech_idx=jnp.asarray(sp.tech_idx), scheme_idx=jnp.asarray(sp.scheme_idx),
+        layers=sp.layers, density_gb_mm2=dens, height_um=height,
+        cbl_ff=cbl.astype(jnp.float32), margin_mv=margin,
+        margin_disturbed_mv=margin_d, trc_ns=trc, t_sense_ns=t_sense,
+        e_write_fj=e_wr, e_read_fj=e_rd,
+        hcb_pitch_um=geom.hcb_pitch_um.astype(jnp.float32),
+        blsa_area_um2=geom.blsa_area_um2.astype(jnp.float32),
+        manufacturable=geom.manufacturable, feasible=feasible, valid=valid,
+        corners={k: jnp.asarray(v) for k, v in sp.corners.items()},
+        tech_names=sp.tech_names, scheme_names=sp.scheme_names)
+
+
+# ---------------------------------------------------------------------------
+# Pareto front / selection (vectorized dominance)
+# ---------------------------------------------------------------------------
+
+def pareto_mask(batch: DesignBatch, require_feasible: bool = True,
+                block: int = 4096) -> jnp.ndarray:
+    """Non-dominated mask maximizing density & disturbed margin, minimizing
+    tRC & read energy.  Pure jnp (jit-compatible): the O(n^2) pairwise
+    comparison runs as masked broadcasts over fixed-size dominator blocks,
+    so peak memory is O(block * B), not O(B^2) — million-point sharded
+    sweeps stay tractable (tune `block` down for very large batches).
+
+    NaN metrics (e.g. tRC with `with_transient=False`) never dominate and
+    are never dominated — matching the legacy pairwise semantics.
+    """
+    cand = batch.valid
+    if require_feasible:
+        cand = cand & batch.feasible
+    hi = jnp.stack([batch.density_gb_mm2, batch.margin_disturbed_mv], axis=1)
+    lo = jnp.stack([batch.trc_ns, batch.e_read_fj], axis=1)
+    b = hi.shape[0]
+    dominated = jnp.zeros((b,), bool)
+    for i0 in range(0, b, block):          # dominator blocks (static count)
+        hi_i, lo_i = hi[i0:i0 + block], lo[i0:i0 + block]
+        cand_i = cand[i0:i0 + block]
+        ge = ((hi_i[:, None, :] >= hi[None, :, :]).all(-1)
+              & (lo_i[:, None, :] <= lo[None, :, :]).all(-1))
+        gt = ((hi_i[:, None, :] > hi[None, :, :]).any(-1)
+              | (lo_i[:, None, :] < lo[None, :, :]).any(-1))
+        dominated |= (ge & gt & cand_i[:, None] & cand[None, :]).any(axis=0)
+    return cand & ~dominated
+
+
+def _as_batch(points_or_batch):
+    if isinstance(points_or_batch, DesignBatch):
+        return points_or_batch, None
+    points = list(points_or_batch)
+    return DesignBatch.from_points(points), points
+
+
+def pareto_front(points_or_batch, require_feasible: bool = True):
+    """Non-dominated set.  `DesignBatch` in -> filtered `DesignBatch` out;
+    legacy `list[DesignPoint]` in -> list out (order preserved)."""
+    batch, points = _as_batch(points_or_batch)
+    mask = np.asarray(pareto_mask(batch, require_feasible))
+    if points is None:
+        return batch.select(mask)
+    return [p for p, m in zip(points, mask) if m]
+
+
+def best_design(points_or_batch,
+                density_target: float = cal.DENSITY_TARGET_GB_MM2):
+    """The paper's selection rule: hit the density target with a functional,
+    manufacturable design; break ties by tRC then read energy then height.
+    Accepts a `DesignBatch` or the legacy list; returns a `DesignPoint`
+    (or None if nothing qualifies)."""
+    batch, points = _as_batch(points_or_batch)
+    cand = (np.asarray(batch.valid) & np.asarray(batch.feasible)
+            & (np.asarray(batch.density_gb_mm2) >= density_target - 1e-9))
+    idx = np.flatnonzero(cand)
+    if idx.size == 0:
+        return None
+    trc = np.asarray(batch.trc_ns, np.float64)[idx]
+    trc = np.where(np.isnan(trc), np.inf, trc)
+    e_rd = np.asarray(batch.e_read_fj, np.float64)[idx]
+    height = np.asarray(batch.height_um, np.float64)[idx]
+    order = np.lexsort((height, e_rd, trc))     # last key is primary
+    best = int(idx[order[0]])
+    return points[best] if points is not None else batch.point(best)
+
+
+# ---------------------------------------------------------------------------
+# Legacy list[DesignPoint] surface (deprecated)
+# ---------------------------------------------------------------------------
 
 def evaluate_grid(tech: TechCal, scheme: str, layers: np.ndarray,
                   with_transient: bool = True,
                   trc: np.ndarray | None = None) -> list[DesignPoint]:
     """Evaluate a vector of layer counts for one (tech, scheme).
 
-    `trc` may carry precomputed row-cycle times (e.g. from the batched
-    fused sweep in `full_sweep`); otherwise the transient engine runs here.
+    Deprecated reference path: per-(tech, scheme) scalar evaluation kept
+    as the equivalence oracle for the vectorized `sweep`.  `trc` may carry
+    precomputed row-cycle times; otherwise the transient engine runs here.
     """
     arr = jnp.asarray(layers)
     dens = np.asarray(bit_density_gb_mm2(tech, arr))
@@ -62,7 +210,7 @@ def evaluate_grid(tech: TechCal, scheme: str, layers: np.ndarray,
     geom = bonding_geometry(tech, scheme)
     pitch = float(geom.hcb_pitch_um)
     blsa = float(geom.blsa_area_um2)
-    manufacturable = bool(geom.manufacturable) or tech.name == "d1b"
+    manufacturable = bool(geom.manufacturable) or tech.baseline_2d
     if trc is not None:
         trc = np.asarray(trc)
     elif with_transient:
@@ -86,14 +234,19 @@ def evaluate_grid(tech: TechCal, scheme: str, layers: np.ndarray,
 
 
 def sweep_combos(layer_grid: np.ndarray) -> list[tuple[TechCal, str, np.ndarray]]:
-    """The (tech, scheme, layer-grid) combos of the full design space."""
+    """The (tech, scheme, layer-grid) combos of the full design space.
+
+    Deprecated: capability flags on each registered `TechCal` drive this
+    now (no name-based special cases); new code should build a
+    `DesignSpace` instead.
+    """
     combos: list[tuple[TechCal, str, np.ndarray]] = []
-    for tname, tech in TECHS.items():
-        if tname == "d1b":
-            combos.append((tech, "direct", np.array([1])))
-            continue
-        for scheme in SCHEMES:
-            combos.append((tech, scheme, layer_grid))
+    for tech in TECHS.values():
+        schemes = tech.allowed_schemes or tuple(SCHEMES)
+        grid = (np.asarray(tech.layer_grid) if tech.layer_grid is not None
+                else layer_grid)
+        for scheme in schemes:
+            combos.append((tech, scheme, grid))
     return combos
 
 
@@ -101,49 +254,11 @@ def full_sweep(layer_grid: np.ndarray | None = None,
                with_transient: bool = True) -> list[DesignPoint]:
     """Sweep the whole (tech x scheme x layers) design space.
 
-    The transient row-cycle times for ALL combos are produced by one
-    batched, chunked pass through the fused engine
-    (`simulate_row_cycle_many`) — not by per-combo transient calls.
+    Deprecated compatibility shim: equivalent to
+    `sweep(DesignSpace.paper_grid(layer_grid)).to_points()`.  One batched
+    fused-engine pass computes every transient, exactly like `sweep`.
     """
-    if layer_grid is None:
-        layer_grid = np.array([32, 48, 64, 87, 100, 120, 137, 160, 200])
-    combos = sweep_combos(layer_grid)
-    if with_transient:
-        trcs = [np.asarray(r.trc_ns)
-                for r in simulate_row_cycle_many(combos)]
-    else:
-        trcs = [None] * len(combos)
-    out: list[DesignPoint] = []
-    for (tech, scheme, grid), trc in zip(combos, trcs):
-        out.extend(evaluate_grid(tech, scheme, grid,
-                                 with_transient=with_transient, trc=trc))
-    return out
-
-
-def pareto_front(points: list[DesignPoint],
-                 require_feasible: bool = True) -> list[DesignPoint]:
-    """Non-dominated set maximizing density & margin, minimizing tRC & E."""
-    cand = [p for p in points if (p.feasible or not require_feasible)]
-
-    def dominates(a: DesignPoint, b: DesignPoint) -> bool:
-        ge = (a.density_gb_mm2 >= b.density_gb_mm2
-              and a.margin_disturbed_mv >= b.margin_disturbed_mv
-              and a.trc_ns <= b.trc_ns and a.e_read_fj <= b.e_read_fj)
-        gt = (a.density_gb_mm2 > b.density_gb_mm2
-              or a.margin_disturbed_mv > b.margin_disturbed_mv
-              or a.trc_ns < b.trc_ns or a.e_read_fj < b.e_read_fj)
-        return ge and gt
-
-    return [p for p in cand
-            if not any(dominates(q, p) for q in cand if q is not p)]
-
-
-def best_design(points: list[DesignPoint],
-                density_target: float = cal.DENSITY_TARGET_GB_MM2):
-    """The paper's selection rule: hit the density target with a functional,
-    manufacturable design; break ties by tRC then read energy."""
-    ok = [p for p in points if p.feasible
-          and p.density_gb_mm2 >= density_target - 1e-9]
-    if not ok:
-        return None
-    return min(ok, key=lambda p: (p.trc_ns, p.e_read_fj, p.height_um))
+    grid = None if layer_grid is None else tuple(
+        float(x) for x in np.asarray(layer_grid).reshape(-1))
+    space = DesignSpace.paper_grid(layer_grid=grid)
+    return sweep(space, with_transient=with_transient).to_points()

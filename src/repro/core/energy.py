@@ -26,11 +26,30 @@ def write_energy_fj(tech: TechCal, scheme: str, layers) -> jnp.ndarray:
 def read_energy_fj(tech: TechCal, scheme: str, layers) -> jnp.ndarray:
     cbl = effective_cbl_ff(tech, scheme, layers) + tech.c_route_extra_ff
     v = cal.VDD_ARRAY / 2.0
-    e_sa = cal.D1B_E_SA_FJ if tech.name == "d1b" else cal.E_SA_FJ
-    return 0.5 * cbl * v * v * cal.ENERGY_EFF + e_sa
+    return 0.5 * cbl * v * v * cal.ENERGY_EFF + tech.e_sa_fj
+
+
+def write_energy_lowered(view, cbl_ff: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Array-native write energy over a lowered design space (core.space)."""
+    from .netlist import effective_cbl_lowered
+    if cbl_ff is None:
+        cbl_ff = effective_cbl_lowered(view)
+    cbl = cbl_ff + view.tech("c_route_extra_ff")
+    v = cal.VDD_ARRAY
+    return (0.5 * (cal.CS_FF + cbl) * v * v * cal.ENERGY_EFF).astype(jnp.float32)
+
+
+def read_energy_lowered(view, cbl_ff: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Array-native read energy over a lowered design space (core.space)."""
+    from .netlist import effective_cbl_lowered
+    if cbl_ff is None:
+        cbl_ff = effective_cbl_lowered(view)
+    cbl = cbl_ff + view.tech("c_route_extra_ff")
+    v = cal.VDD_ARRAY / 2.0
+    return (0.5 * cbl * v * v * cal.ENERGY_EFF
+            + view.tech("e_sa_fj")).astype(jnp.float32)
 
 
 def wl_energy_fj(tech: TechCal) -> jnp.ndarray:
     """WL driver energy per activation (the 3D design's reduced VPP pays off)."""
-    vpp = cal.VPP_D1B if tech.name == "d1b" else cal.VPP_3D
-    return 0.5 * tech.c_wl_ff * vpp * vpp
+    return 0.5 * tech.c_wl_ff * tech.vpp * tech.vpp

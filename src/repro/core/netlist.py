@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from . import calibration as cal
 from .calibration import TechCal
-from .parasitics import bl_parasitics
+from .parasitics import bl_parasitics, bl_parasitics_lowered
 
 N_BL_SEGMENTS = 4
 N_NODES = N_BL_SEGMENTS + 2
@@ -39,14 +39,15 @@ class Ladder:
         return self.c.shape[-1]
 
 
-def build_bl_ladder(tech: TechCal, scheme: str, layers) -> Ladder:
-    """Assemble the batched sensing-path ladder for a technology/scheme.
+def assemble_ladder_arrays(par, r_local_bl_kohm):
+    """(B, N) node caps + (B, N-1) branch conductances from a parasitic
+    decomposition.
 
-    `layers` may be a scalar or a 1-D array of design points (the batch).
+    `par` holds (B,)-shaped `BLParasitics` arrays; `r_local_bl_kohm` may be
+    a scalar (one tech) or a (B,) array (the lowered DSE path) — the
+    assembly is identical, so the two paths cannot drift.
     """
-    layers = jnp.atleast_1d(jnp.asarray(layers, jnp.float32))
-    par = bl_parasitics(tech, scheme, layers)
-    b = layers.shape[0]
+    b = par.c_local_ff.shape[0]
     k = N_BL_SEGMENTS
 
     c = jnp.zeros((b, N_NODES), jnp.float32)
@@ -58,15 +59,44 @@ def build_bl_ladder(tech: TechCal, scheme: str, layers) -> Ladder:
     c = c.at[:, k + 1].set(cal.CS_FF)
 
     g = jnp.zeros((b, N_NODES - 1), jnp.float32)
-    r_front = par.r_path_kohm - tech.r_local_bl_kohm  # selector+global part
+    r_front = par.r_path_kohm - r_local_bl_kohm       # selector+global part
     r_front = jnp.maximum(r_front, 0.05)
     g = g.at[:, 0].set(1.0 / r_front)
-    r_seg = jnp.maximum(tech.r_local_bl_kohm / k, 0.05)
-    g = g.at[:, 1:k].set(1.0 / r_seg)
+    r_seg = jnp.maximum(jnp.asarray(r_local_bl_kohm, jnp.float32) / k, 0.05)
+    inv_seg = 1.0 / r_seg
+    g = g.at[:, 1:k].set(inv_seg if inv_seg.ndim == 0 else inv_seg[:, None])
     g = g.at[:, k].set(1.0 / par.r_on_kohm)           # access transistor
+    return c, g
+
+
+def build_bl_ladder(tech: TechCal, scheme: str, layers) -> Ladder:
+    """Assemble the batched sensing-path ladder for a technology/scheme.
+
+    `layers` may be a scalar or a 1-D array of design points (the batch).
+    """
+    layers = jnp.atleast_1d(jnp.asarray(layers, jnp.float32))
+    par = bl_parasitics(tech, scheme, layers)
+    c, g = assemble_ladder_arrays(par, tech.r_local_bl_kohm)
     return Ladder(c=c, g_branch=g, tech_name=tech.name, scheme=scheme)
+
+
+def build_ladder_lowered(view, par=None):
+    """(B, N) / (B, N-1) ladder arrays over a lowered design space.
+
+    Pass `par` to reuse an already-assembled `BLParasitics` (the DSE sweep
+    computes it once for every metric).  Returns plain (c, g) arrays — the
+    fused transient engine consumes them directly.
+    """
+    if par is None:
+        par = bl_parasitics_lowered(view)
+    return assemble_ladder_arrays(par, view.tech("r_local_bl_kohm"))
 
 
 def effective_cbl_ff(tech: TechCal, scheme: str, layers) -> jnp.ndarray:
     """Effective C_BL (all capacitance the cell must share charge with)."""
     return bl_parasitics(tech, scheme, layers).c_bl_total_ff
+
+
+def effective_cbl_lowered(view) -> jnp.ndarray:
+    """Array-native effective C_BL over a lowered design space."""
+    return bl_parasitics_lowered(view).c_bl_total_ff

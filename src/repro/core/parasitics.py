@@ -13,7 +13,7 @@ from dataclasses import dataclass
 
 import jax.numpy as jnp
 
-from . import calibration as cal
+from . import routing
 from .calibration import TechCal
 
 
@@ -40,71 +40,102 @@ def local_bl_cap_ff(tech: TechCal, layers) -> jnp.ndarray:
     return layers * tech.c_bl_per_layer_ff + tech.c_sel_junction_ff
 
 
-def bl_parasitics(tech: TechCal, scheme: str, layers) -> BLParasitics:
-    """Assemble the BL network for one of the four routing schemes (Fig. 2).
+def _assemble(layers, *, baseline_2d, fixed_c_bl_ff, c_bl_per_layer_ff,
+              c_sel_junction_ff, c_global_strap_ff, c_hcb_pad_ff,
+              c_blsa_in_ff, r_on_cell_kohm, r_sel_kohm, r_local_bl_kohm,
+              r_global_kohm, sel_junction, straps_per_global,
+              global_strap_metal, c_global_fixed_ff, r_sel_in_path,
+              r_global_in_path) -> BLParasitics:
+    """Coefficient-driven BL-network assembly (Fig. 2).
 
-    Schemes:
-      direct    : every vertical BL is bonded straight to its own BLSA.
-                  No selector junction, no global strap metal.
-      strap     : BLs strapped onto a global line; *all* straps on the line
-                  stay electrically connected (no isolation).
-      core_mux  : mux at the array core; local BL + short metal to the mux,
-                  mux junction; still one bond per mux output at tight pitch.
-      sel_strap : the paper's proposal; selector isolates unselected straps,
-                  so the global line sees only junctions + one local BL.
+    Every argument may be a scalar (one tech/scheme, batched over layers)
+    or a per-design-point array (the lowered DSE path) — the arithmetic is
+    identical, so the scalar API and the vectorized sweep cannot drift.
+
+    The *structure* a SchemeSpec encodes: with a BL selector, only the
+    selected strap's local BL hangs on the global line; without isolation,
+    every strap on the line (`straps_per_global`) contributes its local
+    capacitance.  A 2D baseline bypasses the stacked decomposition and uses
+    its tabulated lateral C_BL; its lateral IO routing (c_route_extra) sits
+    *behind* the column select and is charged to the energy model, not to
+    the sensing ladder.
     """
     layers = jnp.asarray(layers, jnp.float32)
     zero = jnp.zeros_like(layers)
-    c_vert = layers * tech.c_bl_per_layer_ff
+    c_vert = layers * c_bl_per_layer_ff
 
-    if tech.name == "d1b":
-        # Planar baseline: fixed long lateral BL, no stacking.  The lateral
-        # IO routing (c_route_extra) sits *behind* the column select and is
-        # swung only on data transfer -> it is charged to the energy model,
-        # not to the sensing ladder.
-        c_local = jnp.full_like(layers, cal.D1B_C_BL_FF - tech.c_blsa_in_ff)
-        return BLParasitics(
-            c_local_ff=c_local,
-            c_unselected_ff=zero,
-            c_global_ff=zero,
-            c_sa_ff=zero + tech.c_blsa_in_ff,
-            r_path_kohm=zero + tech.r_local_bl_kohm,
-            r_on_kohm=zero + tech.r_on_cell_kohm,
-        )
-
-    if scheme == "direct":
-        c_local = c_vert
-        c_unsel = zero
-        c_glob = zero + tech.c_hcb_pad_ff
-        r_path = zero + tech.r_local_bl_kohm
-    elif scheme == "strap":
-        # no selector: every strap's local BL + its junctionless tap loads
-        # the global line.
-        c_local = c_vert
-        c_unsel = (cal.STRAPS_PER_GLOBAL - 1) * c_vert
-        c_glob = zero + tech.c_global_strap_ff + tech.c_hcb_pad_ff
-        r_path = zero + tech.r_local_bl_kohm + tech.r_global_kohm
-    elif scheme == "core_mux":
-        c_local = c_vert + tech.c_sel_junction_ff
-        c_unsel = zero
-        c_glob = zero + 0.4 + tech.c_hcb_pad_ff      # short metal to core mux
-        r_path = zero + tech.r_local_bl_kohm + tech.r_sel_kohm
-    elif scheme == "sel_strap":
-        c_local = c_vert + tech.c_sel_junction_ff
-        c_unsel = zero                               # isolated by the selector
-        c_glob = zero + tech.c_global_strap_ff + tech.c_hcb_pad_ff
-        r_path = (zero + tech.r_local_bl_kohm + tech.r_sel_kohm
-                  + tech.r_global_kohm)
-    else:
-        raise ValueError(f"unknown routing scheme: {scheme}")
+    c_local_3d = c_vert + jnp.where(sel_junction, c_sel_junction_ff, 0.0)
+    c_unsel_3d = (straps_per_global - 1) * c_vert
+    c_glob_3d = (jnp.where(global_strap_metal, c_global_strap_ff, 0.0)
+                 + c_global_fixed_ff + c_hcb_pad_ff)
+    r_path_3d = (r_local_bl_kohm
+                 + jnp.where(r_sel_in_path, r_sel_kohm, 0.0)
+                 + jnp.where(r_global_in_path, r_global_kohm, 0.0))
 
     return BLParasitics(
-        c_local_ff=c_local,
-        c_unselected_ff=c_unsel,
-        c_global_ff=c_glob,
-        c_sa_ff=zero + tech.c_blsa_in_ff,
-        r_path_kohm=r_path,
-        r_on_kohm=zero + tech.r_on_cell_kohm,
+        c_local_ff=jnp.where(baseline_2d, fixed_c_bl_ff - c_blsa_in_ff,
+                             c_local_3d) + zero,
+        c_unselected_ff=jnp.where(baseline_2d, 0.0, c_unsel_3d) + zero,
+        c_global_ff=jnp.where(baseline_2d, 0.0, c_glob_3d) + zero,
+        c_sa_ff=zero + c_blsa_in_ff,
+        r_path_kohm=jnp.where(baseline_2d, r_local_bl_kohm,
+                              r_path_3d) + zero,
+        r_on_kohm=zero + r_on_cell_kohm,
+    )
+
+
+def bl_parasitics(tech: TechCal, scheme: str, layers) -> BLParasitics:
+    """Assemble the BL network for one (tech, scheme), batched over layers.
+
+    The scheme's structure comes from its registered `SchemeSpec`
+    (`routing.register_scheme`) — no per-name branches here.
+    """
+    spec = routing.scheme_spec(scheme)
+    return _assemble(
+        layers,
+        baseline_2d=tech.baseline_2d, fixed_c_bl_ff=tech.fixed_c_bl_ff,
+        c_bl_per_layer_ff=tech.c_bl_per_layer_ff,
+        c_sel_junction_ff=tech.c_sel_junction_ff,
+        c_global_strap_ff=tech.c_global_strap_ff,
+        c_hcb_pad_ff=tech.c_hcb_pad_ff, c_blsa_in_ff=tech.c_blsa_in_ff,
+        r_on_cell_kohm=tech.r_on_cell_kohm, r_sel_kohm=tech.r_sel_kohm,
+        r_local_bl_kohm=tech.r_local_bl_kohm,
+        r_global_kohm=tech.r_global_kohm,
+        sel_junction=spec.sel_junction,
+        straps_per_global=spec.straps_per_global,
+        global_strap_metal=spec.global_strap_metal,
+        c_global_fixed_ff=spec.c_global_fixed_ff,
+        r_sel_in_path=spec.r_sel_in_path,
+        r_global_in_path=spec.r_global_in_path,
+    )
+
+
+def bl_parasitics_lowered(view) -> BLParasitics:
+    """Array-native BL networks over a lowered design space.
+
+    `view` follows the LoweredSpace protocol (`core.space`): per-point
+    `.layers` plus `.tech(field)` / `.scheme(field)` gathers.  One call
+    covers every (tech, scheme, layers) point of the flat batch.
+    """
+    return _assemble(
+        view.layers,
+        baseline_2d=view.tech("baseline_2d"),
+        fixed_c_bl_ff=view.tech("fixed_c_bl_ff"),
+        c_bl_per_layer_ff=view.tech("c_bl_per_layer_ff"),
+        c_sel_junction_ff=view.tech("c_sel_junction_ff"),
+        c_global_strap_ff=view.tech("c_global_strap_ff"),
+        c_hcb_pad_ff=view.tech("c_hcb_pad_ff"),
+        c_blsa_in_ff=view.tech("c_blsa_in_ff"),
+        r_on_cell_kohm=view.tech("r_on_cell_kohm"),
+        r_sel_kohm=view.tech("r_sel_kohm"),
+        r_local_bl_kohm=view.tech("r_local_bl_kohm"),
+        r_global_kohm=view.tech("r_global_kohm"),
+        sel_junction=view.scheme("sel_junction"),
+        straps_per_global=view.scheme("straps_per_global"),
+        global_strap_metal=view.scheme("global_strap_metal"),
+        c_global_fixed_ff=view.scheme("c_global_fixed_ff"),
+        r_sel_in_path=view.scheme("r_sel_in_path"),
+        r_global_in_path=view.scheme("r_global_in_path"),
     )
 
 

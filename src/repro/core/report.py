@@ -6,54 +6,58 @@ Each function corresponds to a paper artifact:
   fig9b_margin_vs_density  -> Fig. 9(b): margin w/ FBE+RH vs density
   fig9c_spec_table         -> Fig. 9(c): this-work vs D1b spec comparison
   table1_summary           -> Table I "This Work" column quantities
+
+The DSE-shaped tables (fig3 / fig9b / fig9c) are generated from ONE
+vectorized `dse.sweep` over a declarative `DesignSpace` and read straight
+off the resulting `DesignBatch` columns — no per-combo model calls.
 """
 
 from __future__ import annotations
 
 import numpy as np
-import jax.numpy as jnp
 
 from . import calibration as cal
-from .calibration import AOS, D1B, SI, TECHS
-from .density import bit_density_gb_mm2, layers_for_density, stack_height_um
-from .energy import read_energy_fj, write_energy_fj
-from .netlist import effective_cbl_ff
-from .routing import SCHEME_LABELS, SCHEMES, bonding_geometry
-from .sense import sense_margin_mv
-from .transient import simulate_row_cycle
+from . import dse
+from .calibration import TECHS
+from .density import layers_for_density, stack_height_um
+from .routing import SCHEME_LABELS, SCHEMES
+from .space import DesignSpace
+
+
+def _non_baseline_techs():
+    return [t for t in TECHS.values() if not t.baseline_2d]
 
 
 def fig3_routing_comparison(with_transient: bool = True) -> list[dict]:
+    """Four routing schemes on every 3D tech at its target layer count,
+    plus the D1b reference row — one batched sweep."""
+    space = DesignSpace.points(
+        [(t.name, s, t.layers_target)
+         for t in _non_baseline_techs() for s in SCHEMES])
+    space = space + DesignSpace.points(
+        [(t.name, (t.allowed_schemes or ("direct",))[0], t.layers_target)
+         for t in TECHS.values() if t.baseline_2d])
+    batch = dse.sweep(space, with_transient=with_transient)
+
     rows = []
-    for tech in (SI, AOS):
-        layers = jnp.asarray([tech.layers_target])
-        for scheme in SCHEMES:
-            geom = bonding_geometry(tech, scheme)
-            row = dict(
-                tech=tech.name, scheme=scheme, label=SCHEME_LABELS[scheme],
-                cbl_ff=float(effective_cbl_ff(tech, scheme, layers)[0]),
-                margin_mv=float(sense_margin_mv(tech, scheme, layers)[0]),
-                hcb_pitch_um=float(geom.hcb_pitch_um),
-                blsa_area_um2=float(geom.blsa_area_um2),
-                manufacturable=bool(geom.manufacturable),
-            )
-            if with_transient:
-                res = simulate_row_cycle(tech, scheme, layers)
-                row["trc_ns"] = float(res.trc_ns[0])
-                row["t_sense_ns"] = float(res.t_sense_ns[0])
-            rows.append(row)
-    # D1b reference row
-    layers = jnp.asarray([1])
-    row = dict(tech="d1b", scheme="direct", label="D1b 2D baseline",
-               cbl_ff=float(effective_cbl_ff(D1B, "direct", layers)[0]),
-               margin_mv=float(sense_margin_mv(D1B, "direct", layers)[0]),
-               hcb_pitch_um=0.0, blsa_area_um2=cal.D1B_BLSA_AREA_UM2,
-               manufacturable=True)
-    if with_transient:
-        res = simulate_row_cycle(D1B, "direct", layers)
-        row["trc_ns"] = float(res.trc_ns[0])
-        row["t_sense_ns"] = float(res.t_sense_ns[0])
-    rows.append(row)
+    for i, (tech, scheme) in enumerate(zip(batch.tech_col, batch.scheme_col)):
+        cal_t = TECHS[tech]
+        baseline = cal_t.baseline_2d
+        row = dict(
+            tech=tech, scheme=scheme,
+            label=(cal_t.baseline_label or f"{tech} 2D baseline") if baseline
+            else SCHEME_LABELS[scheme],
+            cbl_ff=float(batch.cbl_ff[i]),
+            margin_mv=float(batch.margin_mv[i]),
+            hcb_pitch_um=float(batch.hcb_pitch_um[i]),
+            blsa_area_um2=(cal_t.fixed_blsa_area_um2 if baseline
+                           else float(batch.blsa_area_um2[i])),
+            manufacturable=bool(batch.manufacturable[i]),
+        )
+        if with_transient:
+            row["trc_ns"] = float(batch.trc_ns[i])
+            row["t_sense_ns"] = float(batch.t_sense_ns[i])
+        rows.append(row)
     return rows
 
 
@@ -61,7 +65,7 @@ def fig9a_stack_height(densities=None) -> list[dict]:
     if densities is None:
         densities = np.linspace(0.5, 3.5, 13)
     rows = []
-    for tech in (SI, AOS):
+    for tech in _non_baseline_techs():
         layers = np.asarray(layers_for_density(tech, densities))
         heights = np.asarray(stack_height_um(tech, layers))
         for d, l, h in zip(densities, layers, heights):
@@ -73,48 +77,56 @@ def fig9a_stack_height(densities=None) -> list[dict]:
 def fig9b_margin_vs_density(densities=None, scheme: str = "sel_strap") -> list[dict]:
     if densities is None:
         densities = np.linspace(0.5, 3.5, 13)
+    techs = _non_baseline_techs()
+    space = DesignSpace(entries=())
+    for tech in techs:
+        layers = np.asarray(layers_for_density(tech, densities))
+        space = space + DesignSpace.points(
+            [(tech.name, scheme, int(l)) for l in layers])
+    batch = dse.sweep(space, with_transient=False)
+
     rows = []
-    for tech in (SI, AOS):
-        layers = jnp.asarray(np.asarray(layers_for_density(tech, densities)))
-        margin = np.asarray(sense_margin_mv(tech, scheme, layers))
-        margin_d = np.asarray(sense_margin_mv(tech, scheme, layers,
-                                              with_disturb=True))
-        for d, l, m, md in zip(densities, np.asarray(layers), margin, margin_d):
+    i = 0
+    for tech in techs:
+        for d in densities:
+            md = float(batch.margin_disturbed_mv[i])
             rows.append(dict(
-                tech=tech.name, density_gb_mm2=float(d), layers=int(l),
-                margin_mv=float(m), margin_with_fbe_rh_mv=float(md),
+                tech=tech.name, density_gb_mm2=float(d),
+                layers=int(batch.layers[i]),
+                margin_mv=float(batch.margin_mv[i]),
+                margin_with_fbe_rh_mv=md,
                 functional=bool(md >= cal.MIN_DISTURBED_MARGIN_MV)))
+            i += 1
     return rows
 
 
 def fig9c_spec_table(with_transient: bool = True) -> dict:
-    """This-work (Si/AOS @ 2.6 Gb/mm^2, sel_strap) vs D1b."""
+    """This-work (Si/AOS @ 2.6 Gb/mm^2, sel_strap) vs D1b — one sweep of
+    the Table-1 target points."""
+    batch = dse.sweep(DesignSpace.paper_targets(),
+                      with_transient=with_transient)
     out = {}
-    for tech in (SI, AOS, D1B):
-        scheme = "direct" if tech.name == "d1b" else "sel_strap"
-        layers = jnp.asarray([tech.layers_target])
+    for i, tname in enumerate(batch.tech_col):
+        tech = TECHS[tname]
         entry = dict(
-            layers=int(tech.layers_target),
-            bit_density_gb_mm2=float(bit_density_gb_mm2(tech, layers)[0]),
-            stack_height_um=float(stack_height_um(tech, layers)[0]),
-            cbl_ff=float(effective_cbl_ff(tech, scheme, layers)[0]),
-            sense_margin_mv=float(sense_margin_mv(tech, scheme, layers)[0]),
-            sense_margin_disturbed_mv=float(
-                sense_margin_mv(tech, scheme, layers, with_disturb=True)[0]),
-            e_write_fj=float(write_energy_fj(tech, scheme, layers)[0]),
-            e_read_fj=float(read_energy_fj(tech, scheme, layers)[0]),
-            vpp=cal.VPP_D1B if tech.name == "d1b" else cal.VPP_3D,
+            layers=int(batch.layers[i]),
+            bit_density_gb_mm2=float(batch.density_gb_mm2[i]),
+            stack_height_um=float(batch.height_um[i]),
+            cbl_ff=float(batch.cbl_ff[i]),
+            sense_margin_mv=float(batch.margin_mv[i]),
+            sense_margin_disturbed_mv=float(batch.margin_disturbed_mv[i]),
+            e_write_fj=float(batch.e_write_fj[i]),
+            e_read_fj=float(batch.e_read_fj[i]),
+            vpp=tech.vpp,
         )
-        if tech.name != "d1b":
-            geom = bonding_geometry(tech, scheme)
-            entry["hcb_pitch_um"] = float(geom.hcb_pitch_um)
-            entry["blsa_area_um2"] = float(geom.blsa_area_um2)
+        if not tech.baseline_2d:
+            entry["hcb_pitch_um"] = float(batch.hcb_pitch_um[i])
+            entry["blsa_area_um2"] = float(batch.blsa_area_um2[i])
         else:
-            entry["blsa_area_um2"] = cal.D1B_BLSA_AREA_UM2
+            entry["blsa_area_um2"] = tech.fixed_blsa_area_um2
         if with_transient:
-            entry["trc_ns"] = float(
-                simulate_row_cycle(tech, scheme, layers).trc_ns[0])
-        out[tech.name] = entry
+            entry["trc_ns"] = float(batch.trc_ns[i])
+        out[tname] = entry
     # headline ratios
     if with_transient:
         out["ratios"] = dict(

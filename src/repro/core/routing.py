@@ -9,6 +9,12 @@ Key structural identities (derived, not tabulated):
                                                        # 8 BLs share one bond
   BLSA area         = 2 * pitch^2                      # open-BL, two bond rows
                                                        # (ref + signal) per SA
+
+Schemes are *declarative*: a `SchemeSpec` carries the structural
+coefficients the parasitic/disturb/bonding models consume, and
+`register_scheme` adds new routing topologies without editing any physics
+module.  `SCHEMES` is the live registry (an insertion-ordered dict, so
+iteration order is stable for the DSE sweep).
 """
 
 from __future__ import annotations
@@ -20,20 +26,87 @@ import jax.numpy as jnp
 from . import calibration as cal
 from .calibration import TechCal
 
-SCHEMES = ("direct", "strap", "core_mux", "sel_strap")
 
-SCHEME_LABELS = {
-    "direct": "(a) Direct BLSA connection",
-    "strap": "(b) BL strapping",
-    "core_mux": "(c) Core MUX",
-    "sel_strap": "(d) BL Selector + Strap (this work)",
-}
+@dataclass(frozen=True)
+class SchemeSpec:
+    """Structural description of a BL routing scheme.
 
-# Which schemes let the inactive BL float at a refresh potential (decoupled
-# from the global line) -> FBE / off-leakage mitigation.
-SCHEME_ISOLATES_UNSELECTED = {
-    "direct": False, "strap": False, "core_mux": False, "sel_strap": True,
-}
+    Every coefficient is consumed arithmetically by the parasitic and
+    bonding models — adding a scheme never requires a new branch in the
+    physics code.
+    """
+
+    name: str
+    label: str
+    # --- electrical structure (parasitic assembly, Fig. 2) ---
+    sel_junction: bool          # selector/mux junction terminates the local BL
+    straps_per_global: int      # local BLs electrically tied to one global line
+    global_strap_metal: bool    # full-length global strap metal run
+    c_global_fixed_ff: float    # extra fixed metal (e.g. core-mux short run)
+    r_sel_in_path: bool         # selector/mux on-resistance in series
+    r_global_in_path: bool      # global strap + bond resistance in series
+    # --- disturb / bonding structure ---
+    isolates_unselected: bool   # inactive BLs float at a refresh potential
+    bond_shared: bool           # one HCB bond per strap group (not per BL)
+
+
+# Live scheme registry + compatibility views (kept in sync by
+# `register_scheme`; legacy code indexes the views by name).
+SCHEMES: dict = {}
+SCHEME_LABELS: dict = {}
+SCHEME_ISOLATES_UNSELECTED: dict = {}
+
+
+def register_scheme(spec: SchemeSpec, overwrite: bool = False) -> SchemeSpec:
+    """Register a BL routing scheme so sweeps and models can use it."""
+    if not spec.name:
+        raise ValueError("scheme must have a non-empty name")
+    if spec.straps_per_global < 1:
+        raise ValueError("straps_per_global must be >= 1")
+    if spec.name in SCHEMES and not overwrite:
+        raise ValueError(f"scheme {spec.name!r} is already registered "
+                         "(pass overwrite=True to replace it)")
+    SCHEMES[spec.name] = spec
+    SCHEME_LABELS[spec.name] = spec.label
+    SCHEME_ISOLATES_UNSELECTED[spec.name] = spec.isolates_unselected
+    return spec
+
+
+def unregister_scheme(name: str) -> None:
+    """Remove a registered scheme (primarily for test cleanup)."""
+    SCHEMES.pop(name, None)
+    SCHEME_LABELS.pop(name, None)
+    SCHEME_ISOLATES_UNSELECTED.pop(name, None)
+
+
+def scheme_spec(name: str) -> SchemeSpec:
+    try:
+        return SCHEMES[name]
+    except KeyError:
+        raise ValueError(f"unknown routing scheme: {name}") from None
+
+
+register_scheme(SchemeSpec(
+    name="direct", label="(a) Direct BLSA connection",
+    sel_junction=False, straps_per_global=1, global_strap_metal=False,
+    c_global_fixed_ff=0.0, r_sel_in_path=False, r_global_in_path=False,
+    isolates_unselected=False, bond_shared=False))
+register_scheme(SchemeSpec(
+    name="strap", label="(b) BL strapping",
+    sel_junction=False, straps_per_global=cal.STRAPS_PER_GLOBAL,
+    global_strap_metal=True, c_global_fixed_ff=0.0,
+    r_sel_in_path=False, r_global_in_path=True,
+    isolates_unselected=False, bond_shared=True))
+register_scheme(SchemeSpec(
+    name="core_mux", label="(c) Core MUX",
+    sel_junction=True, straps_per_global=1, global_strap_metal=False,
+    c_global_fixed_ff=0.4, r_sel_in_path=True, r_global_in_path=False,
+    isolates_unselected=False, bond_shared=False))
+register_scheme(SchemeSpec(
+    name="sel_strap", label="(d) BL Selector + Strap (this work)",
+    sel_junction=True, straps_per_global=1, global_strap_metal=True,
+    c_global_fixed_ff=0.0, r_sel_in_path=True, r_global_in_path=True,
+    isolates_unselected=True, bond_shared=True))
 
 
 @dataclass(frozen=True)
@@ -44,20 +117,51 @@ class BondingGeometry:
     bonds_per_mm2_m: jnp.ndarray     # bond density (millions / mm^2)
 
 
+def _assemble_geometry(cell_x_nm, hcb_route_span_um, bond_shared,
+                       baseline_2d) -> BondingGeometry:
+    """Coefficient-driven bonding geometry (scalar or per-point arrays).
+
+    One bond per BL column gives pitch = sqrt(cell_x * route_span);
+    strap-type schemes share that bond across the strap's BL group.  The
+    2D baseline has no bonding at all (pitch 0, `manufacturable` left to
+    the caller's semantics).  Shared by the scalar API and the lowered
+    DSE path so the two cannot drift.
+    """
+    direct = jnp.sqrt(jnp.asarray(cell_x_nm, jnp.float32) * 1e-3
+                      * hcb_route_span_um)
+    share = jnp.where(bond_shared, jnp.sqrt(float(cal.BLS_PER_STRAP)), 1.0)
+    pitch = jnp.where(baseline_2d, 0.0, direct * share).astype(jnp.float32)
+    blsa_area = 2.0 * pitch * pitch
+    ok = pitch >= cal.HCB_MIN_MANUFACTURABLE_PITCH_UM
+    dens = jnp.where(pitch > 0,
+                     1.0 / jnp.maximum(pitch * pitch, 1e-9) * 1e-6, 0.0)
+    return BondingGeometry(pitch, blsa_area, ok, dens)
+
+
 def hcb_pitch_um(tech: TechCal, scheme: str) -> jnp.ndarray:
     """Required hybrid-bond pitch for the scheme on this technology."""
-    if tech.name == "d1b":
-        return jnp.asarray(0.0)      # no bonding in the planar baseline
-    direct = jnp.sqrt(tech.cell_x_nm * 1e-3 * tech.hcb_route_span_um)
-    if scheme in ("direct", "core_mux"):
-        return direct
-    # strap-type schemes share one bond across the strap's BL group
-    return direct * jnp.sqrt(float(cal.BLS_PER_STRAP))
+    return bonding_geometry(tech, scheme).hcb_pitch_um
 
 
 def bonding_geometry(tech: TechCal, scheme: str) -> BondingGeometry:
-    pitch = hcb_pitch_um(tech, scheme)
-    blsa_area = 2.0 * pitch * pitch
-    ok = pitch >= cal.HCB_MIN_MANUFACTURABLE_PITCH_UM
-    dens = jnp.where(pitch > 0, 1.0 / jnp.maximum(pitch * pitch, 1e-9) * 1e-6, 0.0)
-    return BondingGeometry(pitch, blsa_area, ok, dens)
+    return _assemble_geometry(tech.cell_x_nm, tech.hcb_route_span_um,
+                              scheme_spec(scheme).bond_shared,
+                              tech.baseline_2d)
+
+
+def bonding_geometry_lowered(view) -> BondingGeometry:
+    """Array-native bonding geometry over a lowered design space.
+
+    `view` follows the LoweredSpace protocol (`core.space`): `.layers`,
+    `.tech(field)`, `.scheme(field)` gathers, one entry per design point.
+    Unlike the scalar `bonding_geometry`, `manufacturable` here already
+    folds in the 2D-baseline exemption (no bonding -> nothing to
+    manufacture), which is the feasibility semantics the DSE uses.
+    """
+    baseline = view.tech("baseline_2d")
+    geom = _assemble_geometry(view.tech("cell_x_nm"),
+                              view.tech("hcb_route_span_um"),
+                              view.scheme("bond_shared"), baseline)
+    return BondingGeometry(geom.hcb_pitch_um, geom.blsa_area_um2,
+                           baseline | geom.manufacturable,
+                           geom.bonds_per_mm2_m)

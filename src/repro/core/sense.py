@@ -34,6 +34,25 @@ def sense_margin_mv(tech: TechCal, scheme: str, layers,
     return dv
 
 
+def sense_margin_lowered(view, with_disturb: bool = False,
+                         cbl_ff: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Array-native sense margin over a lowered design space (core.space).
+
+    Pass `cbl_ff` to reuse an already-assembled parasitic decomposition
+    (the DSE sweep computes it once for every metric).
+    """
+    from .disturb import disturb_loss_lowered
+    from .netlist import effective_cbl_lowered
+    if cbl_ff is None:
+        cbl_ff = effective_cbl_lowered(view)
+    dv = 1e3 * (cal.VDD_ARRAY / 2.0) * cal.CS_FF / (cal.CS_FF + cbl_ff)
+    dv = dv - (1.0 - view.tech("writeback_eff")) * (cal.VDD_ARRAY / 2.0) * 1e3
+    dv = dv - view.tech("sa_offset_mv")
+    if with_disturb:
+        dv = dv - disturb_loss_lowered(view)
+    return dv.astype(jnp.float32)
+
+
 def functional(tech: TechCal, scheme: str, layers,
                with_disturb: bool = True) -> jnp.ndarray:
     """Feasibility: margin above the functional sensing threshold

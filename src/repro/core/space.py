@@ -1,0 +1,242 @@
+"""Declarative design spaces and their lowering to flat operand arrays.
+
+This is the entry half of the array-native DSE API:
+
+    space = DesignSpace.paper_grid()              # declarative builder
+    batch = dse.sweep(space)                      # one vectorized pass
+    front = dse.pareto_front(batch)               # masked array dominance
+
+A `DesignSpace` is a *declaration* — which (tech, scheme, layer) points to
+evaluate, plus optional corner axes — and `lower()` turns it into the
+canonical structure-of-arrays form (`LoweredSpace`) every physics module
+consumes: a flat batch of per-point indices with gather helpers.  Techs
+and schemes come from the live registries (`calibration.register_tech`,
+`routing.register_scheme`); per-tech capability flags (`baseline_2d`,
+`allowed_schemes`, `layer_grid`) replace the old name-based special cases,
+so registered corners sweep correctly without touching this module.
+
+LoweredSpace protocol (duck-typed; physics modules take any `view` with):
+
+    view.layers          (B,) jnp.float32 layer counts
+    view.valid           (B,) bool mask (False rows are padding)
+    view.tech(field)     (B,) gather of a TechCal field per point
+    view.scheme(field)   (B,) gather of a SchemeSpec field per point
+    view.corner(name, d) (B,) corner-axis values, or the scalar default
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field, replace
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import calibration as cal
+from . import routing
+
+# The paper's layer-count sweep grid (Figs. 9a/9b x-axis anchors).
+DEFAULT_LAYER_GRID = (32, 48, 64, 87, 100, 120, 137, 160, 200)
+
+
+@dataclass(frozen=True)
+class LoweredSpace:
+    """Canonical flat form of a DesignSpace: one row per design point."""
+
+    tech_names: tuple
+    scheme_names: tuple
+    tech_idx: np.ndarray        # (B,) int32 into tech_names
+    scheme_idx: np.ndarray      # (B,) int32 into scheme_names
+    layers_np: np.ndarray       # (B,) float32
+    valid: np.ndarray           # (B,) bool
+    corners: dict = field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return int(self.tech_idx.shape[0])
+
+    @property
+    def layers(self) -> jnp.ndarray:
+        return jnp.asarray(self.layers_np, jnp.float32)
+
+    def tech(self, fieldname: str) -> np.ndarray:
+        """Per-point gather of a TechCal field."""
+        vals = [getattr(cal.get_tech(n), fieldname) for n in self.tech_names]
+        return np.asarray(vals)[self.tech_idx]
+
+    def scheme(self, fieldname: str) -> np.ndarray:
+        """Per-point gather of a SchemeSpec field."""
+        vals = [getattr(routing.scheme_spec(n), fieldname)
+                for n in self.scheme_names]
+        return np.asarray(vals)[self.scheme_idx]
+
+    def corner(self, name: str, default):
+        """Per-point corner-axis values, or the scalar default when the
+        space declared no such axis."""
+        if name in self.corners:
+            return jnp.asarray(self.corners[name], jnp.float32)
+        return default
+
+
+def _as_layer_tuple(layers) -> tuple:
+    if np.isscalar(layers):
+        return (float(layers),)
+    return tuple(float(x) for x in np.asarray(layers).reshape(-1))
+
+
+@dataclass(frozen=True)
+class DesignSpace:
+    """Declarative (tech x scheme x layers [x corners]) design space.
+
+    Build with `paper_grid()` / `product()` / `points()`, compose with
+    `+`, add Monte-Carlo-style axes with `with_corners()`, then hand to
+    `dse.sweep` (which calls `lower()` internally).
+    """
+
+    entries: tuple = ()          # ((tech_name, scheme_name, layers), ...)
+    corner_axes: tuple = ()      # ((axis_name, values), ...)
+
+    # ---------------------------------------------------------- builders --
+    @classmethod
+    def product(cls, techs=None, schemes=None, layers=None) -> "DesignSpace":
+        """Cross product honouring per-tech capability flags.
+
+        `techs=None` sweeps every registered technology.  For each tech:
+        `schemes=None` uses its `allowed_schemes` declaration (or every
+        registered scheme); an explicit `schemes` is *filtered* by
+        `allowed_schemes`, so a 2D baseline never sweeps bonded routing.
+        A declared per-tech `layer_grid` always wins over `layers` (a
+        baseline is only valid at its own layer count); `layers=None`
+        falls back to the tech's `layers_target`.
+        """
+        tech_names = tuple(techs) if techs is not None else tuple(cal.TECHS)
+        entries = []
+        for tname in tech_names:
+            tech = cal.get_tech(tname)
+            allowed = tech.allowed_schemes
+            if schemes is None:
+                tech_schemes = allowed or tuple(routing.SCHEMES)
+            else:
+                tech_schemes = tuple(s for s in schemes
+                                     if allowed is None or s in allowed)
+            if tech.layer_grid is not None:
+                grid = _as_layer_tuple(tech.layer_grid)
+            elif layers is not None:
+                grid = _as_layer_tuple(layers)
+            else:
+                grid = (float(tech.layers_target),)
+            for sname in tech_schemes:
+                routing.scheme_spec(sname)      # fail fast on unknown names
+                entries.append((tname, sname, grid))
+        return cls(entries=tuple(entries))
+
+    @classmethod
+    def paper_grid(cls, layer_grid=None) -> "DesignSpace":
+        """The paper's full sweep: every registered tech x its allowed
+        schemes x the layer grid (baselines contribute their own grid)."""
+        grid = DEFAULT_LAYER_GRID if layer_grid is None else layer_grid
+        return cls.product(layers=grid)
+
+    @classmethod
+    def paper_targets(cls) -> "DesignSpace":
+        """One Table-1 point per registered tech: its target layer count on
+        its flagship scheme (the first allowed scheme for constrained
+        techs, selector+strap otherwise)."""
+        pts = []
+        for tech in cal.TECHS.values():
+            scheme = (tech.allowed_schemes[0] if tech.allowed_schemes
+                      else "sel_strap")
+            pts.append((tech.name, scheme, tech.layers_target))
+        return cls.points(pts)
+
+    @classmethod
+    def points(cls, pts) -> "DesignSpace":
+        """Explicit design points: iterable of (tech, scheme, layers)."""
+        entries = []
+        for tname, sname, layers in pts:
+            cal.get_tech(tname)
+            routing.scheme_spec(sname)
+            entries.append((tname, sname, _as_layer_tuple(layers)))
+        return cls(entries=tuple(entries))
+
+    # ------------------------------------------------------- composition --
+    def __add__(self, other: "DesignSpace") -> "DesignSpace":
+        if self.corner_axes != other.corner_axes:
+            raise ValueError("cannot concatenate DesignSpaces with "
+                             "different corner axes")
+        return replace(self, entries=self.entries + other.entries)
+
+    def with_corners(self, **axes) -> "DesignSpace":
+        """Attach corner axes (e.g. disturb-duty distributions for the
+        Monte-Carlo ROADMAP item).  Each axis multiplies the batch: corners
+        are just more rows of the same flat sweep.
+
+        Axis semantics are defined by the consuming model — `dse.sweep`
+        currently understands `rh_toggles` and `trc_cycles` (disturb duty).
+        """
+        new = list(self.corner_axes)
+        declared = {n for n, _ in new}
+        for name, values in axes.items():
+            if name in declared:
+                raise ValueError(f"corner axis {name!r} already declared")
+            vals = tuple(float(v) for v in np.asarray(values).reshape(-1))
+            if not vals:
+                raise ValueError(f"corner axis {name!r} has no values")
+            new.append((name, vals))
+            declared.add(name)
+        return replace(self, corner_axes=tuple(new))
+
+    # ---------------------------------------------------------- lowering --
+    def __len__(self) -> int:
+        base = sum(len(grid) for _, _, grid in self.entries)
+        reps = 1
+        for _, vals in self.corner_axes:
+            reps *= len(vals)
+        return base * reps
+
+    def lower(self) -> LoweredSpace:
+        """Lower to the canonical flat structure-of-arrays form.
+
+        Row order is entry-major (techs in declaration order, schemes and
+        layers nested), with the corner-combo product outermost — so the
+        first base-block of a cornered space is its first corner combo.
+        """
+        if not self.entries:
+            raise ValueError(
+                "design space is empty — note that product() filters "
+                "explicit schemes by each tech's allowed_schemes, which can "
+                "eliminate every (tech, scheme) pair")
+        tech_names, scheme_names = [], []
+        ti, si, ly = [], [], []
+        for tname, sname, grid in self.entries:
+            cal.get_tech(tname)
+            routing.scheme_spec(sname)
+            if tname not in tech_names:
+                tech_names.append(tname)
+            if sname not in scheme_names:
+                scheme_names.append(sname)
+            for layer in grid:
+                ti.append(tech_names.index(tname))
+                si.append(scheme_names.index(sname))
+                ly.append(layer)
+        tech_idx = np.asarray(ti, np.int32)
+        scheme_idx = np.asarray(si, np.int32)
+        layers = np.asarray(ly, np.float32)
+        b = layers.shape[0]
+
+        corners: dict = {}
+        if self.corner_axes:
+            names = [n for n, _ in self.corner_axes]
+            combos = list(itertools.product(
+                *[vals for _, vals in self.corner_axes]))
+            reps = len(combos)
+            tech_idx = np.tile(tech_idx, reps)
+            scheme_idx = np.tile(scheme_idx, reps)
+            layers = np.tile(layers, reps)
+            for a, name in enumerate(names):
+                corners[name] = np.repeat(
+                    np.asarray([combo[a] for combo in combos], np.float32), b)
+
+        return LoweredSpace(
+            tech_names=tuple(tech_names), scheme_names=tuple(scheme_names),
+            tech_idx=tech_idx, scheme_idx=scheme_idx, layers_np=layers,
+            valid=np.ones(layers.shape[0], bool), corners=corners)

@@ -31,12 +31,13 @@ Two execution engines, same physics:
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import NamedTuple
 
 import jax.numpy as jnp
 
 from . import calibration as cal
 from .calibration import TechCal
-from .netlist import Ladder, build_bl_ladder
+from .netlist import Ladder, build_bl_ladder, build_ladder_lowered
 from ..kernels import ops
 from .units import tau_ns
 
@@ -89,29 +90,89 @@ def _regen_and_totals(tech_sa_tau, tech_overhead, t_dev, dv_sense,
     return t_sense, t_restore, trc
 
 
-def _fused_operands(ladder: Ladder, tech: TechCal, store_v: float):
-    """Assemble the fused-engine operand arrays for one (tech, scheme)."""
-    b, n = ladder.c.shape
+class FusedOperands(NamedTuple):
+    """Lowered operand arrays for one flat design-point batch.
+
+    This is the canonical wire format between the DSE layer and the fused
+    row-cycle engine: six (B, ...) kernel operands plus the two per-point
+    roll-up vectors.  `dse.sweep` lowers a whole DesignSpace into ONE of
+    these; `simulate_row_cycle_many` accepts it directly.
+    """
+    c: jnp.ndarray              # (B, N) node capacitances
+    g: jnp.ndarray              # (B, N-1) branch conductances
+    gc_res: jnp.ndarray         # (B, N) restore clamp conductances
+    gc_pre: jnp.ndarray         # (B, N) precharge clamp conductances
+    v0: jnp.ndarray             # (B, N) initial node voltages
+    params: jnp.ndarray         # (B, 5) per-point kernel params (incl. ACTIVE)
+    sa_tau_ns: jnp.ndarray      # (B,) BLSA regeneration time constants
+    t_overhead_ns: jnp.ndarray  # (B,) command/decode overheads
+
+
+def lower_operands(c, g, *, r_sa_drive_kohm, r_pre_kohm, store_v, tau_wl_ns,
+                   active=None):
+    """Lower ladder arrays + drive parameters to fused-kernel operands.
+
+    Every parameter may be a scalar (one tech) or a (B,) array (the
+    vectorized DSE path over mixed techs); `active=0` rows are padding /
+    masked-out design points that the kernel starts in the DONE state.
+    """
+    b, n = c.shape
     vdd, vpre = cal.VDD_ARRAY, cal.VBL_PRE
-    c = ladder.c.astype(jnp.float32)
-    g = ladder.g_branch.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+
+    def vec(x):
+        return jnp.broadcast_to(jnp.asarray(x, jnp.float32), (b,))
+
     zeros = jnp.zeros((b, n), jnp.float32)
-    gc_res = zeros.at[:, 0].set(1.0 / tech.r_sa_drive_kohm)
-    gc_pre = zeros.at[:, : n - 1].set(1.0 / tech.r_pre_kohm)
+    gc_res = zeros.at[:, 0].set(vec(1.0 / jnp.asarray(r_sa_drive_kohm)))
+    gc_pre = zeros.at[:, : n - 1].set(
+        vec(1.0 / jnp.asarray(r_pre_kohm))[:, None])
+    store_v = vec(store_v)
     v0 = jnp.full((b, n), vpre, jnp.float32).at[:, n - 1].set(store_v)
 
     cbl = c[:, : n - 1].sum(-1)
     cs = c[:, n - 1]
     dv_inf = (store_v - vpre) * cs / (cs + cbl)
-    tau_wl = tau_ns(tech.r_wl_kohm, tech.c_wl_ff)
     params = jnp.stack([
-        jnp.full((b,), tau_wl, jnp.float32),
+        vec(tau_wl_ns),
         0.9 * dv_inf.astype(jnp.float32),
         jnp.full((b,), vdd, jnp.float32),
         jnp.full((b,), vpre, jnp.float32),
-        jnp.ones((b,), jnp.float32),
+        jnp.ones((b,), jnp.float32) if active is None else vec(active),
     ], axis=1)
     return c, g, gc_res, gc_pre, v0, params
+
+
+def _fused_operands(ladder: Ladder, tech: TechCal, store_v: float):
+    """Assemble the fused-engine operand arrays for one (tech, scheme)."""
+    return lower_operands(
+        ladder.c, ladder.g_branch,
+        r_sa_drive_kohm=tech.r_sa_drive_kohm, r_pre_kohm=tech.r_pre_kohm,
+        store_v=store_v, tau_wl_ns=tau_ns(tech.r_wl_kohm, tech.c_wl_ff))
+
+
+def lower_design_operands(view, ladder_c=None, ladder_g=None,
+                          par=None) -> FusedOperands:
+    """Lower a whole design space view to ONE fused-engine operand batch.
+
+    `view` follows the LoweredSpace protocol (`core.space`); ladder arrays
+    / parasitics are rebuilt unless passed in.  Masked-out points
+    (`view.valid == False`) become inactive kernel rows.
+    """
+    if ladder_c is None or ladder_g is None:
+        ladder_c, ladder_g = build_ladder_lowered(view, par)
+    core = lower_operands(
+        ladder_c, ladder_g,
+        r_sa_drive_kohm=view.tech("r_sa_drive_kohm"),
+        r_pre_kohm=view.tech("r_pre_kohm"),
+        store_v=view.tech("writeback_eff") * cal.VDD_ARRAY,
+        tau_wl_ns=tau_ns(view.tech("r_wl_kohm"), view.tech("c_wl_ff")),
+        active=view.valid.astype(jnp.float32))
+    return FusedOperands(
+        *core,
+        sa_tau_ns=jnp.asarray(view.tech("sa_tau_ns"), jnp.float32),
+        t_overhead_ns=jnp.asarray(view.tech("t_overhead_ns"), jnp.float32))
 
 
 # Fused-engine batches are padded (with inactive design points) up to a
@@ -189,16 +250,42 @@ def simulate_row_cycle(tech: TechCal, scheme: str, layers,
         trc_ns=trc, dv_sense_v=dv_sense, traces={})
 
 
+def simulate_row_cycle_lowered(operands: FusedOperands,
+                               backend: str = "auto",
+                               b_chunk: int = DEFAULT_B_CHUNK) -> RowCycleResult:
+    """Fused row-cycle over an already-lowered flat operand batch.
+
+    This is the array-native entry point of the engine: the DSE sweep
+    lowers its whole (tech x scheme x layers [x corners]) space to ONE
+    `FusedOperands` and gets ONE trace-free `RowCycleResult` back, with no
+    per-combo Python loop anywhere.
+    """
+    evt, _ = _row_cycle_fused_chunked(operands[:6], backend, b_chunk)
+    t_sense, t_restore, trc = _regen_and_totals(
+        operands.sa_tau_ns, operands.t_overhead_ns,
+        evt[:, 0], evt[:, 1], evt[:, 2], evt[:, 3])
+    return RowCycleResult(
+        t_sense_ns=t_sense, t_restore_ns=t_restore,
+        t_precharge_ns=evt[:, 3], trc_ns=trc,
+        dv_sense_v=evt[:, 1], traces={})
+
+
 def simulate_row_cycle_many(entries, backend: str = "auto",
-                            b_chunk: int = DEFAULT_B_CHUNK) -> list[RowCycleResult]:
+                            b_chunk: int = DEFAULT_B_CHUNK):
     """Fused row-cycle over many (tech, scheme, layers) combos at once.
 
-    `entries` is a sequence of (TechCal, scheme, layers-array) tuples.  All
-    design points are flattened into ONE batch through the fused engine
-    (chunked to `b_chunk`), instead of one transient call per combo — this
-    is what makes `dse.full_sweep(with_transient=True)` a single vectorized
-    evaluation.  Returns one trace-free RowCycleResult per entry.
+    `entries` is either a sequence of (TechCal, scheme, layers-array)
+    tuples, or an already-lowered `FusedOperands` batch (from
+    `lower_design_operands`), which is dispatched directly.  All design
+    points are flattened into ONE batch through the fused engine (chunked
+    to `b_chunk`), instead of one transient call per combo — this is what
+    makes `dse.sweep` a single vectorized evaluation.  Returns one
+    trace-free RowCycleResult per entry (or one flat result for a lowered
+    batch).
     """
+    if isinstance(entries, FusedOperands):
+        return simulate_row_cycle_lowered(entries, backend, b_chunk)
+
     per_entry = []
     cs, gs, gcrs, gcps, v0s, pars = [], [], [], [], [], []
     sa_taus, overheads = [], []
@@ -214,21 +301,20 @@ def simulate_row_cycle_many(entries, backend: str = "auto",
         sa_taus.append(jnp.full((b,), tech.sa_tau_ns, jnp.float32))
         overheads.append(jnp.full((b,), tech.t_overhead_ns, jnp.float32))
 
-    operands = tuple(jnp.concatenate(xs, axis=0)
-                     for xs in (cs, gs, gcrs, gcps, v0s, pars))
-    evt, _ = _row_cycle_fused_chunked(operands, backend, b_chunk)
-    sa_tau = jnp.concatenate(sa_taus)
-    overhead = jnp.concatenate(overheads)
-    t_sense, t_restore, trc = _regen_and_totals(
-        sa_tau, overhead, evt[:, 0], evt[:, 1], evt[:, 2], evt[:, 3])
+    operands = FusedOperands(
+        *(jnp.concatenate(xs, axis=0)
+          for xs in (cs, gs, gcrs, gcps, v0s, pars)),
+        sa_tau_ns=jnp.concatenate(sa_taus),
+        t_overhead_ns=jnp.concatenate(overheads))
+    flat = simulate_row_cycle_lowered(operands, backend, b_chunk)
 
     results, lo = [], 0
     for b in per_entry:
         sl = slice(lo, lo + b)
         results.append(RowCycleResult(
-            t_sense_ns=t_sense[sl], t_restore_ns=t_restore[sl],
-            t_precharge_ns=evt[sl, 3], trc_ns=trc[sl],
-            dv_sense_v=evt[sl, 1], traces={}))
+            t_sense_ns=flat.t_sense_ns[sl], t_restore_ns=flat.t_restore_ns[sl],
+            t_precharge_ns=flat.t_precharge_ns[sl], trc_ns=flat.trc_ns[sl],
+            dv_sense_v=flat.dv_sense_v[sl], traces={}))
         lo += b
     return results
 

@@ -1,0 +1,364 @@
+"""Array-native DesignSpace/DesignBatch API (PR 2).
+
+Covers the redesigned co-optimization surface:
+
+1. `DesignBatch` is a real JAX pytree: flatten/unflatten, tree_map and
+   jit round-trips preserve data AND the static name tables.
+2. `dse.sweep(space).to_points()` is equivalent to the legacy scalar
+   oracle (`evaluate_grid` per combo) — the old `full_sweep` contract.
+3. `pareto_front`/`best_design`: vectorized dominance identical to the
+   seed's O(n^2) pairwise loop, empty-feasible-set and tie-breaking
+   edge cases.
+4. Registries: `register_tech`/`register_scheme` sweep without editing
+   any core module.
+5. Sharding readiness: flat batch axis, `pad_to` + validity mask.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import calibration as cal
+from repro.core import dse
+from repro.core.batch import DesignBatch, DesignPoint
+from repro.core.calibration import AOS, D1B, SI, register_tech, unregister_tech
+from repro.core.routing import (SchemeSpec, register_scheme, scheme_spec,
+                                unregister_scheme)
+from repro.core.space import DEFAULT_LAYER_GRID, DesignSpace
+
+SMALL_GRID = (87, 137)          # keeps fused-engine batches at one 64-pad
+
+
+def small_batch(with_transient=False):
+    return dse.sweep(DesignSpace.paper_grid(layer_grid=SMALL_GRID),
+                     with_transient=with_transient)
+
+
+def seed_pareto_loop(points, require_feasible=True):
+    """The seed's O(n^2) pairwise dominance loop (reference semantics)."""
+    cand = [p for p in points if (p.feasible or not require_feasible)]
+
+    def dominates(a, b):
+        ge = (a.density_gb_mm2 >= b.density_gb_mm2
+              and a.margin_disturbed_mv >= b.margin_disturbed_mv
+              and a.trc_ns <= b.trc_ns and a.e_read_fj <= b.e_read_fj)
+        gt = (a.density_gb_mm2 > b.density_gb_mm2
+              or a.margin_disturbed_mv > b.margin_disturbed_mv
+              or a.trc_ns < b.trc_ns or a.e_read_fj < b.e_read_fj)
+        return ge and gt
+
+    return [p for p in cand
+            if not any(dominates(q, p) for q in cand if q is not p)]
+
+
+class TestDesignSpace:
+    def test_paper_grid_row_order_and_capability_flags(self):
+        sp = DesignSpace.paper_grid(layer_grid=SMALL_GRID).lower()
+        # si x 4 schemes x 2 layers, aos x 4 x 2, d1b x direct x 1
+        assert len(sp) == 2 * 4 * 2 + 1
+        assert sp.tech_names == ("si", "aos", "d1b")
+        # the 2D baseline contributes ONLY its declared scheme/layer grid
+        d1b_rows = np.flatnonzero(sp.tech_idx == 2)
+        assert d1b_rows.tolist() == [16]
+        assert sp.layers_np[16] == 1.0
+        assert sp.scheme_names[sp.scheme_idx[16]] == "direct"
+
+    def test_product_filters_schemes_by_allowed(self):
+        space = DesignSpace.product(techs=("si", "d1b"),
+                                    schemes=("sel_strap",), layers=(137,))
+        lowered = space.lower()
+        # d1b only allows "direct" -> filtered out entirely
+        assert lowered.tech_names == ("si",)
+
+    def test_points_and_concat(self):
+        space = (DesignSpace.points([("si", "sel_strap", 137)])
+                 + DesignSpace.points([("d1b", "direct", 1)]))
+        assert len(space) == 2
+        with pytest.raises(ValueError):
+            DesignSpace.points([("si", "not_a_scheme", 137)])
+        with pytest.raises(KeyError):
+            DesignSpace.points([("not_a_tech", "direct", 1)])
+
+    def test_with_corners_multiplies_rows(self):
+        base = DesignSpace.points([("si", "sel_strap", 137)])
+        sp = base.with_corners(rh_toggles=(1e4, 3e4, 5e4)).lower()
+        assert len(sp) == 3
+        np.testing.assert_allclose(sp.corners["rh_toggles"],
+                                   [1e4, 3e4, 5e4])
+        batch = dse.sweep(base.with_corners(rh_toggles=(1e4, 5e4)),
+                          with_transient=False)
+        md = np.asarray(batch.margin_disturbed_mv)
+        # nominal duty first; 5x RH toggles strictly worse
+        nominal = dse.sweep(base, with_transient=False)
+        assert md[0] == pytest.approx(
+            float(nominal.margin_disturbed_mv[0]), abs=1e-4)
+        assert md[1] < md[0]
+
+    def test_unknown_corner_axis_rejected(self):
+        space = DesignSpace.points([("si", "sel_strap", 137)])
+        with pytest.raises(ValueError, match="unsupported corner"):
+            dse.sweep(space.with_corners(vth_sigma=(0.0, 1.0)),
+                      with_transient=False)
+
+    def test_duplicate_corner_axis_rejected(self):
+        space = DesignSpace.points([("si", "sel_strap", 137)])
+        with pytest.raises(ValueError, match="already declared"):
+            space.with_corners(rh_toggles=(1e3,)).with_corners(
+                rh_toggles=(5e4,))
+
+    def test_empty_space_rejected_with_clear_error(self):
+        # product() filtering can eliminate every pair (d1b only allows
+        # "direct"); lowering must fail loudly, not deep in the physics
+        space = DesignSpace.product(techs=("d1b",), schemes=("sel_strap",))
+        with pytest.raises(ValueError, match="empty"):
+            dse.sweep(space, with_transient=False)
+
+
+class TestDesignBatchPytree:
+    def test_flatten_unflatten_roundtrip(self):
+        batch = small_batch()
+        leaves, treedef = jax.tree_util.tree_flatten(batch)
+        rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert isinstance(rebuilt, DesignBatch)
+        assert rebuilt.tech_names == batch.tech_names
+        assert rebuilt.scheme_names == batch.scheme_names
+        np.testing.assert_array_equal(np.asarray(rebuilt.margin_mv),
+                                      np.asarray(batch.margin_mv))
+
+    def test_tree_map_preserves_structure(self):
+        batch = small_batch()
+        doubled = jax.tree_util.tree_map(lambda x: x * 2, batch)
+        assert isinstance(doubled, DesignBatch)
+        np.testing.assert_allclose(np.asarray(doubled.density_gb_mm2),
+                                   2 * np.asarray(batch.density_gb_mm2))
+        # static tables ride through aux_data untouched
+        assert doubled.tech_names == batch.tech_names
+
+    def test_jit_roundtrip(self):
+        batch = small_batch()
+
+        @jax.jit
+        def margin_shift(b):
+            return jax.tree_util.tree_map(lambda x: x, b), b.margin_mv - 1.0
+
+        out, margins = margin_shift(batch)
+        assert isinstance(out, DesignBatch)
+        assert out.tech_names == batch.tech_names
+        np.testing.assert_allclose(np.asarray(margins),
+                                   np.asarray(batch.margin_mv) - 1.0,
+                                   rtol=1e-6)
+
+    def test_pad_to_and_validity_mask(self):
+        batch = small_batch()
+        n = len(batch)
+        padded = batch.pad_to(64)
+        assert len(padded) == 64
+        assert padded.n_valid == n
+        # padding rows are invisible to every consumer (str() because the
+        # transient-off tRC is NaN, which breaks dataclass equality)
+        assert len(padded.to_points()) == n
+        assert list(map(str, padded.to_points())) \
+            == list(map(str, batch.to_points()))
+        front_ref = [str(p) for p in dse.pareto_front(batch.to_points())]
+        front_pad = [str(p) for p in dse.pareto_front(padded.to_points())]
+        assert front_ref == front_pad
+        mask = np.asarray(dse.pareto_mask(padded))
+        assert not mask[n:].any()
+
+    def test_device_put_preserves_batch(self):
+        batch = small_batch()
+        moved = batch.device_put(jax.devices()[0])
+        np.testing.assert_array_equal(np.asarray(moved.layers),
+                                      np.asarray(batch.layers))
+
+
+class TestSweepEquivalence:
+    """The vectorized sweep must reproduce the seed scalar oracle."""
+
+    FIELDS = ("density_gb_mm2", "height_um", "cbl_ff", "margin_mv",
+              "margin_disturbed_mv", "e_write_fj", "e_read_fj",
+              "hcb_pitch_um", "blsa_area_um2")
+
+    def reference(self, grid, with_transient):
+        pts = []
+        for tech in (SI, AOS):
+            for scheme in ("direct", "strap", "core_mux", "sel_strap"):
+                pts.extend(dse.evaluate_grid(tech, scheme, np.asarray(grid),
+                                             with_transient=with_transient))
+        pts.extend(dse.evaluate_grid(D1B, "direct", np.asarray([1]),
+                                     with_transient=with_transient))
+        return pts
+
+    def assert_equivalent(self, got, ref, with_transient):
+        assert len(got) == len(ref)
+        for g, r in zip(got, ref):
+            assert (g.tech, g.scheme, g.layers) == (r.tech, r.scheme, r.layers)
+            assert g.feasible == r.feasible
+            for f in self.FIELDS:
+                assert getattr(g, f) == pytest.approx(getattr(r, f),
+                                                      rel=1e-5, abs=1e-6), f
+            if with_transient:
+                assert g.trc_ns == pytest.approx(r.trc_ns, rel=1e-5)
+
+    def test_to_points_matches_scalar_oracle(self):
+        got = small_batch(with_transient=True).to_points()
+        self.assert_equivalent(got, self.reference(SMALL_GRID, True), True)
+
+    def test_full_sweep_shim_equals_sweep(self):
+        grid = np.asarray(SMALL_GRID)
+        shim = dse.full_sweep(layer_grid=grid, with_transient=False)
+        direct = dse.sweep(DesignSpace.paper_grid(layer_grid=SMALL_GRID),
+                           with_transient=False).to_points()
+        assert list(map(str, shim)) == list(map(str, direct))
+
+    @pytest.mark.slow
+    def test_full_paper_grid_matches_scalar_oracle(self):
+        space = DesignSpace.paper_grid()
+        got = dse.sweep(space).to_points()
+        ref = self.reference(DEFAULT_LAYER_GRID, True)
+        self.assert_equivalent(got, ref, True)
+
+
+class TestParetoAndBest:
+    def test_vectorized_front_identical_to_seed_loop(self):
+        pts = small_batch(with_transient=True).to_points()
+        for rf in (True, False):
+            assert dse.pareto_front(pts, require_feasible=rf) \
+                == seed_pareto_loop(pts, require_feasible=rf)
+
+    def test_batch_front_same_points_as_list_front(self):
+        batch = small_batch(with_transient=True)
+        front = dse.pareto_front(batch)
+        assert isinstance(front, DesignBatch)
+        assert front.to_points() == dse.pareto_front(batch.to_points())
+
+    def test_blocked_dominance_equals_unblocked(self):
+        # the memory-bounded dominator blocking must not change the front
+        batch = small_batch(with_transient=True)
+        full = np.asarray(dse.pareto_mask(batch))
+        for block in (1, 3, 7):
+            np.testing.assert_array_equal(
+                np.asarray(dse.pareto_mask(batch, block=block)), full)
+
+    def test_nan_trc_never_dominates(self):
+        # with_transient=False -> tRC is NaN -> nothing dominates (seed
+        # pairwise semantics); the front is every feasible candidate.
+        batch = small_batch(with_transient=False)
+        mask = np.asarray(dse.pareto_mask(batch))
+        np.testing.assert_array_equal(mask, np.asarray(batch.feasible))
+
+    def test_empty_feasible_set(self):
+        # direct bonding is never manufacturable on si -> nothing feasible
+        space = DesignSpace.product(techs=("si",), schemes=("direct",),
+                                    layers=SMALL_GRID)
+        batch = dse.sweep(space, with_transient=False)
+        assert not bool(np.asarray(batch.feasible).any())
+        front = dse.pareto_front(batch)
+        assert isinstance(front, DesignBatch) and len(front) == 0
+        assert front.to_points() == []
+        assert dse.pareto_front(batch.to_points()) == []
+        assert dse.best_design(batch) is None
+
+    def test_best_design_unreachable_target_is_none(self):
+        batch = small_batch(with_transient=False)
+        assert dse.best_design(batch, density_target=1e9) is None
+
+    def _pt(self, **kw):
+        base = dict(tech="si", scheme="sel_strap", layers=137,
+                    density_gb_mm2=2.6, height_um=9.6, cbl_ff=6.6,
+                    margin_mv=130.0, margin_disturbed_mv=70.0, trc_ns=10.9,
+                    e_write_fj=6.3, e_read_fj=1.6, hcb_pitch_um=0.75,
+                    blsa_area_um2=1.12, feasible=True)
+        base.update(kw)
+        return DesignPoint(**base)
+
+    def test_best_design_tie_breaking(self):
+        # equal tRC -> lower read energy wins; equal both -> lower height
+        pts = [self._pt(layers=1, trc_ns=10.0, e_read_fj=2.0),
+               self._pt(layers=2, trc_ns=10.0, e_read_fj=1.5, height_um=9.0),
+               self._pt(layers=3, trc_ns=10.0, e_read_fj=1.5, height_um=8.0),
+               self._pt(layers=4, trc_ns=11.0, e_read_fj=0.1)]
+        best = dse.best_design(pts)
+        assert best.layers == 3
+        # full tie -> first in batch order (stable, like the seed's min)
+        pts = [self._pt(layers=7), self._pt(layers=7)]
+        assert dse.best_design(pts) == pts[0]
+
+    def test_best_design_respects_feasibility_and_target(self):
+        pts = [self._pt(layers=1, trc_ns=5.0, feasible=False),
+               self._pt(layers=2, trc_ns=9.0, density_gb_mm2=1.0),
+               self._pt(layers=3, trc_ns=12.0)]
+        assert dse.best_design(pts).layers == 3
+
+
+class TestRegistries:
+    def test_register_tech_sweeps_without_core_edits(self):
+        custom = SI.with_(name="si_hd", layers_target=120,
+                          c_bl_per_layer_ff=0.024)
+        register_tech(custom)
+        try:
+            # the registered tech shows up in the default paper grid...
+            space = DesignSpace.paper_grid(layer_grid=SMALL_GRID)
+            assert any(t == "si_hd" for t, _, _ in space.entries)
+            # ...and sweeps standalone with finite, distinct physics
+            batch = dse.sweep(DesignSpace.product(
+                techs=("si_hd",), layers=SMALL_GRID), with_transient=False)
+            assert len(batch) == 4 * len(SMALL_GRID)
+            assert np.isfinite(np.asarray(batch.margin_mv)).all()
+            i_custom = batch.to_points()[0]
+            i_si = dse.sweep(DesignSpace.product(
+                techs=("si",), layers=SMALL_GRID),
+                with_transient=False).to_points()[0]
+            assert i_custom.cbl_ff < i_si.cbl_ff      # thinner BL per tier
+        finally:
+            unregister_tech("si_hd")
+        with pytest.raises(ValueError):
+            register_tech(SI)                          # duplicate name
+
+    def test_register_scheme_sweeps_without_core_edits(self):
+        spec = SchemeSpec(
+            name="sel_direct", label="(e) selector, no strap sharing",
+            sel_junction=True, straps_per_global=1, global_strap_metal=False,
+            c_global_fixed_ff=0.0, r_sel_in_path=True, r_global_in_path=False,
+            isolates_unselected=True, bond_shared=False)
+        register_scheme(spec)
+        try:
+            assert scheme_spec("sel_direct") is spec
+            batch = dse.sweep(DesignSpace.product(
+                techs=("si",), schemes=("sel_direct",), layers=(137,)),
+                with_transient=False)
+            pt = batch.to_points()[0]
+            # selector junction but no strap metal: C_BL between direct
+            # and sel_strap; per-BL bond pitch like direct
+            direct, sel_strap = (dse.sweep(DesignSpace.product(
+                techs=("si",), schemes=(s,), layers=(137,)),
+                with_transient=False).to_points()[0]
+                for s in ("direct", "sel_strap"))
+            assert direct.cbl_ff < pt.cbl_ff < sel_strap.cbl_ff
+            assert pt.hcb_pitch_um == pytest.approx(direct.hcb_pitch_um)
+        finally:
+            unregister_scheme("sel_direct")
+
+    def test_tech_capability_flags_replace_name_checks(self):
+        # a registered 2D baseline (not named "d1b") behaves like one
+        flat = D1B.with_(name="planar_x", fixed_c_bl_ff=22.0,
+                         fixed_blsa_area_um2=0.5, baseline_label="Planar X")
+        register_tech(flat)
+        try:
+            batch = dse.sweep(DesignSpace.product(techs=("planar_x",)),
+                              with_transient=False)
+            pt = batch.to_points()[0]
+            assert pt.scheme == "direct" and pt.layers == 1
+            assert pt.cbl_ff == pytest.approx(22.0)
+            assert pt.density_gb_mm2 == pytest.approx(
+                cal.D1B_BIT_DENSITY_GB_MM2)
+            assert pt.hcb_pitch_um == 0.0
+            # report rows use the tech's OWN tabulated values, not D1b's
+            from repro.core import report
+            rows = report.fig3_routing_comparison(with_transient=False)
+            (row,) = [r for r in rows if r["tech"] == "planar_x"]
+            assert row["label"] == "Planar X"
+            assert row["blsa_area_um2"] == pytest.approx(0.5)
+        finally:
+            unregister_tech("planar_x")

@@ -15,6 +15,11 @@ python -m compileall -q src tests benchmarks tools examples
 echo "== fast test tier =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
+echo "== examples smoke (DesignSpace -> sweep -> DesignBatch API) =="
+JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}" \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python examples/dram_codesign.py --smoke > /dev/null
+
 if [[ "${1:-}" == "--slow" ]]; then
     echo "== slow test tier =="
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m slow
