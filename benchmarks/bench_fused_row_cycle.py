@@ -21,7 +21,7 @@ from .common import emit, timeit
 BATCH = 1024
 
 
-def main():
+def main() -> dict:
     from repro.core.calibration import SI
     from repro.core.transient import (DT_NS, simulate_row_cycle,
                                       simulate_row_cycle_phased)
@@ -42,6 +42,18 @@ def main():
          f"designs_per_s={BATCH / dt_phased:,.0f}")
     emit("fused_vs_phased_speedup", (dt_phased - dt_fused) * 1e6,
          f"speedup={dt_phased / dt_fused:.1f}x")
+
+    # machine-readable record for the CI benchmark trajectory
+    # (benchmarks/run.py --json collects these into BENCH_fused_rc.json)
+    return {
+        "batch": BATCH,
+        "fused_wall_s": dt_fused,
+        "phased_wall_s": dt_phased,
+        "fused_us_per_call": dt_fused * 1e6,
+        "designs_per_s": BATCH / dt_fused,
+        "speedup_vs_phased": dt_phased / dt_fused,
+        "max_trc_err_dt": err_dt,
+    }
 
 
 if __name__ == "__main__":

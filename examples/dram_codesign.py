@@ -6,10 +6,13 @@ row-cycle tRC all as flat batch arrays), then extract the Pareto front and
 the selected design with masked array ops — i.e., regenerates the
 substance of Table I / Fig. 9(c) without a single per-combo Python loop.
 
-Run:  PYTHONPATH=src python examples/dram_codesign.py [--smoke]
+Run:  PYTHONPATH=src python examples/dram_codesign.py [--smoke] [--mc [N]]
 
 `--smoke` sweeps a reduced layer grid on CPU — the fast API-regression
-mode `tools/ci_check.sh` runs pre-merge.
+mode `tools/ci_check.sh` runs pre-merge.  `--mc [N]` additionally fans
+the same space out to N Monte-Carlo samples per design point (SA-offset
++ Vth variation, still ONE fused transient batch) and reports margin/tRC
+*yield* instead of nominal-only numbers.
 """
 
 import argparse
@@ -23,6 +26,12 @@ from repro.core.space import DesignSpace
 parser = argparse.ArgumentParser()
 parser.add_argument("--smoke", action="store_true",
                     help="reduced layer grid (fast CI smoke mode)")
+parser.add_argument("--mc", type=int, nargs="?", const=128, default=0,
+                    metavar="SAMPLES",
+                    help="Monte-Carlo samples per design point (default "
+                         "128 when the flag is given without a value)")
+parser.add_argument("--mc-key", type=int, default=0,
+                    help="PRNG seed for the Monte-Carlo draws")
 args = parser.parse_args()
 
 grid = (64, 87, 137) if args.smoke else None
@@ -86,3 +95,39 @@ d1b_dens = float(batch.density_gb_mm2[i_d1b])
 print(f"\nvs D1b baseline: density x{best.density_gb_mm2 / d1b_dens:.1f}, "
       f"tRC x{d1b_trc / best.trc_ns:.2f} faster, "
       f"E_rd x{d1b_erd / best.e_read_fj:.2f} lower")
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo yield (--mc): same space, fanned out to N samples per point,
+# still ONE chunked fused row-cycle dispatch.
+# ---------------------------------------------------------------------------
+if args.mc:
+    print(f"\n== Monte-Carlo yield: {args.mc} samples/design "
+          f"(key {args.mc_key}, {len(space) * args.mc} rows, one fused "
+          "batch) ==")
+    mc_batch = dse.sweep(space.with_mc(samples=args.mc, key=args.mc_key))
+    trc_ceiling = 1.1 * d1b_trc / 2.0        # spec: comfortably beat D1b/2
+    summary = mc_batch.mc_summary(margin_mv=cal.MIN_FUNCTIONAL_MARGIN_MV,
+                                  trc_ns=trc_ceiling)
+    yf = np.asarray(summary.corners["yield_frac"])
+    p05_margin = np.asarray(mc_batch.quantile(0.05, "margin_mv"))
+    p95_trc = np.asarray(mc_batch.quantile(0.95, "trc_ns"))
+
+    print(f"spec: margin>={cal.MIN_FUNCTIONAL_MARGIN_MV:.0f} mV & "
+          f"tRC<={trc_ceiling:.1f} ns")
+    print("Table I anchors (yield over samples, p05 margin, p95 tRC):")
+    for tech, scheme, L in (("si", "sel_strap", 137),
+                            ("aos", "sel_strap", 87), ("d1b", "direct", 1)):
+        i = row(tech, scheme, L)             # summary keeps the base layout
+        print(f"  {tech:4s} {scheme:10s} @{L:3d}L: "
+              f"yield {yf[i]:5.1%}  "
+              f"margin_p05 {p05_margin[i]:6.1f} mV  "
+              f"tRC_p95 {p95_trc[i]:5.2f} ns")
+
+    best_y = dse.best_design(summary, min_yield=0.9)
+    if best_y is None:
+        print("no design meets the density target at >=90% yield")
+    else:
+        print(f"highest-yield selection (>=90% yield, paper's rule): "
+              f"{best_y.tech} / {best_y.scheme} @ {best_y.layers} layers -> "
+              f"yield {yf[row(best_y.tech, best_y.scheme, best_y.layers)]:.1%}, "
+              f"median tRC {best_y.trc_ns:.2f} ns")

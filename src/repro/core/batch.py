@@ -10,6 +10,13 @@ axis, so distributing a million-point sweep is literally
 (or `batch.device_put(sharding)`), after `pad_to()`-aligning the axis to
 the device count.  `to_points()` is the thin legacy view producing the old
 `list[DesignPoint]` contract.
+
+Monte-Carlo sweeps (`DesignSpace.with_mc`) keep the SAME flat layout:
+sample s of base design i sits at row `s * base_len + i`, and the batch
+records `n_samples` / `base_len` as static aux data.  The yield views
+(`yield_fraction`, `quantile`, `mc_summary`) are masked segment
+reductions over that flat axis — no second array axis ever appears, so
+jit/tree_map/sharding semantics are unchanged.
 """
 
 from __future__ import annotations
@@ -57,6 +64,11 @@ ARRAY_FIELDS = (
     "manufacturable", "feasible", "valid",
 )
 
+# Columns a with_mc sweep actually perturbs (per-sample SA offset enters
+# the margins; the Vth draw enters the access conductance, hence timing).
+MC_SAMPLED_FIELDS = ("margin_mv", "margin_disturbed_mv",
+                     "trc_ns", "t_sense_ns")
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclass(frozen=True)
@@ -89,19 +101,23 @@ class DesignBatch:
     corners: dict                    # axis name -> (B,) float32
     tech_names: tuple = ()           # static lookup tables (aux data)
     scheme_names: tuple = ()
+    n_samples: int = 1               # MC sample fan-out (1 = nominal sweep)
+    base_len: int = 0                # design points per sample (0 = len)
 
     # ------------------------------------------------------------ pytree --
     def tree_flatten(self):
         children = tuple(getattr(self, f) for f in ARRAY_FIELDS)
         children += (self.corners,)
-        return children, (self.tech_names, self.scheme_names)
+        return children, (self.tech_names, self.scheme_names,
+                          self.n_samples, self.base_len)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        tech_names, scheme_names = aux
+        tech_names, scheme_names, n_samples, base_len = aux
         kwargs = dict(zip(ARRAY_FIELDS, children[:-1]))
         return cls(corners=children[-1], tech_names=tech_names,
-                   scheme_names=scheme_names, **kwargs)
+                   scheme_names=scheme_names, n_samples=n_samples,
+                   base_len=base_len, **kwargs)
 
     # ------------------------------------------------------------- shape --
     def __len__(self) -> int:
@@ -147,6 +163,91 @@ class DesignBatch:
     def device_put(self, sharding) -> "DesignBatch":
         """Place every leaf with the given jax.sharding / device."""
         return jax.device_put(self, sharding)
+
+    # -------------------------------------------------- Monte-Carlo views --
+    # Sample-major layout contract (dse.sweep on a with_mc space): sample s
+    # of base design i is flat row `s * base_len + i`; pad_to may append
+    # invalid rows at the end.  Every reduction below is a masked segment
+    # reduction over the flat batch axis — `select()`ed batches lose the
+    # layout and are rejected.
+
+    def _mc_base(self) -> int:
+        base = self.base_len or len(self)
+        if len(self) < self.n_samples * base:
+            raise ValueError(
+                "MC reductions need the sweep's sample-major layout "
+                f"({self.n_samples} samples x {base} designs), but the "
+                f"batch has only {len(self)} rows — was it select()ed?")
+        return base
+
+    def _segment_frac(self, ok: jnp.ndarray, base: int) -> jnp.ndarray:
+        ids = jnp.arange(len(self)) % base
+        hits = jax.ops.segment_sum((ok & self.valid).astype(jnp.float32),
+                                   ids, num_segments=base)
+        tot = jax.ops.segment_sum(self.valid.astype(jnp.float32),
+                                  ids, num_segments=base)
+        return hits / jnp.maximum(tot, 1.0)
+
+    def yield_fraction(self, margin_mv: float | None = None,
+                       trc_ns: float | None = None,
+                       disturbed: bool = False) -> jnp.ndarray:
+        """Per-design fraction of MC samples meeting the spec -> (base,).
+
+        A sample passes when its sense margin is at least `margin_mv`
+        (the disturbed margin when `disturbed=True`) AND its row-cycle
+        time is at most `trc_ns`; criteria passed as None are skipped.
+        NaN tRC (a `with_transient=False` sweep) never passes a tRC spec.
+        On a nominal sweep (no `with_mc`) this is a 0/1 pass map.
+        """
+        base = self._mc_base()
+        ok = self.valid
+        if margin_mv is not None:
+            col = self.margin_disturbed_mv if disturbed else self.margin_mv
+            ok = ok & (col >= margin_mv)
+        if trc_ns is not None:
+            ok = ok & (self.trc_ns <= trc_ns)
+        return self._segment_frac(ok, base)
+
+    def quantile(self, q, field: str = "trc_ns") -> jnp.ndarray:
+        """Per-design quantile of a metric across MC samples -> (base,)
+        (or (len(q), base) for a vector `q`).  Invalid rows are ignored."""
+        base = self._mc_base()
+        n = self.n_samples * base
+        vals = jnp.asarray(getattr(self, field), jnp.float32)[:n]
+        vals = jnp.where(self.valid[:n], vals, jnp.nan)
+        return jnp.nanquantile(vals.reshape(self.n_samples, base),
+                               jnp.asarray(q), axis=0)
+
+    def mc_summary(self, margin_mv: float | None = None,
+                   trc_ns: float | None = None, disturbed: bool = False,
+                   q: float = 0.5,
+                   min_feasible_frac: float = 0.5) -> "DesignBatch":
+        """Reduce an MC batch to one row per base design.
+
+        Sampled metrics (`margin_mv`, `margin_disturbed_mv`, `trc_ns`,
+        `t_sense_ns`) collapse to their per-design `q`-quantile;
+        deterministic columns take the first sample's value.  `feasible`
+        becomes "at least `min_feasible_frac` of samples feasible", and
+        `corners["yield_frac"]` records `yield_fraction(margin_mv,
+        trc_ns, disturbed)` — ready to use as a Pareto/selection
+        objective (`dse.pareto_front(..., extra_maximize=...)`,
+        `dse.best_design(..., min_yield=...)`).
+        """
+        base = self._mc_base()
+        yf = self.yield_fraction(margin_mv=margin_mv, trc_ns=trc_ns,
+                                 disturbed=disturbed)
+        take = lambda a: jnp.asarray(a)[:base]
+        kwargs = {f: take(getattr(self, f)) for f in ARRAY_FIELDS}
+        for f in MC_SAMPLED_FIELDS:
+            kwargs[f] = self.quantile(q, f).astype(jnp.float32)
+        feas_frac = self._segment_frac(self.feasible, base)
+        kwargs["feasible"] = ((feas_frac >= min_feasible_frac)
+                              & kwargs["valid"])
+        corners = {k: take(v) for k, v in self.corners.items()
+                   if not k.startswith("mc_")}
+        corners["yield_frac"] = yf.astype(jnp.float32)
+        return DesignBatch(corners=corners, tech_names=self.tech_names,
+                           scheme_names=self.scheme_names, **kwargs)
 
     # ------------------------------------------------------ legacy views --
     def point(self, i: int) -> DesignPoint:

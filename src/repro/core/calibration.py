@@ -120,6 +120,12 @@ class TechCal:
     baseline_label: str = ""              # baseline_2d: report row label
     e_sa_fj: float = E_SA_FJ              # BLSA latch energy per sense
     vpp: float = VPP_3D                   # WL overdrive
+    # --- Monte-Carlo variation (1-sigma spreads, DesignSpace.with_mc) ---
+    # The nominal sa_offset_mv / r_on_cell_kohm above stay the corner
+    # values; these sigmas only matter when a space declares MC sampling.
+    sa_offset_sigma_mv: float = 0.0       # BLSA input-referred offset spread
+    vth_sigma_mv: float = 0.0             # access-transistor Vth spread
+    vth_overdrive_v: float = 0.6          # nominal gate overdrive (Vgs - Vth)
 
     def with_(self, **kw) -> "TechCal":
         return replace(self, **kw)
@@ -141,6 +147,7 @@ SI = TechCal(
     fbe_loss_mv=35.0, rh_loss_mv=25.0,
     hcb_route_span_um=0.3907,
     t_overhead_ns=2.0, sa_tau_ns=1.2, r_pre_kohm=8.0, r_sa_drive_kohm=8.0,
+    sa_offset_sigma_mv=5.0, vth_sigma_mv=25.0, vth_overdrive_v=0.60,
 )
 
 # AOS (W-doped In2O3, IWO-calibrated) channel, Si-deposition mold, channel-last
@@ -159,6 +166,8 @@ AOS = TechCal(
     fbe_loss_mv=0.0, rh_loss_mv=25.0,
     hcb_route_span_um=0.4178,
     t_overhead_ns=2.0, sa_tau_ns=1.2, r_pre_kohm=8.0, r_sa_drive_kohm=8.0,
+    # amorphous-oxide channels carry a wider Vth distribution than epi-Si
+    sa_offset_sigma_mv=5.0, vth_sigma_mv=35.0, vth_overdrive_v=0.55,
 )
 
 # D1b 2D baseline (TechInsights-anchored): planar 4F^2-ish cell, long lateral
@@ -181,6 +190,8 @@ D1B = TechCal(
     fixed_c_bl_ff=D1B_C_BL_FF, fixed_density_gb_mm2=D1B_BIT_DENSITY_GB_MM2,
     fixed_blsa_area_um2=D1B_BLSA_AREA_UM2, baseline_label="D1b 2D baseline",
     e_sa_fj=D1B_E_SA_FJ, vpp=VPP_D1B,
+    # mature planar process: tighter spreads, large VPP=2.8 V overdrive
+    sa_offset_sigma_mv=4.0, vth_sigma_mv=20.0, vth_overdrive_v=1.20,
 )
 
 

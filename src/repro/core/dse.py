@@ -39,7 +39,7 @@ from .netlist import build_ladder_lowered, effective_cbl_ff
 from .parasitics import bl_parasitics_lowered
 from .routing import SCHEMES, bonding_geometry, bonding_geometry_lowered
 from .sense import sense_margin_lowered, sense_margin_mv
-from .space import DesignSpace
+from .space import MC_AXES, DesignSpace
 from . import transient
 from .transient import simulate_row_cycle, simulate_row_cycle_many
 
@@ -49,7 +49,8 @@ __all__ = [
     "full_sweep", "evaluate_grid", "sweep_combos",
 ]
 
-# Corner axes `sweep` knows how to route into the physics models.
+# Corner axes `sweep` knows how to route into the physics models (the
+# reserved mc_* channels of a with_mc space ride the same mechanism).
 SUPPORTED_CORNER_AXES = ("rh_toggles", "trc_cycles")
 
 
@@ -70,7 +71,8 @@ def sweep(space: DesignSpace | None = None, with_transient: bool = True,
     if space is None:
         space = DesignSpace.paper_grid()
     sp = space.lower()
-    unknown = [k for k in sp.corners if k not in SUPPORTED_CORNER_AXES]
+    unknown = [k for k in sp.corners
+               if k not in SUPPORTED_CORNER_AXES and k not in MC_AXES]
     if unknown:
         raise ValueError(f"unsupported corner axes {unknown}; sweep "
                          f"understands {SUPPORTED_CORNER_AXES}")
@@ -112,7 +114,8 @@ def sweep(space: DesignSpace | None = None, with_transient: bool = True,
         blsa_area_um2=geom.blsa_area_um2.astype(jnp.float32),
         manufacturable=geom.manufacturable, feasible=feasible, valid=valid,
         corners={k: jnp.asarray(v) for k, v in sp.corners.items()},
-        tech_names=sp.tech_names, scheme_names=sp.scheme_names)
+        tech_names=sp.tech_names, scheme_names=sp.scheme_names,
+        n_samples=sp.samples, base_len=len(sp) // sp.samples)
 
 
 # ---------------------------------------------------------------------------
@@ -120,12 +123,18 @@ def sweep(space: DesignSpace | None = None, with_transient: bool = True,
 # ---------------------------------------------------------------------------
 
 def pareto_mask(batch: DesignBatch, require_feasible: bool = True,
-                block: int = 4096) -> jnp.ndarray:
+                block: int = 4096, extra_maximize=(),
+                extra_minimize=()) -> jnp.ndarray:
     """Non-dominated mask maximizing density & disturbed margin, minimizing
     tRC & read energy.  Pure jnp (jit-compatible): the O(n^2) pairwise
     comparison runs as masked broadcasts over fixed-size dominator blocks,
     so peak memory is O(block * B), not O(B^2) — million-point sharded
     sweeps stay tractable (tune `block` down for very large batches).
+
+    `extra_maximize` / `extra_minimize` append further (B,) objective
+    columns — e.g. a Monte-Carlo yield column
+    (`batch.mc_summary(...).corners["yield_frac"]`) as a maximized
+    objective alongside the nominal metrics.
 
     NaN metrics (e.g. tRC with `with_transient=False`) never dominate and
     are never dominated — matching the legacy pairwise semantics.
@@ -133,8 +142,10 @@ def pareto_mask(batch: DesignBatch, require_feasible: bool = True,
     cand = batch.valid
     if require_feasible:
         cand = cand & batch.feasible
-    hi = jnp.stack([batch.density_gb_mm2, batch.margin_disturbed_mv], axis=1)
-    lo = jnp.stack([batch.trc_ns, batch.e_read_fj], axis=1)
+    hi = jnp.stack([batch.density_gb_mm2, batch.margin_disturbed_mv,
+                    *(jnp.asarray(x) for x in extra_maximize)], axis=1)
+    lo = jnp.stack([batch.trc_ns, batch.e_read_fj,
+                    *(jnp.asarray(x) for x in extra_minimize)], axis=1)
     b = hi.shape[0]
     dominated = jnp.zeros((b,), bool)
     for i0 in range(0, b, block):          # dominator blocks (static count)
@@ -155,25 +166,45 @@ def _as_batch(points_or_batch):
     return DesignBatch.from_points(points), points
 
 
-def pareto_front(points_or_batch, require_feasible: bool = True):
+def pareto_front(points_or_batch, require_feasible: bool = True,
+                 extra_maximize=(), extra_minimize=()):
     """Non-dominated set.  `DesignBatch` in -> filtered `DesignBatch` out;
-    legacy `list[DesignPoint]` in -> list out (order preserved)."""
+    legacy `list[DesignPoint]` in -> list out (order preserved).  Extra
+    (B,) objective columns (e.g. an MC yield column) pass through to
+    `pareto_mask`."""
     batch, points = _as_batch(points_or_batch)
-    mask = np.asarray(pareto_mask(batch, require_feasible))
+    mask = np.asarray(pareto_mask(batch, require_feasible,
+                                  extra_maximize=extra_maximize,
+                                  extra_minimize=extra_minimize))
     if points is None:
         return batch.select(mask)
     return [p for p, m in zip(points, mask) if m]
 
 
 def best_design(points_or_batch,
-                density_target: float = cal.DENSITY_TARGET_GB_MM2):
+                density_target: float = cal.DENSITY_TARGET_GB_MM2,
+                min_yield: float | None = None, yield_frac=None):
     """The paper's selection rule: hit the density target with a functional,
     manufacturable design; break ties by tRC then read energy then height.
     Accepts a `DesignBatch` or the legacy list; returns a `DesignPoint`
-    (or None if nothing qualifies)."""
+    (or None if nothing qualifies).
+
+    `min_yield` adds a Monte-Carlo yield floor: candidates must have
+    `yield_frac >= min_yield`, where `yield_frac` is an explicit (B,)
+    column or defaults to the batch's `corners["yield_frac"]` (set by
+    `DesignBatch.mc_summary`).
+    """
     batch, points = _as_batch(points_or_batch)
     cand = (np.asarray(batch.valid) & np.asarray(batch.feasible)
             & (np.asarray(batch.density_gb_mm2) >= density_target - 1e-9))
+    if min_yield is not None:
+        if yield_frac is None:
+            yield_frac = batch.corners.get("yield_frac")
+        if yield_frac is None:
+            raise ValueError(
+                "min_yield needs a yield column: pass yield_frac= or use "
+                "a batch with corners['yield_frac'] (DesignBatch.mc_summary)")
+        cand &= np.asarray(yield_frac) >= min_yield - 1e-9
     idx = np.flatnonzero(cand)
     if idx.size == 0:
         return None

@@ -9,7 +9,7 @@ strap on the global line contributes its local capacitance.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 import jax.numpy as jnp
 
@@ -116,8 +116,13 @@ def bl_parasitics_lowered(view) -> BLParasitics:
     `view` follows the LoweredSpace protocol (`core.space`): per-point
     `.layers` plus `.tech(field)` / `.scheme(field)` gathers.  One call
     covers every (tech, scheme, layers) point of the flat batch.
+
+    Monte-Carlo spaces (`DesignSpace.with_mc`) carry per-sample Vth
+    perturbations; those fold into the access-transistor effective
+    on-resistance here — r_on scales inversely with the gate overdrive,
+    so a +dVth sample conducts less and slows the fused row cycle.
     """
-    return _assemble(
+    par = _assemble(
         view.layers,
         baseline_2d=view.tech("baseline_2d"),
         fixed_c_bl_ff=view.tech("fixed_c_bl_ff"),
@@ -137,6 +142,15 @@ def bl_parasitics_lowered(view) -> BLParasitics:
         r_sel_in_path=view.scheme("r_sel_in_path"),
         r_global_in_path=view.scheme("r_global_in_path"),
     )
+    dvth_mv = view.corner("mc_delta_vth_mv", None)
+    if dvth_mv is not None:
+        # triode-region conductance ~ overdrive: r_on' = r_on * Vov/(Vov-dVth),
+        # with dVth clamped inside the overdrive so r_on stays finite/positive
+        vov = jnp.asarray(view.tech("vth_overdrive_v"), jnp.float32)
+        dvth_v = jnp.clip(jnp.asarray(dvth_mv, jnp.float32) * 1e-3,
+                          -0.5 * vov, 0.5 * vov)
+        par = replace(par, r_on_kohm=par.r_on_kohm * vov / (vov - dvth_v))
+    return par
 
 
 def wl_parasitics(tech: TechCal):

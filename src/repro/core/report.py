@@ -7,9 +7,17 @@ Each function corresponds to a paper artifact:
   fig9c_spec_table         -> Fig. 9(c): this-work vs D1b spec comparison
   table1_summary           -> Table I "This Work" column quantities
 
+Yield-aware variants (Monte-Carlo through the same fused sweep):
+  mc_yield_table           -> Table-1/Fig-9c points as margin/tRC *yield*
+                              (per-sample SA offset + Vth variation)
+  fig9b_margin_yield_vs_density -> Fig. 9(b) with the functional line
+                              replaced by a per-density yield fraction
+
 The DSE-shaped tables (fig3 / fig9b / fig9c) are generated from ONE
 vectorized `dse.sweep` over a declarative `DesignSpace` and read straight
-off the resulting `DesignBatch` columns — no per-combo model calls.
+off the resulting `DesignBatch` columns — no per-combo model calls; the
+MC variants fan the same spaces out with `with_mc` and read the
+`yield_fraction`/`quantile` segment reductions.
 """
 
 from __future__ import annotations
@@ -137,6 +145,91 @@ def fig9c_spec_table(with_transient: bool = True) -> dict:
             read_energy_reduction=1 - out["si"]["e_read_fj"] / out["d1b"]["e_read_fj"],
         )
     return out
+
+
+def mc_yield_table(samples: int = 256, key=0,
+                   margin_floor_mv: float | None = None,
+                   trc_ceiling_ns: float | None = None,
+                   with_transient: bool = True) -> dict:
+    """Yield-aware Table-1/Fig-9c variant: the paper's target design
+    points under SA-offset + Vth Monte-Carlo, one fused sweep.
+
+    Per tech: nominal-spec yield fractions (functional margin floor, and
+    the disturbed floor on the disturbed margin), tail quantiles of the
+    sampled metrics, and the spec-yield against an optional tRC ceiling.
+    `margin_floor_mv` defaults to the paper's functional threshold.
+    """
+    if margin_floor_mv is None:
+        margin_floor_mv = cal.MIN_FUNCTIONAL_MARGIN_MV
+    space = DesignSpace.paper_targets().with_mc(samples=samples, key=key)
+    batch = dse.sweep(space, with_transient=with_transient)
+
+    y_margin = np.asarray(batch.yield_fraction(margin_mv=margin_floor_mv))
+    y_dist = np.asarray(batch.yield_fraction(
+        margin_mv=cal.MIN_DISTURBED_MARGIN_MV, disturbed=True))
+    y_spec = np.asarray(batch.yield_fraction(
+        margin_mv=margin_floor_mv, trc_ns=trc_ceiling_ns))
+    p05_margin = np.asarray(batch.quantile(0.05, "margin_mv"))
+    med_margin = np.asarray(batch.quantile(0.5, "margin_mv"))
+    if with_transient:
+        med_trc = np.asarray(batch.quantile(0.5, "trc_ns"))
+        p95_trc = np.asarray(batch.quantile(0.95, "trc_ns"))
+
+    out = {"samples": samples,
+           "margin_floor_mv": float(margin_floor_mv),
+           "trc_ceiling_ns": trc_ceiling_ns}
+    base = batch.base_len
+    tech_col = batch.tech_col[:base]       # sample 0 carries the row labels
+    layers = np.asarray(batch.layers)[:base]
+    for i, tname in enumerate(tech_col):
+        entry = dict(
+            layers=int(layers[i]),
+            yield_margin=float(y_margin[i]),
+            yield_margin_disturbed=float(y_dist[i]),
+            yield_spec=float(y_spec[i]),
+            margin_mv_p05=float(p05_margin[i]),
+            margin_mv_median=float(med_margin[i]),
+        )
+        if with_transient:
+            entry["trc_ns_median"] = float(med_trc[i])
+            entry["trc_ns_p95"] = float(p95_trc[i])
+        out[tname] = entry
+    return out
+
+
+def fig9b_margin_yield_vs_density(densities=None, scheme: str = "sel_strap",
+                                  samples: int = 128, key=0) -> list[dict]:
+    """Fig. 9(b) yield variant: per (tech, density) the fraction of MC
+    samples whose disturbed margin clears the functional floor — the
+    binary `functional` line of `fig9b_margin_vs_density` becomes a
+    yield curve."""
+    if densities is None:
+        densities = np.linspace(0.5, 3.5, 13)
+    techs = _non_baseline_techs()
+    space = DesignSpace(entries=())
+    for tech in techs:
+        layers = np.asarray(layers_for_density(tech, densities))
+        space = space + DesignSpace.points(
+            [(tech.name, scheme, int(l)) for l in layers])
+    batch = dse.sweep(space.with_mc(samples=samples, key=key),
+                      with_transient=False)
+    y_dist = np.asarray(batch.yield_fraction(
+        margin_mv=cal.MIN_DISTURBED_MARGIN_MV, disturbed=True))
+    p05 = np.asarray(batch.quantile(0.05, "margin_disturbed_mv"))
+    med = np.asarray(batch.quantile(0.5, "margin_disturbed_mv"))
+
+    rows = []
+    i = 0
+    for tech in techs:
+        for d in densities:
+            rows.append(dict(
+                tech=tech.name, density_gb_mm2=float(d),
+                layers=int(batch.layers[i]),
+                margin_with_fbe_rh_mv_median=float(med[i]),
+                margin_with_fbe_rh_mv_p05=float(p05[i]),
+                yield_disturbed=float(y_dist[i])))
+            i += 1
+    return rows
 
 
 def table1_summary() -> dict:

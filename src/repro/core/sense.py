@@ -47,7 +47,12 @@ def sense_margin_lowered(view, with_disturb: bool = False,
         cbl_ff = effective_cbl_lowered(view)
     dv = 1e3 * (cal.VDD_ARRAY / 2.0) * cal.CS_FF / (cal.CS_FF + cbl_ff)
     dv = dv - (1.0 - view.tech("writeback_eff")) * (cal.VDD_ARRAY / 2.0) * 1e3
-    dv = dv - view.tech("sa_offset_mv")
+    # Monte-Carlo spaces carry per-sample SA offsets (with_mc lowering);
+    # nominal spaces fall back to the calibrated per-tech corner value.
+    sa_offset = view.corner("mc_sa_offset_mv", None)
+    if sa_offset is None:
+        sa_offset = view.tech("sa_offset_mv")
+    dv = dv - sa_offset
     if with_disturb:
         dv = dv - disturb_loss_lowered(view)
     return dv.astype(jnp.float32)

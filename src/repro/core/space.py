@@ -22,6 +22,13 @@ LoweredSpace protocol (duck-typed; physics modules take any `view` with):
     view.tech(field)     (B,) gather of a TechCal field per point
     view.scheme(field)   (B,) gather of a SchemeSpec field per point
     view.corner(name, d) (B,) corner-axis values, or the scalar default
+
+Monte-Carlo sampling (`with_mc`) rides the same per-row channel: lowering
+fans every design point out to N sampled rows (sample-major) and injects
+the draws as reserved `mc_*` corner arrays (`mc_sa_offset_mv`,
+`mc_delta_vth_mv`), so the physics modules pick them up through
+`view.corner` with no new protocol and the whole sampled space is still
+ONE flat batch through the fused row-cycle engine.
 """
 
 from __future__ import annotations
@@ -38,6 +45,37 @@ from . import routing
 # The paper's layer-count sweep grid (Figs. 9a/9b x-axis anchors).
 DEFAULT_LAYER_GRID = (32, 48, 64, 87, 100, 120, 137, 160, 200)
 
+# Reserved per-row channels injected by Monte-Carlo lowering; user corner
+# axes must not collide with these (`with_corners` rejects the prefix).
+MC_AXES = ("mc_sa_offset_mv", "mc_delta_vth_mv")
+
+
+def _key_entropy(key) -> tuple:
+    """Normalize an MC key (int seed or JAX PRNG key) to a hashable
+    entropy tuple for `np.random.default_rng` (SeedSequence entropy)."""
+    if isinstance(key, (int, np.integer)):
+        return (int(key),)
+    try:
+        import jax
+        key = jax.random.key_data(key)
+    except Exception:
+        pass
+    return tuple(int(x) for x in np.asarray(key, np.uint32).reshape(-1))
+
+
+@dataclass(frozen=True)
+class MCConfig:
+    """Monte-Carlo sampling declaration attached by `with_mc`.
+
+    `sa_offset_sigma_mv` / `vth_sigma_mv` of None mean "use each tech's
+    calibrated sigma fields"; explicit values override every tech (the
+    sigma=0 escape hatch reproduces the nominal sweep exactly).
+    """
+    samples: int
+    entropy: tuple
+    sa_offset_sigma_mv: float | None = None
+    vth_sigma_mv: float | None = None
+
 
 @dataclass(frozen=True)
 class LoweredSpace:
@@ -50,6 +88,7 @@ class LoweredSpace:
     layers_np: np.ndarray       # (B,) float32
     valid: np.ndarray           # (B,) bool
     corners: dict = field(default_factory=dict)
+    samples: int = 1            # MC fan-out (B = samples * base points)
 
     def __len__(self) -> int:
         return int(self.tech_idx.shape[0])
@@ -94,6 +133,7 @@ class DesignSpace:
 
     entries: tuple = ()          # ((tech_name, scheme_name, layers), ...)
     corner_axes: tuple = ()      # ((axis_name, values), ...)
+    mc: MCConfig | None = None   # Monte-Carlo sampling (with_mc)
 
     # ---------------------------------------------------------- builders --
     @classmethod
@@ -163,6 +203,9 @@ class DesignSpace:
         if self.corner_axes != other.corner_axes:
             raise ValueError("cannot concatenate DesignSpaces with "
                              "different corner axes")
+        if self.mc != other.mc:
+            raise ValueError("cannot concatenate DesignSpaces with "
+                             "different Monte-Carlo declarations")
         return replace(self, entries=self.entries + other.entries)
 
     def with_corners(self, **axes) -> "DesignSpace":
@@ -176,6 +219,9 @@ class DesignSpace:
         new = list(self.corner_axes)
         declared = {n for n, _ in new}
         for name, values in axes.items():
+            if name.startswith("mc_"):
+                raise ValueError(f"corner axis {name!r}: the 'mc_' prefix "
+                                 "is reserved for with_mc sampling channels")
             if name in declared:
                 raise ValueError(f"corner axis {name!r} already declared")
             vals = tuple(float(v) for v in np.asarray(values).reshape(-1))
@@ -185,12 +231,40 @@ class DesignSpace:
             declared.add(name)
         return replace(self, corner_axes=tuple(new))
 
+    def with_mc(self, samples: int, key=0,
+                sa_offset_sigma_mv: float | None = None,
+                vth_sigma_mv: float | None = None) -> "DesignSpace":
+        """Declare Monte-Carlo variation sampling: every design point fans
+        out to `samples` rows of the SAME flat batch (sample-major), each
+        with an independently drawn BLSA offset and access-transistor Vth
+        perturbation.
+
+        Draws are deterministic in `key` (an int seed or a JAX PRNG key):
+        the same key lowers to bit-identical sample rows, so downstream
+        yield columns are reproducible.  Sigmas default to each tech's
+        calibrated `sa_offset_sigma_mv` / `vth_sigma_mv` fields; explicit
+        overrides apply to every tech (`sigma=0` with `samples=1`
+        reproduces the nominal sweep exactly).
+        """
+        samples = int(samples)
+        if samples < 1:
+            raise ValueError(f"with_mc needs samples >= 1, got {samples}")
+        if self.mc is not None:
+            raise ValueError("Monte-Carlo sampling already declared on "
+                             "this space")
+        return replace(self, mc=MCConfig(
+            samples=samples, entropy=_key_entropy(key),
+            sa_offset_sigma_mv=sa_offset_sigma_mv,
+            vth_sigma_mv=vth_sigma_mv))
+
     # ---------------------------------------------------------- lowering --
     def __len__(self) -> int:
         base = sum(len(grid) for _, _, grid in self.entries)
         reps = 1
         for _, vals in self.corner_axes:
             reps *= len(vals)
+        if self.mc is not None:
+            reps *= self.mc.samples
         return base * reps
 
     def lower(self) -> LoweredSpace:
@@ -199,6 +273,9 @@ class DesignSpace:
         Row order is entry-major (techs in declaration order, schemes and
         layers nested), with the corner-combo product outermost — so the
         first base-block of a cornered space is its first corner combo.
+        Monte-Carlo sampling is outermost of all: sample s of base row i
+        lands at flat row `s * base + i`, which is what the DesignBatch
+        segment reductions (`yield_fraction`/`quantile`) assume.
         """
         if not self.entries:
             raise ValueError(
@@ -236,7 +313,38 @@ class DesignSpace:
                 corners[name] = np.repeat(
                     np.asarray([combo[a] for combo in combos], np.float32), b)
 
+        samples = 1
+        if self.mc is not None:
+            samples = self.mc.samples
+            b0 = layers.shape[0]
+            rng = np.random.default_rng(self.mc.entropy)
+            z = rng.standard_normal((2, samples, b0))
+
+            def gather(fieldname):
+                vals = [getattr(cal.get_tech(n), fieldname)
+                        for n in tech_names]
+                return np.asarray(vals, np.float64)[tech_idx]
+
+            mu_sa = gather("sa_offset_mv")
+            sig_sa = (gather("sa_offset_sigma_mv")
+                      if self.mc.sa_offset_sigma_mv is None
+                      else np.full(b0, float(self.mc.sa_offset_sigma_mv)))
+            sig_vth = (gather("vth_sigma_mv")
+                       if self.mc.vth_sigma_mv is None
+                       else np.full(b0, float(self.mc.vth_sigma_mv)))
+            # offset magnitudes: a sample below 0 has no physical meaning
+            mc_sa = np.maximum(mu_sa[None] + sig_sa[None] * z[0], 0.0)
+            mc_dvth = sig_vth[None] * z[1]
+
+            tech_idx = np.tile(tech_idx, samples)
+            scheme_idx = np.tile(scheme_idx, samples)
+            layers = np.tile(layers, samples)
+            corners = {k: np.tile(v, samples) for k, v in corners.items()}
+            corners["mc_sa_offset_mv"] = mc_sa.reshape(-1).astype(np.float32)
+            corners["mc_delta_vth_mv"] = mc_dvth.reshape(-1).astype(np.float32)
+
         return LoweredSpace(
             tech_names=tuple(tech_names), scheme_names=tuple(scheme_names),
             tech_idx=tech_idx, scheme_idx=scheme_idx, layers_np=layers,
-            valid=np.ones(layers.shape[0], bool), corners=corners)
+            valid=np.ones(layers.shape[0], bool), corners=corners,
+            samples=samples)

@@ -159,6 +159,11 @@ def lower_design_operands(view, ladder_c=None, ladder_g=None,
     `view` follows the LoweredSpace protocol (`core.space`); ladder arrays
     / parasitics are rebuilt unless passed in.  Masked-out points
     (`view.valid == False`) become inactive kernel rows.
+
+    Monte-Carlo spaces need no special handling here: the per-sample Vth
+    draw is already folded into the access-transistor conductance by
+    `parasitics.bl_parasitics_lowered`, so the sampled rows flow through
+    the same single chunked fused dispatch as nominal design points.
     """
     if ladder_c is None or ladder_g is None:
         ladder_c, ladder_g = build_ladder_lowered(view, par)

@@ -1,0 +1,291 @@
+"""Monte-Carlo yield engine (PR 3).
+
+Covers the `with_mc` fan-out through the fused row-cycle sweep:
+
+1. Lowering: sample-major row layout, reserved mc_* channels, draw
+   determinism (same key => bit-identical columns), validation.
+2. Nominal equivalence: `with_mc(samples=1, sigma=0)` reproduces the
+   plain sweep bit-for-bit and the `evaluate_grid` scalar oracle.
+3. Physics plumbing: per-sample SA offset shifts the margins by exactly
+   the drawn delta; the Vth draw moves the fused tRC monotonically.
+4. Yield reductions: `yield_fraction`/`quantile` against a scalar
+   per-sample oracle; `mc_summary` layout and `yield_frac` column.
+5. Dispatch: a with_mc sweep still runs ONE chunked fused evaluation.
+6. Selection: yield columns as Pareto/best_design objectives.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import calibration as cal
+from repro.core import dse
+from repro.core.space import MC_AXES, DesignSpace
+
+POINTS = (("si", "sel_strap", 137), ("aos", "sel_strap", 87),
+          ("d1b", "direct", 1))
+
+
+def base_space():
+    return DesignSpace.points(POINTS)
+
+
+def mc_sweep(samples=32, key=0, with_transient=False, **mc_kw):
+    space = base_space().with_mc(samples=samples, key=key, **mc_kw)
+    return dse.sweep(space, with_transient=with_transient)
+
+
+class TestMCLowering:
+    def test_sample_major_layout_and_reserved_channels(self):
+        sp = base_space().with_mc(samples=5, key=1).lower()
+        assert sp.samples == 5
+        assert len(sp) == 5 * len(POINTS)
+        for name in MC_AXES:
+            assert sp.corners[name].shape == (len(sp),)
+        # deterministic per-point identity repeats per sample block
+        np.testing.assert_array_equal(sp.tech_idx,
+                                      np.tile(sp.tech_idx[:3], 5))
+        np.testing.assert_array_equal(sp.layers_np,
+                                      np.tile(sp.layers_np[:3], 5))
+
+    def test_same_key_bit_identical_different_key_not(self):
+        a = base_space().with_mc(samples=16, key=42).lower()
+        b = base_space().with_mc(samples=16, key=42).lower()
+        c = base_space().with_mc(samples=16, key=43).lower()
+        for name in MC_AXES:
+            np.testing.assert_array_equal(a.corners[name], b.corners[name])
+        assert not np.array_equal(a.corners["mc_sa_offset_mv"],
+                                  c.corners["mc_sa_offset_mv"])
+
+    def test_jax_prng_key_accepted(self):
+        import jax
+        sp_int = base_space().with_mc(samples=4, key=7)
+        sp_key = base_space().with_mc(samples=4, key=jax.random.PRNGKey(7))
+        # both lower deterministically (not necessarily to the same draws)
+        for sp in (sp_int, sp_key):
+            a, b = sp.lower(), sp.lower()
+            np.testing.assert_array_equal(a.corners["mc_sa_offset_mv"],
+                                          b.corners["mc_sa_offset_mv"])
+
+    def test_validation(self):
+        space = base_space()
+        with pytest.raises(ValueError, match="samples >= 1"):
+            space.with_mc(samples=0)
+        with pytest.raises(ValueError, match="already declared"):
+            space.with_mc(samples=2).with_mc(samples=2)
+        with pytest.raises(ValueError, match="reserved"):
+            space.with_corners(mc_sa_offset_mv=(1.0,))
+        with pytest.raises(ValueError, match="Monte-Carlo"):
+            space.with_mc(samples=2) + space
+        assert len(space.with_mc(samples=8)) == 8 * len(POINTS)
+
+    def test_mc_composes_with_corner_axes(self):
+        space = (base_space()
+                 .with_corners(rh_toggles=(1e4, 5e4))
+                 .with_mc(samples=3, key=0))
+        sp = space.lower()
+        assert len(sp) == 3 * 2 * len(POINTS)
+        # corner values tile under the MC fan-out (samples outermost)
+        one_sample = np.repeat([1e4, 5e4], len(POINTS))
+        np.testing.assert_array_equal(sp.corners["rh_toggles"],
+                                      np.tile(one_sample, 3))
+        batch = dse.sweep(space, with_transient=False)
+        assert batch.n_samples == 3 and batch.base_len == 2 * len(POINTS)
+
+
+class TestNominalEquivalence:
+    def test_samples1_sigma0_is_bit_identical_to_nominal(self):
+        nom = dse.sweep(base_space(), with_transient=True)
+        mc0 = dse.sweep(
+            base_space().with_mc(samples=1, key=9, sa_offset_sigma_mv=0.0,
+                                 vth_sigma_mv=0.0), with_transient=True)
+        for f in ("margin_mv", "margin_disturbed_mv", "trc_ns",
+                  "t_sense_ns", "cbl_ff", "density_gb_mm2", "e_read_fj",
+                  "e_write_fj", "feasible"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(nom, f)), np.asarray(getattr(mc0, f)), f)
+
+    def test_samples1_sigma0_matches_scalar_oracle(self):
+        mc0 = dse.sweep(
+            base_space().with_mc(samples=1, key=3, sa_offset_sigma_mv=0.0,
+                                 vth_sigma_mv=0.0), with_transient=True)
+        for got in mc0.to_points():
+            tech = cal.get_tech(got.tech)
+            (ref,) = dse.evaluate_grid(tech, got.scheme,
+                                       np.asarray([got.layers]))
+            assert got.margin_mv == pytest.approx(ref.margin_mv, rel=1e-5)
+            assert got.trc_ns == pytest.approx(ref.trc_ns, rel=1e-5)
+            assert got.feasible == ref.feasible
+
+
+class TestPhysicsPlumbing:
+    def test_sa_offset_delta_shifts_margin_exactly(self):
+        batch = mc_sweep(samples=16, key=5)
+        nom = dse.sweep(base_space(), with_transient=False)
+        base = batch.base_len
+        sa = np.asarray(batch.corners["mc_sa_offset_mv"], np.float32)
+        for i in range(len(batch)):
+            tech = cal.get_tech(batch.tech_col[i])
+            expect = (float(nom.margin_mv[i % base])
+                      + np.float32(tech.sa_offset_mv) - sa[i])
+            assert float(batch.margin_mv[i]) == pytest.approx(expect,
+                                                              abs=1e-3)
+
+    def test_vth_draw_moves_fused_trc_monotonically(self):
+        batch = mc_sweep(samples=12, key=2, with_transient=True)
+        base = batch.base_len
+        trc = np.asarray(batch.trc_ns).reshape(-1, base)
+        dvth = np.asarray(batch.corners["mc_delta_vth_mv"]).reshape(-1, base)
+        for j in range(base):
+            assert trc[:, j].std() > 0.0
+            order = np.argsort(dvth[:, j])
+            # higher Vth -> less overdrive -> slower row cycle
+            assert np.corrcoef(dvth[order, j], trc[order, j])[0, 1] > 0.9
+
+
+class TestYieldReductions:
+    def test_yield_fraction_matches_scalar_per_sample_oracle(self):
+        batch = mc_sweep(samples=32, key=0)
+        base = batch.base_len
+        margin = np.asarray(batch.margin_mv).reshape(-1, base)
+        margin_d = np.asarray(batch.margin_disturbed_mv).reshape(-1, base)
+        for floor in (80.0, 130.0, 190.0):
+            got = np.asarray(batch.yield_fraction(margin_mv=floor))
+            np.testing.assert_allclose(got, (margin >= floor).mean(axis=0),
+                                       atol=1e-7)
+            got_d = np.asarray(batch.yield_fraction(margin_mv=floor,
+                                                    disturbed=True))
+            np.testing.assert_allclose(got_d,
+                                       (margin_d >= floor).mean(axis=0),
+                                       atol=1e-7)
+
+    def test_yield_fraction_with_trc_spec(self):
+        batch = mc_sweep(samples=8, key=1, with_transient=True)
+        base = batch.base_len
+        margin = np.asarray(batch.margin_mv).reshape(-1, base)
+        trc = np.asarray(batch.trc_ns).reshape(-1, base)
+        got = np.asarray(batch.yield_fraction(margin_mv=80.0, trc_ns=11.5))
+        ref = ((margin >= 80.0) & (trc <= 11.5)).mean(axis=0)
+        np.testing.assert_allclose(got, ref, atol=1e-7)
+
+    def test_nan_trc_never_passes_a_trc_spec(self):
+        batch = mc_sweep(samples=4, key=0, with_transient=False)
+        got = np.asarray(batch.yield_fraction(trc_ns=1e9))
+        np.testing.assert_array_equal(got, np.zeros(batch.base_len))
+
+    def test_quantile_matches_numpy(self):
+        batch = mc_sweep(samples=32, key=0)
+        base = batch.base_len
+        margin = np.asarray(batch.margin_mv, np.float32).reshape(-1, base)
+        for q in (0.05, 0.5, 0.95):
+            got = np.asarray(batch.quantile(q, "margin_mv"))
+            np.testing.assert_allclose(got, np.quantile(margin, q, axis=0),
+                                       rtol=1e-5)
+
+    def test_reductions_ignore_padding_rows(self):
+        batch = mc_sweep(samples=8, key=0)
+        padded = batch.pad_to(64)
+        assert len(padded) == 64
+        np.testing.assert_array_equal(
+            np.asarray(padded.yield_fraction(margin_mv=100.0)),
+            np.asarray(batch.yield_fraction(margin_mv=100.0)))
+        np.testing.assert_allclose(
+            np.asarray(padded.quantile(0.5, "margin_mv")),
+            np.asarray(batch.quantile(0.5, "margin_mv")), rtol=1e-6)
+
+    def test_selected_batch_rejected(self):
+        batch = mc_sweep(samples=4, key=0)
+        broken = batch.select(np.arange(len(batch) - 2))
+        with pytest.raises(ValueError, match="sample-major"):
+            broken.yield_fraction(margin_mv=80.0)
+
+    def test_nominal_batch_yield_is_pass_map(self):
+        nom = dse.sweep(base_space(), with_transient=False)
+        got = np.asarray(nom.yield_fraction(margin_mv=80.0))
+        np.testing.assert_array_equal(
+            got, (np.asarray(nom.margin_mv) >= 80.0).astype(np.float32))
+
+    def test_same_key_bit_identical_yield_columns(self):
+        a = mc_sweep(samples=32, key=11)
+        b = mc_sweep(samples=32, key=11)
+        np.testing.assert_array_equal(
+            np.asarray(a.yield_fraction(margin_mv=80.0)),
+            np.asarray(b.yield_fraction(margin_mv=80.0)))
+        np.testing.assert_array_equal(np.asarray(a.margin_mv),
+                                      np.asarray(b.margin_mv))
+
+
+class TestSummaryAndSelection:
+    def test_single_fused_dispatch(self, monkeypatch):
+        calls = []
+        orig = dse.simulate_row_cycle_many
+
+        def counting(*args, **kw):
+            calls.append(1)
+            return orig(*args, **kw)
+
+        monkeypatch.setattr(dse, "simulate_row_cycle_many", counting)
+        dse.sweep(base_space().with_mc(samples=16, key=0))
+        assert len(calls) == 1
+
+    def test_mc_summary_layout_and_yield_column(self):
+        batch = mc_sweep(samples=32, key=0)
+        summ = batch.mc_summary(margin_mv=cal.MIN_FUNCTIONAL_MARGIN_MV)
+        assert len(summ) == batch.base_len
+        assert summ.n_samples == 1
+        assert summ.tech_col == batch.tech_col[:batch.base_len]
+        yf = np.asarray(summ.corners["yield_frac"])
+        np.testing.assert_allclose(
+            yf, np.asarray(batch.yield_fraction(
+                margin_mv=cal.MIN_FUNCTIONAL_MARGIN_MV)))
+        # per-sample draw channels do not survive the reduction
+        assert not any(k.startswith("mc_") for k in summ.corners)
+        # sampled metrics collapse to the median
+        np.testing.assert_allclose(
+            np.asarray(summ.margin_mv),
+            np.asarray(batch.quantile(0.5, "margin_mv")), rtol=1e-6)
+
+    def test_best_design_min_yield(self):
+        batch = mc_sweep(samples=32, key=0)
+        summ = batch.mc_summary(margin_mv=cal.MIN_FUNCTIONAL_MARGIN_MV)
+        best = dse.best_design(summ, density_target=0.1, min_yield=0.9)
+        assert best is not None
+        # an impossible yield floor rejects everything
+        assert dse.best_design(summ, density_target=0.1,
+                               min_yield=1.1) is None
+        # explicit column overrides the corners entry
+        zero = np.zeros(len(summ), np.float32)
+        assert dse.best_design(summ, density_target=0.1, min_yield=0.5,
+                               yield_frac=zero) is None
+        with pytest.raises(ValueError, match="yield column"):
+            dse.best_design(dse.sweep(base_space(), with_transient=False),
+                            min_yield=0.5)
+
+    def test_pareto_front_accepts_yield_objective(self):
+        batch = mc_sweep(samples=32, key=0)
+        summ = batch.mc_summary(margin_mv=cal.MIN_FUNCTIONAL_MARGIN_MV)
+        yf = summ.corners["yield_frac"]
+        front = dse.pareto_front(summ, extra_maximize=(yf,))
+        assert 0 < len(front) <= len(summ)
+        # a constant extra objective changes nothing
+        const = np.ones(len(summ), np.float32)
+        base_mask = np.asarray(dse.pareto_mask(summ))
+        np.testing.assert_array_equal(
+            np.asarray(dse.pareto_mask(summ, extra_maximize=(const,))),
+            base_mask)
+
+    def test_report_yield_tables_smoke(self):
+        from repro.core import report
+        table = report.mc_yield_table(samples=8, key=0)
+        for tech in ("si", "aos", "d1b"):
+            entry = table[tech]
+            assert 0.0 <= entry["yield_margin"] <= 1.0
+            assert entry["margin_mv_p05"] <= entry["margin_mv_median"]
+            assert entry["trc_ns_median"] <= entry["trc_ns_p95"]
+        # nominal designs clear the functional floor; D1b does not
+        assert table["si"]["yield_margin"] == 1.0
+        assert table["d1b"]["yield_margin"] == 0.0
+        rows = report.fig9b_margin_yield_vs_density(
+            densities=np.asarray([1.0, 2.6]), samples=8, key=0)
+        assert len(rows) == 4
+        for r in rows:
+            assert 0.0 <= r["yield_disturbed"] <= 1.0
