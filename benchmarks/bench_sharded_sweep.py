@@ -1,0 +1,98 @@
+"""Sharded sweep throughput vs device count (forced host devices).
+
+Measures `dse.sweep(space, sharding=mesh)` points/sec on the paper grid
+fanned out with Monte-Carlo samples, at several forced-host-platform
+device counts.  Each count runs in a subprocess because
+`--xla_force_host_platform_device_count` must be set before the first
+jax import.  The 1-device run is the baseline; the scaling record
+(`best_scaling_vs_1dev`) is what CI tracks in BENCH_sharded_sweep.json.
+
+On shared CPU runners the devices are threads over a few cores, so the
+interesting signal is "does sharding beat the sequential chunk loop at
+all" (>1x), not linear scaling — real meshes (one accelerator per
+device, multi-host) are where the slab-per-device dispatch pays off.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from .common import emit
+
+DEVICE_COUNTS = (1, 2, 4, 8)
+MC_SAMPLES = 64
+
+_CHILD = """
+import json, time
+import jax
+from repro.core import dse
+from repro.core.space import DesignSpace
+from repro.launch.mesh import make_sweep_mesh
+
+space = DesignSpace.paper_grid().with_mc(samples=%d, key=0)
+mesh = make_sweep_mesh()
+run = lambda: jax.block_until_ready(dse.sweep(space, sharding=mesh).trc_ns)
+run()                                            # compile
+ts = []
+for _ in range(3):
+    t0 = time.perf_counter()
+    run()
+    ts.append(time.perf_counter() - t0)
+print(json.dumps({"ndev": jax.device_count(), "points": len(space),
+                  "wall_s": min(ts)}))
+"""
+
+
+def _child_env(ndev: int) -> dict:
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"     # never probe for TPU hardware
+    # our forced count goes LAST: with duplicated flags the later one
+    # wins, so a pre-existing forced count must not override the bench's
+    env["XLA_FLAGS"] = " ".join(
+        [env.get("XLA_FLAGS", ""),
+         f"--xla_force_host_platform_device_count={ndev}"]).strip()
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if "PYTHONPATH" in env else "")
+    return env
+
+
+def main() -> dict:
+    per_device: dict = {}
+    for ndev in DEVICE_COUNTS:
+        r = subprocess.run([sys.executable, "-c", _CHILD % MC_SAMPLES],
+                           capture_output=True, text=True,
+                           env=_child_env(ndev), timeout=600)
+        if r.returncode != 0:
+            raise RuntimeError(f"sharded bench child (ndev={ndev}) failed:\n"
+                               f"{r.stderr[-2000:]}")
+        rec = json.loads(r.stdout.strip().splitlines()[-1])
+        assert rec["ndev"] == ndev, rec
+        pts_per_s = rec["points"] / rec["wall_s"]
+        rec["points_per_s"] = pts_per_s
+        per_device[str(ndev)] = rec
+        emit(f"sharded_sweep_d{ndev}", rec["wall_s"] * 1e6,
+             f"points_per_s={pts_per_s:,.0f}")
+
+    base = per_device["1"]["points_per_s"]
+    best_ndev = max(per_device, key=lambda k: per_device[k]["points_per_s"])
+    scaling = per_device[best_ndev]["points_per_s"] / base
+    emit("sharded_sweep_scaling", 0.0,
+         f"best={best_ndev}dev;vs_1dev={scaling:.2f}x")
+
+    return {
+        "mc_samples": MC_SAMPLES,
+        "points": per_device["1"]["points"],
+        "device_counts": list(DEVICE_COUNTS),
+        "per_device": per_device,
+        "best_device_count": int(best_ndev),
+        "best_scaling_vs_1dev": scaling,
+    }
+
+
+if __name__ == "__main__":
+    main()

@@ -22,13 +22,14 @@ import traceback
 
 from . import (bench_fig3_routing, bench_fig8_transient, bench_fig9_scaling,
                bench_fused_row_cycle, bench_kernels, bench_roofline,
-               bench_strap_cache, bench_table1)
+               bench_sharded_sweep, bench_strap_cache, bench_table1)
 
 ALL = {
     "table1": bench_table1.main,
     "fig3": bench_fig3_routing.main,
     "fig8": bench_fig8_transient.main,
     "fused_rc": bench_fused_row_cycle.main,
+    "sharded_sweep": bench_sharded_sweep.main,
     "fig9": bench_fig9_scaling.main,
     "kernels": bench_kernels.main,
     "strap_cache": bench_strap_cache.main,

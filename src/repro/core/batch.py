@@ -138,12 +138,22 @@ class DesignBatch:
         return [self.scheme_names[i] for i in np.asarray(self.scheme_idx)]
 
     def select(self, where) -> "DesignBatch":
-        """Rows selected by a boolean mask or index array (host-side)."""
+        """Rows selected by a boolean mask or index array (host-side).
+
+        Selecting rows of a Monte-Carlo batch destroys the sample-major
+        layout the MC reductions assume, so the MC aux is cleared to a
+        sentinel (`n_samples=0`): stale `yield_fraction`/`quantile`/
+        `mc_summary` calls on the selection raise instead of silently
+        reducing a broken layout.  Reduce first (`mc_summary`) and select
+        the per-design summary instead.
+        """
         idx = np.asarray(where)
         if idx.dtype == bool:
             idx = np.flatnonzero(idx)
         take = lambda a: jnp.asarray(a)[idx]
-        return jax.tree_util.tree_map(take, self)
+        out = jax.tree_util.tree_map(take, self)
+        return replace(out, n_samples=0 if self.n_samples != 1 else 1,
+                       base_len=0)
 
     def pad_to(self, multiple: int) -> "DesignBatch":
         """Pad the batch axis up to a multiple (sharding/chunk alignment).
@@ -172,6 +182,11 @@ class DesignBatch:
     # layout and are rejected.
 
     def _mc_base(self) -> int:
+        if self.n_samples == 0:
+            raise ValueError(
+                "MC reductions need the sweep's sample-major layout, which "
+                "select() destroys — reduce first (mc_summary) and select "
+                "the per-design summary batch instead")
         base = self.base_len or len(self)
         if len(self) < self.n_samples * base:
             raise ValueError(
@@ -186,7 +201,11 @@ class DesignBatch:
                                    ids, num_segments=base)
         tot = jax.ops.segment_sum(self.valid.astype(jnp.float32),
                                   ids, num_segments=base)
-        return hits / jnp.maximum(tot, 1.0)
+        # A design with ZERO valid samples has no yield estimate at all:
+        # NaN, not 0.0, so never-evaluated designs cannot masquerade as
+        # true yield-0 designs (pareto_mask's NaN columns neither dominate
+        # nor get dominated, so they pass through selection unharmed).
+        return jnp.where(tot > 0.0, hits / jnp.maximum(tot, 1.0), jnp.nan)
 
     def yield_fraction(self, margin_mv: float | None = None,
                        trc_ns: float | None = None,
@@ -197,7 +216,9 @@ class DesignBatch:
         (the disturbed margin when `disturbed=True`) AND its row-cycle
         time is at most `trc_ns`; criteria passed as None are skipped.
         NaN tRC (a `with_transient=False` sweep) never passes a tRC spec.
-        On a nominal sweep (no `with_mc`) this is a 0/1 pass map.
+        On a nominal sweep (no `with_mc`) this is a 0/1 pass map.  A
+        design whose samples are ALL invalid has no estimate and yields
+        NaN (distinct from true yield 0).
         """
         base = self._mc_base()
         ok = self.valid

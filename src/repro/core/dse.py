@@ -60,14 +60,26 @@ SUPPORTED_CORNER_AXES = ("rh_toggles", "trc_cycles")
 
 def sweep(space: DesignSpace | None = None, with_transient: bool = True,
           backend: str = "auto",
-          b_chunk: int = transient.DEFAULT_B_CHUNK) -> DesignBatch:
+          b_chunk: int = transient.DEFAULT_B_CHUNK,
+          sharding=None) -> DesignBatch:
     """Score a whole `DesignSpace` in one vectorized pass -> `DesignBatch`.
 
     All metrics are computed as flat (B,) arrays over the lowered space;
     the transient row-cycle times come from ONE chunked pass through the
     fused engine (`transient.simulate_row_cycle_many` on the lowered
     operand batch) — never a per-combo transient call.
+
+    `sharding` (a `jax.sharding.Mesh` or `NamedSharding`) distributes
+    that fused dispatch over a device mesh instead — each device (and
+    each host under multi-process JAX) evaluates its own slab of the
+    grid via `repro.launch.shard`, with results bit-identical to the
+    single-host path (which remains the equivalence oracle).
     """
+    if sharding is not None and not with_transient:
+        raise ValueError(
+            "sharding= only distributes the fused transient dispatch; a "
+            "with_transient=False sweep is host-side array ops with "
+            "nothing to shard — pass sharding=None")
     if space is None:
         space = DesignSpace.paper_grid()
     sp = space.lower()
@@ -91,8 +103,13 @@ def sweep(space: DesignSpace | None = None, with_transient: bool = True,
         ladder_c, ladder_g = build_ladder_lowered(sp, par)
         operands = transient.lower_design_operands(
             sp, ladder_c=ladder_c, ladder_g=ladder_g)
-        res = simulate_row_cycle_many(operands, backend=backend,
-                                      b_chunk=b_chunk)
+        if sharding is not None:
+            from ..launch import shard
+            res = shard.simulate_row_cycle_sharded(
+                operands, sharding, backend=backend, b_chunk=b_chunk)
+        else:
+            res = simulate_row_cycle_many(operands, backend=backend,
+                                          b_chunk=b_chunk)
         trc, t_sense = res.trc_ns, res.t_sense_ns
     else:
         trc = jnp.full((len(sp),), jnp.nan, jnp.float32)
@@ -115,7 +132,7 @@ def sweep(space: DesignSpace | None = None, with_transient: bool = True,
         manufacturable=geom.manufacturable, feasible=feasible, valid=valid,
         corners={k: jnp.asarray(v) for k, v in sp.corners.items()},
         tech_names=sp.tech_names, scheme_names=sp.scheme_names,
-        n_samples=sp.samples, base_len=len(sp) // sp.samples)
+        n_samples=sp.samples, base_len=sp.base_len)
 
 
 # ---------------------------------------------------------------------------

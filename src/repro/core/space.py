@@ -29,6 +29,11 @@ the draws as reserved `mc_*` corner arrays (`mc_sa_offset_mv`,
 `mc_delta_vth_mv`), so the physics modules pick them up through
 `view.corner` with no new protocol and the whole sampled space is still
 ONE flat batch through the fused row-cycle engine.
+
+The flat batch axis is also the sharding axis: `dse.sweep(space,
+sharding=mesh)` distributes the lowered operand batch over a device mesh
+(`repro.launch.shard`), one slab per device, with identical results to
+the single-host sweep.
 """
 
 from __future__ import annotations
@@ -92,6 +97,12 @@ class LoweredSpace:
 
     def __len__(self) -> int:
         return int(self.tech_idx.shape[0])
+
+    @property
+    def base_len(self) -> int:
+        """Design points per MC sample — the segment length of the
+        sample-major layout (== len(self) when no `with_mc`)."""
+        return len(self) // self.samples
 
     @property
     def layers(self) -> jnp.ndarray:

@@ -196,17 +196,36 @@ def _pad_operands(operands, pad: int):
     return padded
 
 
+def validate_b_chunk(b_chunk: int) -> int:
+    """Check a fused-engine chunk size; returns it as an int.
+
+    Chunks are the caller's memory bound, so they must be honorable
+    exactly: every dispatch is padded to a B_ALIGN multiple for compiled-
+    shape sharing, and a `b_chunk` that is not itself a B_ALIGN multiple
+    would force either an unaligned shape or a silently larger pad.
+    """
+    b_chunk = int(b_chunk)
+    if b_chunk < B_ALIGN or b_chunk % B_ALIGN:
+        raise ValueError(
+            f"b_chunk={b_chunk} must be a positive multiple of B_ALIGN "
+            f"({B_ALIGN}); smaller or unaligned chunks cannot be honored "
+            "without exceeding the requested memory bound")
+    return b_chunk
+
+
 def _row_cycle_fused_chunked(operands, backend: str, b_chunk: int):
     """Feed (c, g, gc_res, gc_pre, v0, params) through the fused engine in
     fixed-size chunks so arbitrary sweep grids fit VMEM/HBM.
 
-    Every call is padded with inactive design points to a B_ALIGN (or
-    b_chunk) multiple, so calls share compiled shapes.
+    Every call is padded with inactive design points to a B_ALIGN multiple
+    no larger than `b_chunk` (which must itself be a B_ALIGN multiple), so
+    calls share compiled shapes and never exceed the caller's memory bound.
     """
+    b_chunk = validate_b_chunk(b_chunk)
     c = operands[0]
     b = c.shape[0]
     if b <= b_chunk:
-        target = min(-(-b // B_ALIGN) * B_ALIGN, max(b_chunk, B_ALIGN))
+        target = min(-(-b // B_ALIGN) * B_ALIGN, b_chunk)
         padded = _pad_operands(operands, target - b)
         evt, v_end = ops.row_cycle_fused(*padded, DT_NS, N_ACT_STEPS,
                                          N_RESTORE_STEPS, N_PRE_STEPS,
@@ -255,6 +274,23 @@ def simulate_row_cycle(tech: TechCal, scheme: str, layers,
         trc_ns=trc, dv_sense_v=dv_sense, traces={})
 
 
+def result_from_events(operands: FusedOperands,
+                       evt: jnp.ndarray) -> RowCycleResult:
+    """Roll fused-engine event columns up into a `RowCycleResult`.
+
+    Shared by the sequential path below and the sharded driver
+    (`launch.shard`), so the two can never diverge in how events map to
+    result fields — a precondition of their bit-equivalence contract.
+    """
+    t_sense, t_restore, trc = _regen_and_totals(
+        operands.sa_tau_ns, operands.t_overhead_ns,
+        evt[:, 0], evt[:, 1], evt[:, 2], evt[:, 3])
+    return RowCycleResult(
+        t_sense_ns=t_sense, t_restore_ns=t_restore,
+        t_precharge_ns=evt[:, 3], trc_ns=trc,
+        dv_sense_v=evt[:, 1], traces={})
+
+
 def simulate_row_cycle_lowered(operands: FusedOperands,
                                backend: str = "auto",
                                b_chunk: int = DEFAULT_B_CHUNK) -> RowCycleResult:
@@ -266,13 +302,7 @@ def simulate_row_cycle_lowered(operands: FusedOperands,
     per-combo Python loop anywhere.
     """
     evt, _ = _row_cycle_fused_chunked(operands[:6], backend, b_chunk)
-    t_sense, t_restore, trc = _regen_and_totals(
-        operands.sa_tau_ns, operands.t_overhead_ns,
-        evt[:, 0], evt[:, 1], evt[:, 2], evt[:, 3])
-    return RowCycleResult(
-        t_sense_ns=t_sense, t_restore_ns=t_restore,
-        t_precharge_ns=evt[:, 3], trc_ns=trc,
-        dv_sense_v=evt[:, 1], traces={})
+    return result_from_events(operands, evt)
 
 
 def simulate_row_cycle_many(entries, backend: str = "auto",

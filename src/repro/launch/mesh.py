@@ -33,6 +33,24 @@ def make_production_mesh(*, multi_pod: bool = False):
     return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
 
 
+def make_sweep_mesh(n_devices: int | None = None):
+    """Flat 1-D "batch" mesh for sharded DSE sweeps (`repro.launch.shard`).
+
+    The DSE batch axis is the only sharded axis, so the sweep mesh is
+    simply every device on one axis.  Under
+    multi-process JAX (`jax.distributed.initialize`), `jax.devices()`
+    spans every host, so the same call builds the global sweep mesh on
+    each host — each process then feeds only its addressable shards.
+    """
+    import jax
+    from jax.sharding import Mesh
+    devices = jax.devices()
+    n = len(devices) if n_devices is None else int(n_devices)
+    if not 1 <= n <= len(devices):
+        raise RuntimeError(f"need 1..{len(devices)} devices, asked for {n}")
+    return Mesh(np.asarray(devices[:n]), ("batch",))
+
+
 def make_test_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
     """Small mesh for unit tests (requires forced host device count)."""
     import jax

@@ -1,0 +1,271 @@
+"""Sharded multi-device driver for the fused row-cycle DSE sweep.
+
+The array-native DSE layer already lowers a whole `DesignSpace` to ONE
+flat operand batch (`transient.FusedOperands`, batch axis only).  The
+single-host path then feeds that batch through the fused engine in a
+*sequential* Python loop of `b_chunk`-sized dispatches.  This module
+replaces that loop with a sharded dispatch:
+
+    mesh    = make_sweep_mesh()                  # or any jax Mesh
+    batch   = dse.sweep(space, sharding=mesh)    # each device: own slab
+
+    # equivalently, via this module's convenience wrapper:
+    batch   = shard.sharded_sweep(space, mesh=mesh)
+
+Mechanics (the `pad_to` + `device_put` contract of `core.batch`):
+
+1. the operand batch is padded with inactive design points so every
+   device receives an identical, B_ALIGN-aligned slab (for grids larger
+   than `n_devices * b_chunk`, a whole number of `b_chunk` chunks);
+2. every operand is placed with a `NamedSharding` over the batch axis
+   (`P(mesh.axis_names)` — a multi-axis mesh shards over the full device
+   product, so `launch.mesh.make_test_mesh` works as-is);
+3. a `shard_map`-wrapped engine call runs per device, chunking its local
+   slab by `b_chunk` exactly like the sequential path — same compiled
+   kernel shapes, same per-row arithmetic, hence bit-identical event
+   times (the single-host sweep remains the equivalence oracle).
+
+Under multi-process JAX (`jax.distributed.initialize` before any jax
+import, then the same `dse.sweep(space, sharding=mesh)` call on every
+host), the mesh spans all hosts and each process computes only its
+addressable shards; operands are assembled per-shard from the
+(host-replicated) lowered space via `jax.make_array_from_callback`.
+
+Run `python -m repro.launch.shard --smoke` (with
+`XLA_FLAGS=--xla_force_host_platform_device_count=N`) for the
+sharded-vs-single-host bit-equivalence smoke `tools/ci_check.sh` uses.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core import transient
+from ..core.transient import (B_ALIGN, DT_NS, FusedOperands, N_ACT_STEPS,
+                              N_PRE_STEPS, N_RESTORE_STEPS, RowCycleResult)
+from ..kernels import ops
+from .mesh import make_sweep_mesh
+
+__all__ = [
+    "sweep_sharding", "batch_sharding", "put_global",
+    "row_cycle_fused_sharded", "simulate_row_cycle_sharded",
+    "sharded_sweep",
+]
+
+
+def _as_mesh(sharding) -> Mesh:
+    """Normalize a `sharding=` argument (Mesh | NamedSharding | None).
+
+    A `NamedSharding` must be equivalent to the canonical batch-axis
+    sharding of its mesh — the driver always distributes the flat batch
+    over the FULL device product, so a partial-axis spec would silently
+    place operands differently than the caller asked; reject it instead.
+    """
+    if sharding is None:
+        return make_sweep_mesh()
+    if isinstance(sharding, NamedSharding):
+        mesh = sharding.mesh
+        canonical = NamedSharding(mesh, P(mesh.axis_names))
+        if not sharding.is_equivalent_to(canonical, 2):
+            raise ValueError(
+                f"sharding spec {sharding.spec} does not shard the batch "
+                f"axis over the mesh's full device product; pass the mesh "
+                f"itself (or sweep_sharding(mesh) == {canonical.spec}) — "
+                "partial-axis placement is not supported by the sweep "
+                "driver")
+        return mesh
+    if isinstance(sharding, Mesh):
+        return sharding
+    raise TypeError(
+        f"sharding must be a jax Mesh or NamedSharding, got {sharding!r}")
+
+
+def sweep_sharding(sharding=None) -> NamedSharding:
+    """The canonical sweep sharding: batch axis over ALL mesh axes.
+
+    Accepts a Mesh (or None for a fresh all-device `make_sweep_mesh()`)
+    and returns the `NamedSharding` that splits axis 0 over the mesh's
+    full device product — regardless of how many named axes the mesh has.
+    """
+    mesh = _as_mesh(sharding)
+    return NamedSharding(mesh, P(mesh.axis_names))
+
+
+# `DesignBatch.device_put` alias for readers coming from core.batch docs
+batch_sharding = sweep_sharding
+
+
+def put_global(x, sharding: NamedSharding):
+    """Place one (B, ...) array with the sweep sharding.
+
+    Single-process: a plain `jax.device_put`.  Multi-process: every host
+    holds the full lowered operand batch (the DesignSpace lowering is
+    deterministic and host-replicated), so the global array is assembled
+    from the local copy one addressable shard at a time.
+    """
+    x = jnp.asarray(x)
+    if jax.process_count() == 1:
+        return jax.device_put(x, sharding)
+    return jax.make_array_from_callback(
+        x.shape, sharding, lambda idx: np.asarray(x[idx]))
+
+
+def _dispatch_target(b: int, n_dev: int, b_chunk: int) -> int:
+    """Padded batch size: identical per-device slabs, each a B_ALIGN
+    multiple; slabs larger than `b_chunk` hold a whole number of chunks
+    so in-device chunking never exceeds the memory bound."""
+    slab = -(-b // n_dev)
+    if slab > b_chunk:
+        slab = -(-slab // b_chunk) * b_chunk
+    else:
+        slab = -(-slab // B_ALIGN) * B_ALIGN
+    return max(slab, B_ALIGN) * n_dev
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_engine(mesh: Mesh, backend: str, b_chunk: int):
+    """jit(shard_map(...)) of the fused engine, cached per (mesh, backend,
+    chunk).  Each device chunks its local slab by `b_chunk` — the same
+    fixed compiled shapes as the sequential `_row_cycle_fused_chunked`
+    loop, so per-row results are identical.  Multi-chunk slabs run the
+    chunks through `lax.map` (one traced body, sequential execution per
+    device), so trace/compile cost stays O(one chunk) however large the
+    grid — not O(slab / b_chunk) unrolled calls."""
+    spec = P(mesh.axis_names, None)
+
+    def one_chunk(args):
+        return ops.row_cycle_fused(*args, DT_NS, N_ACT_STEPS,
+                                   N_RESTORE_STEPS, N_PRE_STEPS,
+                                   backend=backend)
+
+    def device_fn(c, g, gc_res, gc_pre, v0, params):
+        slab = c.shape[0]
+        step = min(b_chunk, slab)
+        args = (c, g, gc_res, gc_pre, v0, params)
+        if step == slab:
+            return one_chunk(args)
+        chunked = tuple(x.reshape(slab // step, step, *x.shape[1:])
+                        for x in args)
+        evt, v_end = jax.lax.map(one_chunk, chunked)
+        return (evt.reshape(slab, *evt.shape[2:]),
+                v_end.reshape(slab, *v_end.shape[2:]))
+
+    return jax.jit(shard_map(device_fn, mesh=mesh, in_specs=(spec,) * 6,
+                             out_specs=(spec, spec), check_rep=False))
+
+
+def row_cycle_fused_sharded(operands, sharding=None, backend: str = "auto",
+                            b_chunk: int = transient.DEFAULT_B_CHUNK):
+    """Sharded fused row-cycle dispatch -> (events (B, 4), v_end (B, N)).
+
+    `operands` is a `FusedOperands` or the raw 6-tuple of kernel operand
+    arrays; `sharding` is a Mesh / NamedSharding (None = all devices).
+    Each device evaluates its own padded slab of the batch; the outputs
+    are sliced back to the caller's B rows.
+    """
+    b_chunk = transient.validate_b_chunk(b_chunk)
+    mesh = _as_mesh(sharding)
+    sharding = sweep_sharding(mesh)
+    n_dev = int(mesh.devices.size)
+    core = list(operands[:6])
+    b = core[0].shape[0]
+    target = _dispatch_target(b, n_dev, b_chunk)
+    padded = transient._pad_operands(core, target - b)
+    padded = [put_global(x, sharding) for x in padded]
+    evt, v_end = _sharded_engine(mesh, backend, b_chunk)(*padded)
+    return evt[:b], v_end[:b]
+
+
+def simulate_row_cycle_sharded(operands: FusedOperands, sharding=None,
+                               backend: str = "auto",
+                               b_chunk: int = transient.DEFAULT_B_CHUNK,
+                               ) -> RowCycleResult:
+    """Sharded twin of `transient.simulate_row_cycle_lowered`.
+
+    Same lowered `FusedOperands` in, same trace-free `RowCycleResult`
+    out — but the engine dispatch is distributed over the mesh instead of
+    looping chunks on one device.  `dse.sweep(space, sharding=...)` calls
+    this; the sequential path stays bit-identical and is the oracle.
+    """
+    evt, _ = row_cycle_fused_sharded(operands, sharding, backend, b_chunk)
+    return transient.result_from_events(operands, evt)
+
+
+def sharded_sweep(space=None, mesh=None, **sweep_kwargs):
+    """`dse.sweep` over a device mesh (all local devices by default).
+
+    Thin convenience wrapper:  `sharded_sweep(space)` ==
+    `dse.sweep(space, sharding=make_sweep_mesh())`.
+    """
+    from ..core import dse
+    return dse.sweep(space, sharding=sweep_sharding(mesh), **sweep_kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Bit-equivalence smoke (tools/ci_check.sh runs this under forced devices)
+# ---------------------------------------------------------------------------
+
+def _equivalence_smoke(mc_samples: int = 16,
+                       expect_devices: int | None = None) -> None:
+    import time
+
+    from ..core import dse
+    from ..core.batch import ARRAY_FIELDS
+    from ..core.space import DesignSpace
+
+    mesh = make_sweep_mesh()
+    n_dev = int(mesh.devices.size)
+    if expect_devices is not None and n_dev != expect_devices:
+        raise SystemExit(
+            f"expected {expect_devices} devices but found {n_dev} — the "
+            "forced host device count was lost (XLA_FLAGS must be set "
+            "before the first jax import); a 1-device equivalence check "
+            "would be near-tautological, refusing to fake an OK")
+
+    def check(space, label):
+        t0 = time.perf_counter()
+        sharded = dse.sweep(space, sharding=mesh)
+        dt = time.perf_counter() - t0
+        seq = dse.sweep(space)
+        bad = [f for f in ARRAY_FIELDS
+               if not np.array_equal(np.asarray(getattr(sharded, f)),
+                                     np.asarray(getattr(seq, f)))]
+        bad += [f"corners[{k}]" for k in seq.corners
+                if not np.array_equal(np.asarray(sharded.corners[k]),
+                                      np.asarray(seq.corners[k]))]
+        if bad:
+            raise SystemExit(f"sharded sweep NOT bit-identical on {label}: "
+                             f"mismatched fields {bad}")
+        print(f"{label}: {len(seq)} points on {n_dev} device(s) in "
+              f"{dt:.2f}s — bit-identical to the single-host sweep")
+
+    check(DesignSpace.paper_grid(), "paper grid")
+    check(DesignSpace.paper_grid().with_mc(samples=mc_samples, key=0),
+          f"paper grid x {mc_samples} MC samples")
+    print("shard smoke: OK")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true",
+                        help="sharded-vs-single-host bit-equivalence check")
+    parser.add_argument("--mc", type=int, default=16,
+                        help="MC samples for the smoke's with_mc sweep")
+    parser.add_argument("--expect-devices", type=int, default=None,
+                        help="fail unless exactly this many devices are "
+                             "visible (guards CI against losing the "
+                             "forced host device count)")
+    args = parser.parse_args()
+    if args.smoke:
+        _equivalence_smoke(mc_samples=args.mc,
+                          expect_devices=args.expect_devices)
+    else:
+        parser.print_help()

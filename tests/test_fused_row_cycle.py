@@ -94,20 +94,21 @@ class TestFusedVsPhased:
                                        rtol=1e-6, atol=1e-6)
 
     def test_chunked_equals_unchunked(self):
-        # shapes (2,) and (1,) are already jit-cached by earlier tests, so
-        # this exercises the chunk/pad/stitch logic without new compiles
-        layers = jnp.asarray([87, 137])
+        # b_chunk must be a B_ALIGN multiple (smaller chunks cannot be
+        # honored without padding past the caller's memory bound); the
+        # B=100 grid stitches two 64-row chunks vs one 128-row dispatch
+        layers = jnp.asarray(np.linspace(32, 288, 100).astype(np.float32))
         a = simulate_row_cycle(SI, "sel_strap", layers)
-        b = simulate_row_cycle(SI, "sel_strap", layers, b_chunk=1)
+        b = simulate_row_cycle(SI, "sel_strap", layers, b_chunk=64)
         np.testing.assert_allclose(np.asarray(a.trc_ns),
                                    np.asarray(b.trc_ns),
                                    rtol=1e-6, atol=1e-6)
 
     @pytest.mark.slow
     def test_chunked_equals_unchunked_large(self):
-        layers = jnp.asarray(np.linspace(32, 288, 60).astype(np.float32))
+        layers = jnp.asarray(np.linspace(32, 288, 200).astype(np.float32))
         a = simulate_row_cycle(SI, "sel_strap", layers)
-        b = simulate_row_cycle(SI, "sel_strap", layers, b_chunk=16)
+        b = simulate_row_cycle(SI, "sel_strap", layers, b_chunk=64)
         np.testing.assert_allclose(np.asarray(a.trc_ns),
                                    np.asarray(b.trc_ns),
                                    rtol=1e-6, atol=1e-6)

@@ -1,0 +1,339 @@
+"""Sharded multi-host sweep driver (PR 4) + chunker/MC-reduction fixes.
+
+1. Sharded-vs-single-host bit-equivalence: in-process on a 1-device
+   "batch" mesh, and on a real 8-forced-host-device mesh
+   (`launch.mesh.make_test_mesh`) in a subprocess — nominal AND with_mc
+   paths, every DesignBatch column compared exactly.
+2. Chunker regression: `b_chunk` below/off the B_ALIGN grid is rejected
+   instead of silently padding past the caller's memory bound, and an
+   honored `b_chunk` never reaches the kernel with a larger batch.
+3. `select()` clears the MC aux, so stale segment reductions raise.
+4. `_segment_frac` returns NaN (not 0.0) for designs with zero valid
+   samples, and `pareto_mask` NaN semantics keep such designs inert.
+"""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import dse, transient
+from repro.core.batch import ARRAY_FIELDS, DesignBatch
+from repro.core.space import DesignSpace
+from repro.kernels import ops as kernel_ops
+from repro.launch import shard
+from repro.launch.mesh import make_sweep_mesh
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+POINTS = (("si", "sel_strap", 137), ("aos", "sel_strap", 87),
+          ("d1b", "direct", 1))
+
+
+def base_space():
+    return DesignSpace.points(POINTS)
+
+
+def assert_batches_identical(a, b):
+    assert len(a) == len(b)
+    for f in ARRAY_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), err_msg=f)
+    assert a.corners.keys() == b.corners.keys()
+    for k in a.corners:
+        np.testing.assert_array_equal(np.asarray(a.corners[k]),
+                                      np.asarray(b.corners[k]), err_msg=k)
+    assert (a.n_samples, a.base_len) == (b.n_samples, b.base_len)
+
+
+# ---------------------------------------------------------------------------
+# Sharded driver, in-process (single CPU device — the API/alignment paths)
+# ---------------------------------------------------------------------------
+
+class TestShardedSweepSingleDevice:
+    def test_nominal_bit_identical_and_mesh_forms(self):
+        space = base_space()
+        seq = dse.sweep(space)
+        mesh = make_sweep_mesh()
+        assert_batches_identical(dse.sweep(space, sharding=mesh), seq)
+        # a NamedSharding and the convenience wrapper hit the same path
+        assert_batches_identical(
+            dse.sweep(space, sharding=shard.sweep_sharding(mesh)), seq)
+        assert_batches_identical(shard.sharded_sweep(space, mesh=mesh), seq)
+
+    def test_with_mc_and_chunk_loop_bit_identical(self):
+        # 144 rows at b_chunk=64 exercises the in-device chunk loop on the
+        # sharded side and the sequential chunk loop on the oracle side
+        space = base_space().with_mc(samples=48, key=3)
+        seq = dse.sweep(space, b_chunk=64)
+        assert_batches_identical(
+            dse.sweep(space, sharding=make_sweep_mesh(), b_chunk=64), seq)
+
+    def test_sharding_rejects_garbage(self):
+        with pytest.raises(TypeError, match="Mesh or NamedSharding"):
+            dse.sweep(base_space(), sharding="please")
+
+    def test_sharding_with_transient_off_rejected(self):
+        with pytest.raises(ValueError, match="nothing to shard"):
+            dse.sweep(base_space(), with_transient=False,
+                      sharding=make_sweep_mesh())
+
+    def test_bench_child_forced_count_wins(self, monkeypatch):
+        from benchmarks.bench_sharded_sweep import _child_env
+        monkeypatch.setenv(
+            "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+        flags = _child_env(1)["XLA_FLAGS"]
+        # later duplicate wins in XLA flag parsing: ours must come last
+        assert flags.endswith("--xla_force_host_platform_device_count=1")
+
+    def test_dispatch_target_alignment(self):
+        align = transient.B_ALIGN
+        # identical aligned slabs per device, never below one B_ALIGN block
+        assert shard._dispatch_target(73, 8, 2048) == 8 * align
+        assert shard._dispatch_target(1, 8, 2048) == 8 * align
+        assert shard._dispatch_target(73, 1, 2048) == 2 * align
+        # slabs above b_chunk hold a whole number of chunks
+        t = shard._dispatch_target(10_000, 8, 128)
+        assert t % (8 * 128) == 0 and t >= 10_000
+
+
+# ---------------------------------------------------------------------------
+# Sharded driver, real 8-device mesh (forced host devices, subprocess)
+# ---------------------------------------------------------------------------
+
+MESH8_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    import jax
+    from repro.core import dse
+    from repro.core.batch import ARRAY_FIELDS
+    from repro.core.space import DesignSpace
+    from repro.launch.mesh import make_test_mesh
+
+    # multi-axis test mesh: the driver shards over the full device product
+    mesh = make_test_mesh((2, 2, 2), ("pod", "data", "model"))
+
+    def identical(space, b_chunk):
+        sh = dse.sweep(space, sharding=mesh, b_chunk=b_chunk)
+        seq = dse.sweep(space, b_chunk=b_chunk)
+        flds = all(np.array_equal(np.asarray(getattr(sh, f)),
+                                  np.asarray(getattr(seq, f)))
+                   for f in ARRAY_FIELDS)
+        crns = all(np.array_equal(np.asarray(sh.corners[k]),
+                                  np.asarray(seq.corners[k]))
+                   for k in seq.corners)
+        return bool(flds and crns)
+
+    # a partial-axis NamedSharding must be rejected, not silently
+    # replaced by the canonical full-product sharding (needs >1 device:
+    # on one device every spec is equivalent)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    try:
+        dse.sweep(DesignSpace.points([("si", "sel_strap", 137)]),
+                  sharding=NamedSharding(mesh, P("pod")))
+        partial_spec_rejected = False
+    except ValueError:
+        partial_spec_rejected = True
+
+    # b_chunk=64 keeps every dispatch (sharded slabs AND the sequential
+    # oracle chunks) on ONE compiled shape — the subprocess stays fast
+    out = {
+        "ndev": jax.device_count(),
+        "ok_nominal": identical(DesignSpace.paper_grid(), 64),
+        "ok_mc": identical(DesignSpace.paper_grid().with_mc(samples=8,
+                                                            key=0), 64),
+        "ok_spec_guard": partial_spec_rejected,
+    }
+    print(json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def mesh8_result():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    # pin the child to CPU: with libtpu installed, an unset JAX_PLATFORMS
+    # makes jax probe for TPU hardware for minutes before falling back
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", MESH8_SCRIPT],
+                       capture_output=True, text=True, env=env, timeout=300)
+    assert r.returncode == 0, r.stderr[-2000:]
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+class TestShardedSweepMesh8:
+    def test_forced_eight_devices(self, mesh8_result):
+        assert mesh8_result["ndev"] == 8
+
+    def test_nominal_bit_identical(self, mesh8_result):
+        assert mesh8_result["ok_nominal"]
+
+    def test_with_mc_bit_identical(self, mesh8_result):
+        assert mesh8_result["ok_mc"]
+
+    def test_partial_axis_spec_rejected(self, mesh8_result):
+        assert mesh8_result["ok_spec_guard"]
+
+
+# ---------------------------------------------------------------------------
+# Chunker regression: b_chunk must be honored, never silently exceeded
+# ---------------------------------------------------------------------------
+
+class TestBChunkHonored:
+    def _operands(self, n_layers):
+        space = DesignSpace.product(techs=("si",), schemes=("sel_strap",),
+                                    layers=np.linspace(32, 200, n_layers))
+        return transient.lower_design_operands(space.lower())
+
+    @pytest.mark.parametrize("bad", [16, 96, 0, -64])
+    def test_unaligned_b_chunk_rejected(self, bad):
+        operands = self._operands(4)
+        with pytest.raises(ValueError, match="B_ALIGN"):
+            transient.simulate_row_cycle_lowered(operands, b_chunk=bad)
+        with pytest.raises(ValueError, match="B_ALIGN"):
+            shard.row_cycle_fused_sharded(operands, make_sweep_mesh(),
+                                          b_chunk=bad)
+
+    def test_requested_chunk_bounds_kernel_batch(self, monkeypatch):
+        seen = []
+        orig = kernel_ops.row_cycle_fused
+
+        def recording(c, *args, **kw):
+            seen.append(int(c.shape[0]))
+            return orig(c, *args, **kw)
+
+        monkeypatch.setattr(transient.ops, "row_cycle_fused", recording)
+        operands = self._operands(100)
+        res = transient.simulate_row_cycle_lowered(operands, b_chunk=64)
+        assert seen and max(seen) <= 64          # the caller's memory bound
+        # and chunking at the bound is bit-identical to one big dispatch
+        res_big = transient.simulate_row_cycle_lowered(operands, b_chunk=2048)
+        np.testing.assert_array_equal(np.asarray(res.trc_ns),
+                                      np.asarray(res_big.trc_ns))
+
+    def test_small_batch_not_padded_past_bound(self, monkeypatch):
+        seen = []
+        orig = kernel_ops.row_cycle_fused
+
+        def recording(c, *args, **kw):
+            seen.append(int(c.shape[0]))
+            return orig(c, *args, **kw)
+
+        monkeypatch.setattr(transient.ops, "row_cycle_fused", recording)
+        transient.simulate_row_cycle_lowered(self._operands(3), b_chunk=64)
+        assert seen == [64]        # aligned up, but capped at b_chunk
+
+
+# ---------------------------------------------------------------------------
+# select() must clear the MC aux (stale reductions raise)
+# ---------------------------------------------------------------------------
+
+class TestSelectClearsMCAux:
+    def mc_batch(self):
+        return dse.sweep(base_space().with_mc(samples=4, key=0),
+                         with_transient=False)
+
+    def test_full_selection_still_raises(self):
+        batch = self.mc_batch()
+        sel = batch.select(np.arange(len(batch)))    # keeps every row...
+        assert sel.n_samples == 0                    # ...but the layout
+        for reduce in (lambda b: b.yield_fraction(margin_mv=80.0),
+                       lambda b: b.quantile(0.5, "margin_mv"),
+                       lambda b: b.mc_summary(margin_mv=80.0)):
+            with pytest.raises(ValueError, match="select"):
+                reduce(sel)
+
+    def test_mask_selection_raises(self):
+        batch = self.mc_batch()
+        mask = np.ones(len(batch), bool)
+        mask[-1] = False
+        with pytest.raises(ValueError, match="sample-major|select"):
+            batch.select(mask).yield_fraction(margin_mv=80.0)
+
+    def test_nominal_select_keeps_pass_map(self):
+        nom = dse.sweep(base_space(), with_transient=False)
+        sel = nom.select(np.asarray([0, 2]))
+        got = np.asarray(sel.yield_fraction(margin_mv=80.0))
+        want = (np.asarray(sel.margin_mv) >= 80.0).astype(np.float32)
+        np.testing.assert_array_equal(got, want)
+
+    def test_summary_then_select_is_the_supported_order(self):
+        summ = self.mc_batch().mc_summary(margin_mv=80.0)
+        front = dse.pareto_front(summ, require_feasible=False)
+        assert isinstance(front, DesignBatch)
+        assert front.n_samples == 1     # summary rows survive selection
+
+
+# ---------------------------------------------------------------------------
+# Empty-segment yield is NaN, and NaN never dominates in pareto_mask
+# ---------------------------------------------------------------------------
+
+class TestEmptySegmentYieldNaN:
+    def invalidated(self, k=0):
+        batch = dse.sweep(base_space().with_mc(samples=4, key=0),
+                          with_transient=False)
+        valid = np.asarray(batch.valid).copy()
+        valid[k::batch.base_len] = False      # kill all samples of design k
+        return dataclasses.replace(batch, valid=jnp.asarray(valid)), k
+
+    def test_zero_valid_samples_yield_nan(self):
+        batch, k = self.invalidated()
+        yf = np.asarray(batch.yield_fraction(margin_mv=0.0))
+        assert np.isnan(yf[k])
+        others = np.delete(yf, k)
+        assert np.all(np.isfinite(others))
+        # margin_mv=0 passes every evaluated sample: true 1.0, never NaN
+        np.testing.assert_array_equal(others, np.ones_like(others))
+
+    def test_true_yield_zero_still_zero(self):
+        batch, k = self.invalidated()
+        yf = np.asarray(batch.yield_fraction(margin_mv=1e9))
+        assert np.isnan(yf[k])                 # no estimate
+        np.testing.assert_array_equal(np.delete(yf, k),
+                                      np.zeros(len(POINTS) - 1))  # hard fail
+
+    def test_mc_summary_propagates_nan_yield(self):
+        batch, k = self.invalidated()
+        summ = batch.mc_summary(margin_mv=0.0)
+        yf = np.asarray(summ.corners["yield_frac"])
+        assert np.isnan(yf[k])
+        assert not bool(np.asarray(summ.feasible)[k])  # NaN frac != feasible
+
+    def _two_point_batch(self):
+        from repro.core.batch import DesignPoint
+        mk = lambda dens, marg, trc, erd: DesignPoint(
+            tech="si", scheme="sel_strap", layers=100,
+            density_gb_mm2=dens, height_um=10.0, cbl_ff=30.0,
+            margin_mv=marg, margin_disturbed_mv=marg, trc_ns=trc,
+            e_write_fj=1.0, e_read_fj=erd, hcb_pitch_um=1.0,
+            blsa_area_um2=1.0, feasible=True)
+        # point 0 strictly beats point 1 on every nominal objective
+        return DesignBatch.from_points([mk(8.0, 120.0, 9.0, 1.0),
+                                        mk(4.0, 80.0, 12.0, 2.0)])
+
+    def test_nan_yield_is_never_dominated(self):
+        batch = self._two_point_batch()
+        dominated = np.asarray(dse.pareto_mask(
+            batch, extra_maximize=(jnp.asarray([1.0, 0.5]),)))
+        np.testing.assert_array_equal(dominated, [True, False])
+        # a NaN yield (zero valid samples) shields the loser: no estimate
+        # means "unknown", not "worse than everything"
+        shielded = np.asarray(dse.pareto_mask(
+            batch, extra_maximize=(jnp.asarray([1.0, jnp.nan]),)))
+        np.testing.assert_array_equal(shielded, [True, True])
+
+    def test_nan_yield_never_dominates(self):
+        batch = self._two_point_batch()
+        # the nominal winner carries the NaN: it must not knock out the
+        # loser, whose yield estimate is real
+        mask = np.asarray(dse.pareto_mask(
+            batch, extra_maximize=(jnp.asarray([jnp.nan, 0.5]),)))
+        np.testing.assert_array_equal(mask, [True, True])
