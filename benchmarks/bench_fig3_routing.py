@@ -3,8 +3,6 @@
 
 from __future__ import annotations
 
-import jax
-
 from .common import emit, timeit
 
 

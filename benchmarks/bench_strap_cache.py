@@ -4,7 +4,6 @@ paper's C_BL table): decode traffic vs strap selectivity."""
 from __future__ import annotations
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from .common import emit, timeit

@@ -8,7 +8,7 @@ no device memory is ever allocated for the full-size configs.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -131,7 +131,6 @@ class ArchConfig:
             per_layer = self._ssm_layer_params()
             return self.n_layers * per_layer + emb + d
         if self.family == "hybrid":
-            n_shared = self.n_layers // (self.shared_attn_every or 1)
             per_ssm = self._ssm_layer_params()
             shared = attn + mlp + 2 * d
             return self.n_layers * per_ssm + shared + emb + d

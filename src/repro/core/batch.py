@@ -180,6 +180,13 @@ class DesignBatch:
     # invalid rows at the end.  Every reduction below is a masked segment
     # reduction over the flat batch axis — `select()`ed batches lose the
     # layout and are rejected.
+    #
+    # Importance sampling: a space lowered with a shifted/scaled tail
+    # proposal (`with_mc(..., tail_shift=, tail_scale=)`) carries per-row
+    # log-weights in `corners["mc_log_w"]`; every reduction consumes them
+    # automatically (self-normalized estimators).  Without the channel the
+    # weights are uniform and each reduction takes the ORIGINAL unweighted
+    # code path — bit-identical to the plain i.i.d. estimators.
 
     def _mc_base(self) -> int:
         if self.n_samples == 0:
@@ -195,17 +202,51 @@ class DesignBatch:
                 f"batch has only {len(self)} rows — was it select()ed?")
         return base
 
-    def _segment_frac(self, ok: jnp.ndarray, base: int) -> jnp.ndarray:
+    def _mc_weights(self) -> jnp.ndarray | None:
+        """Per-row importance weights from the reserved `mc_log_w`
+        channel, max-stabilized and zeroed on invalid rows — or None when
+        the batch carries no weights (uniform; reductions then take the
+        original unweighted code path bit-for-bit)."""
+        log_w = self.corners.get("mc_log_w")
+        if log_w is None:
+            return None
+        log_w = jnp.where(self.valid, jnp.asarray(log_w, jnp.float32),
+                          -jnp.inf)
+        peak = jnp.max(log_w)
+        peak = jnp.where(jnp.isfinite(peak), peak, 0.0)
+        return jnp.exp(log_w - peak)        # exp(-inf) == 0 on invalid rows
+
+    def _segment_frac(self, ok: jnp.ndarray, base: int,
+                      weights: jnp.ndarray | None = None) -> jnp.ndarray:
         ids = jnp.arange(len(self)) % base
-        hits = jax.ops.segment_sum((ok & self.valid).astype(jnp.float32),
-                                   ids, num_segments=base)
-        tot = jax.ops.segment_sum(self.valid.astype(jnp.float32),
-                                  ids, num_segments=base)
-        # A design with ZERO valid samples has no yield estimate at all:
-        # NaN, not 0.0, so never-evaluated designs cannot masquerade as
-        # true yield-0 designs (pareto_mask's NaN columns neither dominate
-        # nor get dominated, so they pass through selection unharmed).
-        return jnp.where(tot > 0.0, hits / jnp.maximum(tot, 1.0), jnp.nan)
+        # A design with ZERO valid samples (or zero total weight) has no
+        # yield estimate at all: NaN, not 0.0, so never-evaluated designs
+        # cannot masquerade as true yield-0 designs (pareto_mask's NaN
+        # columns neither dominate nor get dominated, so they pass
+        # through selection unharmed).
+        if weights is None:
+            hits = jax.ops.segment_sum((ok & self.valid).astype(jnp.float32),
+                                       ids, num_segments=base)
+            tot = jax.ops.segment_sum(self.valid.astype(jnp.float32),
+                                      ids, num_segments=base)
+            return jnp.where(tot > 0.0, hits / jnp.maximum(tot, 1.0),
+                             jnp.nan)
+        hits = jax.ops.segment_sum(weights * (ok & self.valid), ids,
+                                   num_segments=base)
+        tot = jax.ops.segment_sum(weights, ids, num_segments=base)
+        return jnp.where(tot > 0.0,
+                         hits / jnp.where(tot > 0.0, tot, 1.0), jnp.nan)
+
+    def _spec_ok(self, margin_mv: float | None, trc_ns: float | None,
+                 disturbed: bool) -> jnp.ndarray:
+        """Per-row spec pass mask (folded with validity)."""
+        ok = self.valid
+        if margin_mv is not None:
+            col = self.margin_disturbed_mv if disturbed else self.margin_mv
+            ok = ok & (col >= margin_mv)
+        if trc_ns is not None:
+            ok = ok & (self.trc_ns <= trc_ns)
+        return ok
 
     def yield_fraction(self, margin_mv: float | None = None,
                        trc_ns: float | None = None,
@@ -218,26 +259,132 @@ class DesignBatch:
         NaN tRC (a `with_transient=False` sweep) never passes a tRC spec.
         On a nominal sweep (no `with_mc`) this is a 0/1 pass map.  A
         design whose samples are ALL invalid has no estimate and yields
-        NaN (distinct from true yield 0).
+        NaN (distinct from true yield 0).  On an importance-sampled batch
+        this is the self-normalized weighted estimate.
         """
         base = self._mc_base()
-        ok = self.valid
-        if margin_mv is not None:
-            col = self.margin_disturbed_mv if disturbed else self.margin_mv
-            ok = ok & (col >= margin_mv)
-        if trc_ns is not None:
-            ok = ok & (self.trc_ns <= trc_ns)
-        return self._segment_frac(ok, base)
+        return self._segment_frac(self._spec_ok(margin_mv, trc_ns,
+                                                disturbed),
+                                  base, self._mc_weights())
 
     def quantile(self, q, field: str = "trc_ns") -> jnp.ndarray:
         """Per-design quantile of a metric across MC samples -> (base,)
-        (or (len(q), base) for a vector `q`).  Invalid rows are ignored."""
+        (or (len(q), base) for a vector `q`).  Invalid rows are ignored.
+        On an importance-sampled batch the quantile is read off the
+        weighted empirical CDF (invalid/NaN rows carry zero weight)."""
         base = self._mc_base()
         n = self.n_samples * base
         vals = jnp.asarray(getattr(self, field), jnp.float32)[:n]
-        vals = jnp.where(self.valid[:n], vals, jnp.nan)
-        return jnp.nanquantile(vals.reshape(self.n_samples, base),
-                               jnp.asarray(q), axis=0)
+        weights = self._mc_weights()
+        if weights is None:
+            vals = jnp.where(self.valid[:n], vals, jnp.nan)
+            return jnp.nanquantile(vals.reshape(self.n_samples, base),
+                                   jnp.asarray(q), axis=0)
+        vals = vals.reshape(self.n_samples, base)
+        w = weights[:n].reshape(self.n_samples, base)
+        # a row is a CDF knot only when valid AND finite: invalid rows
+        # carry stale values (their weight is already zero, but leaving
+        # the value in the sort would anchor low-q interpolation to it)
+        usable = jnp.isfinite(vals) & self.valid[:n].reshape(
+            self.n_samples, base)
+        w = jnp.where(usable, w, 0.0)
+        sortkey = jnp.where(usable, vals, jnp.inf)
+        order = jnp.argsort(sortkey, axis=0)
+        v = jnp.take_along_axis(sortkey, order, axis=0)
+        ww = jnp.take_along_axis(w, order, axis=0)
+        tot = ww.sum(axis=0)
+        # clamp the +inf sentinel rows to the column's largest usable
+        # value so interpolation beyond the last weighted point saturates
+        vmax = jnp.max(jnp.where(usable & (w > 0.0), vals, -jnp.inf),
+                       axis=0)
+        v = jnp.where(jnp.isfinite(v), v, vmax[None, :])
+        midpts = (jnp.cumsum(ww, axis=0) - 0.5 * ww)
+        cdf = midpts / jnp.maximum(tot, 1e-30)[None, :]
+        q_arr = jnp.asarray(q, jnp.float32)
+        qs = jnp.atleast_1d(q_arr)
+        out = jax.vmap(lambda p, vv: jnp.interp(qs, p, vv),
+                       in_axes=(1, 1), out_axes=1)(cdf, v)
+        out = jnp.where(tot[None, :] > 0.0, out, jnp.nan)
+        return out[0] if q_arr.ndim == 0 else out
+
+    def ess(self) -> jnp.ndarray:
+        """Per-design effective sample size (Kish) -> (base,).
+
+        `(sum w)^2 / sum w^2` over each design's valid samples — the
+        diagnostic for how much an importance-sampled estimate can be
+        trusted.  Uniform weights reduce it to the valid-sample count."""
+        base = self._mc_base()
+        w = self._mc_weights()
+        if w is None:
+            w = self.valid.astype(jnp.float32)
+        ids = jnp.arange(len(self)) % base
+        s1 = jax.ops.segment_sum(w, ids, num_segments=base)
+        s2 = jax.ops.segment_sum(w * w, ids, num_segments=base)
+        return jnp.where(s2 > 0.0,
+                         s1 * s1 / jnp.where(s2 > 0.0, s2, 1.0), 0.0)
+
+    def yield_ppm(self, margin_mv: float | None = None,
+                  trc_ns: float | None = None, disturbed: bool = False,
+                  z_conf: float = 1.959964, min_ess: float = 8.0) -> dict:
+        """Deep-tail spec-FAILURE estimate per design, in parts per
+        million -> dict of (base,) arrays.
+
+        Unlike the self-normalized bulk reductions, this is the
+        *unnormalized* importance-sampling estimator — the standardized
+        draws have a known (unit) normalizing constant, so
+        `p = (1/N) sum_i w_i [fail_i]` with the exact density-ratio
+        weights.  Weights only ever multiply failure indicators, which is
+        what makes ppm tails tractable: under a proposal shifted into the
+        failure region the weights ON that region are uniformly small and
+        well-behaved, where a self-normalized estimate would be drowned
+        by the bulk samples' huge weights.
+
+            fail_ppm            point estimate, failures per million
+            fail_ppm_lo/hi      `z_conf`-sigma normal-approximation CI
+                                bounds (clipped to [0, 1e6])
+            ess                 per-design *tail* effective sample size:
+                                `(sum w f)^2 / sum (w f)^2`, the
+                                effective number of independent failure
+                                observations behind the estimate
+
+        A design whose tail ESS is below `min_ess` — too few (effective)
+        observed failures, including the zero-observed-failure case — or
+        with zero valid samples reports NaN: no estimate, mirroring
+        `yield_fraction`'s zero-valid-sample NaN semantics, never a fake
+        0 ppm.
+        """
+        base = self._mc_base()
+        ok = self._spec_ok(margin_mv, trc_ns, disturbed)
+        fail = (self.valid & ~ok).astype(jnp.float32)
+        log_w = self.corners.get("mc_log_w")
+        if log_w is None:
+            wf = fail
+        else:
+            w = jnp.exp(jnp.asarray(log_w, jnp.float32))
+            wf = jnp.where(self.valid, w, 0.0) * fail
+        ids = jnp.arange(len(self)) % base
+        n = jax.ops.segment_sum(self.valid.astype(jnp.float32), ids,
+                                num_segments=base)
+        n_safe = jnp.maximum(n, 1.0)
+        s1 = jax.ops.segment_sum(wf, ids, num_segments=base)
+        s2 = jax.ops.segment_sum(wf * wf, ids, num_segments=base)
+        p_fail = s1 / n_safe
+        # unnormalized-IS variance:  Var(w f) / N
+        var = jnp.maximum(s2 / n_safe - p_fail * p_fail, 0.0) / n_safe
+        sd = jnp.sqrt(var)
+        ess = jnp.where(s2 > 0.0,
+                        s1 * s1 / jnp.where(s2 > 0.0, s2, 1.0), 0.0)
+        good = (n > 0.0) & (ess >= min_ess)
+        to_ppm = lambda p: jnp.clip(p, 0.0, 1.0) * 1e6
+        nan = jnp.nan
+        return {
+            "fail_ppm": jnp.where(good, to_ppm(p_fail), nan),
+            "fail_ppm_lo": jnp.where(good, to_ppm(p_fail - z_conf * sd),
+                                     nan),
+            "fail_ppm_hi": jnp.where(good, to_ppm(p_fail + z_conf * sd),
+                                     nan),
+            "ess": ess,
+        }
 
     def mc_summary(self, margin_mv: float | None = None,
                    trc_ns: float | None = None, disturbed: bool = False,
@@ -253,6 +400,12 @@ class DesignBatch:
         trc_ns, disturbed)` — ready to use as a Pareto/selection
         objective (`dse.pareto_front(..., extra_maximize=...)`,
         `dse.best_design(..., min_yield=...)`).
+
+        On an importance-sampled batch every reduced column (yield,
+        quantiles, feasible fraction) is the weighted estimate, and
+        `corners["ess"]` carries the per-design effective sample size
+        diagnostic.  The raw `mc_*` draw/weight channels never survive
+        the reduction.
         """
         base = self._mc_base()
         yf = self.yield_fraction(margin_mv=margin_mv, trc_ns=trc_ns,
@@ -261,12 +414,14 @@ class DesignBatch:
         kwargs = {f: take(getattr(self, f)) for f in ARRAY_FIELDS}
         for f in MC_SAMPLED_FIELDS:
             kwargs[f] = self.quantile(q, f).astype(jnp.float32)
-        feas_frac = self._segment_frac(self.feasible, base)
+        feas_frac = self._segment_frac(self.feasible, base,
+                                       self._mc_weights())
         kwargs["feasible"] = ((feas_frac >= min_feasible_frac)
                               & kwargs["valid"])
         corners = {k: take(v) for k, v in self.corners.items()
                    if not k.startswith("mc_")}
         corners["yield_frac"] = yf.astype(jnp.float32)
+        corners["ess"] = self.ess().astype(jnp.float32)
         return DesignBatch(corners=corners, tech_names=self.tech_names,
                            scheme_names=self.scheme_names, **kwargs)
 

@@ -25,7 +25,7 @@ Paper endpoints used as calibration anchors (Figs. 3, 6, 8, 9, Table I):
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 
 # --------------------------------------------------------------------------
@@ -126,6 +126,18 @@ class TechCal:
     sa_offset_sigma_mv: float = 0.0       # BLSA input-referred offset spread
     vth_sigma_mv: float = 0.0             # access-transistor Vth spread
     vth_overdrive_v: float = 0.6          # nominal gate overdrive (Vgs - Vth)
+    # --- correlated within-die variation (DesignSpace.with_mc(corr=...)) ---
+    # Variance decomposition of each standardized draw: a global die offset
+    # (process shift shared by every mat of a die), a spatially correlated
+    # mat/strap gradient, and the i.i.d. local remainder:
+    #   z = sqrt(1-f_die-f_mat)*local + sqrt(f_die)*die + sqrt(f_mat)*grad
+    # The fractions below are the f_* at corr=1 (the space's `corr` knob
+    # scales them; corr=0 keeps the draws purely i.i.d.), and
+    # `mc_corr_length` is the gradient's correlation length as a fraction
+    # of the die span along the shared-mat axis.
+    mc_die_sigma_frac: float = 0.0        # die-offset variance fraction
+    mc_mat_sigma_frac: float = 0.0        # mat-gradient variance fraction
+    mc_corr_length: float = 0.25          # gradient corr length (die-span)
 
     def with_(self, **kw) -> "TechCal":
         return replace(self, **kw)
@@ -148,6 +160,8 @@ SI = TechCal(
     hcb_route_span_um=0.3907,
     t_overhead_ns=2.0, sa_tau_ns=1.2, r_pre_kohm=8.0, r_sa_drive_kohm=8.0,
     sa_offset_sigma_mv=5.0, vth_sigma_mv=25.0, vth_overdrive_v=0.60,
+    # epi-Si mold: moderate die-level shift, strap-correlated gradient
+    mc_die_sigma_frac=0.15, mc_mat_sigma_frac=0.25, mc_corr_length=0.25,
 )
 
 # AOS (W-doped In2O3, IWO-calibrated) channel, Si-deposition mold, channel-last
@@ -168,6 +182,8 @@ AOS = TechCal(
     t_overhead_ns=2.0, sa_tau_ns=1.2, r_pre_kohm=8.0, r_sa_drive_kohm=8.0,
     # amorphous-oxide channels carry a wider Vth distribution than epi-Si
     sa_offset_sigma_mv=5.0, vth_sigma_mv=35.0, vth_overdrive_v=0.55,
+    # deposition-temperature gradients correlate AOS mats more strongly
+    mc_die_sigma_frac=0.20, mc_mat_sigma_frac=0.30, mc_corr_length=0.20,
 )
 
 # D1b 2D baseline (TechInsights-anchored): planar 4F^2-ish cell, long lateral
@@ -192,6 +208,8 @@ D1B = TechCal(
     e_sa_fj=D1B_E_SA_FJ, vpp=VPP_D1B,
     # mature planar process: tighter spreads, large VPP=2.8 V overdrive
     sa_offset_sigma_mv=4.0, vth_sigma_mv=20.0, vth_overdrive_v=1.20,
+    # mature planar line: weak die shift, mild long-range wafer gradient
+    mc_die_sigma_frac=0.10, mc_mat_sigma_frac=0.15, mc_corr_length=0.40,
 )
 
 

@@ -39,7 +39,7 @@ from .netlist import build_ladder_lowered, effective_cbl_ff
 from .parasitics import bl_parasitics_lowered
 from .routing import SCHEMES, bonding_geometry, bonding_geometry_lowered
 from .sense import sense_margin_lowered, sense_margin_mv
-from .space import MC_AXES, DesignSpace
+from .space import MC_AXES, MC_LOG_W, DesignSpace
 from . import transient
 from .transient import simulate_row_cycle, simulate_row_cycle_many
 
@@ -84,7 +84,8 @@ def sweep(space: DesignSpace | None = None, with_transient: bool = True,
         space = DesignSpace.paper_grid()
     sp = space.lower()
     unknown = [k for k in sp.corners
-               if k not in SUPPORTED_CORNER_AXES and k not in MC_AXES]
+               if k not in SUPPORTED_CORNER_AXES and k not in MC_AXES
+               and k != MC_LOG_W]
     if unknown:
         raise ValueError(f"unsupported corner axes {unknown}; sweep "
                          f"understands {SUPPORTED_CORNER_AXES}")

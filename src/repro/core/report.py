@@ -12,6 +12,11 @@ Yield-aware variants (Monte-Carlo through the same fused sweep):
                               (per-sample SA offset + Vth variation)
   fig9b_margin_yield_vs_density -> Fig. 9(b) with the functional line
                               replaced by a per-density yield fraction
+  mc_tail_yield_table      -> deep-tail (ppm) spec-failure estimates of
+                              the Table-1 points via importance sampling
+                              under correlated within-die variation
+  fig_tail_probability     -> failure probability vs margin floor (the
+                              tail curve behind the ppm table)
 
 The DSE-shaped tables (fig3 / fig9b / fig9c) are generated from ONE
 vectorized `dse.sweep` over a declarative `DesignSpace` and read straight
@@ -195,6 +200,77 @@ def mc_yield_table(samples: int = 256, key=0,
             entry["trc_ns_p95"] = float(p95_trc[i])
         out[tname] = entry
     return out
+
+
+def mc_tail_yield_table(samples: int = 4096, key=0,
+                        margin_floor_mv: float | None = None,
+                        tail_shift: float = 4.0, tail_scale: float = 1.2,
+                        corr: float = 1.0, min_ess: float = 8.0) -> dict:
+    """Deep-tail (ppm) spec-failure table of the paper's target points.
+
+    Importance-sampled margin-tail estimate under correlated within-die
+    variation: the SA-offset channel's local draws are shifted
+    `tail_shift` sigmas into the failure tail (the Vth channel stays
+    target-distributed — the margin spec does not constrain it), and
+    `DesignBatch.yield_ppm` turns the weighted failures into a ppm
+    estimate with a confidence interval and a tail-ESS diagnostic.
+
+    `margin_floor_mv` defaults to the paper's functional threshold.  A
+    tech whose tail ESS lands below `min_ess` reports NaN (no estimate).
+    """
+    if margin_floor_mv is None:
+        margin_floor_mv = cal.MIN_FUNCTIONAL_MARGIN_MV
+    space = DesignSpace.paper_targets().with_mc(
+        samples=samples, key=key, corr=corr,
+        tail_shift=(tail_shift, 0.0), tail_scale=(tail_scale, 1.0))
+    batch = dse.sweep(space, with_transient=False)
+    ppm = batch.yield_ppm(margin_mv=margin_floor_mv, min_ess=min_ess)
+
+    out = {"samples": samples,
+           "margin_floor_mv": float(margin_floor_mv),
+           "tail_shift": float(tail_shift),
+           "tail_scale": float(tail_scale),
+           "corr": float(corr)}
+    base = batch.base_len
+    for i, tname in enumerate(batch.tech_col[:base]):
+        out[tname] = dict(
+            layers=int(np.asarray(batch.layers)[i]),
+            fail_ppm=float(np.asarray(ppm["fail_ppm"])[i]),
+            fail_ppm_lo=float(np.asarray(ppm["fail_ppm_lo"])[i]),
+            fail_ppm_hi=float(np.asarray(ppm["fail_ppm_hi"])[i]),
+            tail_ess=float(np.asarray(ppm["ess"])[i]),
+        )
+    return out
+
+
+def fig_tail_probability(floors_mv=None, samples: int = 4096, key=0,
+                         tail_shift: float = 4.0, tail_scale: float = 1.2,
+                         corr: float = 1.0,
+                         min_ess: float = 8.0) -> list[dict]:
+    """Tail-probability curve: margin-spec failure probability vs the
+    margin floor, per Table-1 tech — ONE importance-sampled sweep reused
+    for every floor (the spec threshold is a reduction argument, not a
+    sweep input)."""
+    if floors_mv is None:
+        floors_mv = np.linspace(20.0, 120.0, 11)
+    space = DesignSpace.paper_targets().with_mc(
+        samples=samples, key=key, corr=corr,
+        tail_shift=(tail_shift, 0.0), tail_scale=(tail_scale, 1.0))
+    batch = dse.sweep(space, with_transient=False)
+    base = batch.base_len
+    tech_col = batch.tech_col[:base]
+
+    rows = []
+    for floor in floors_mv:
+        ppm = batch.yield_ppm(margin_mv=float(floor), min_ess=min_ess)
+        for i, tname in enumerate(tech_col):
+            rows.append(dict(
+                tech=tname, margin_floor_mv=float(floor),
+                fail_ppm=float(np.asarray(ppm["fail_ppm"])[i]),
+                fail_ppm_lo=float(np.asarray(ppm["fail_ppm_lo"])[i]),
+                fail_ppm_hi=float(np.asarray(ppm["fail_ppm_hi"])[i]),
+                tail_ess=float(np.asarray(ppm["ess"])[i])))
+    return rows
 
 
 def fig9b_margin_yield_vs_density(densities=None, scheme: str = "sel_strap",

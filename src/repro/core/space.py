@@ -28,7 +28,12 @@ fans every design point out to N sampled rows (sample-major) and injects
 the draws as reserved `mc_*` corner arrays (`mc_sa_offset_mv`,
 `mc_delta_vth_mv`), so the physics modules pick them up through
 `view.corner` with no new protocol and the whole sampled space is still
-ONE flat batch through the fused row-cycle engine.
+ONE flat batch through the fused row-cycle engine.  Correlated
+within-die variation (`corr=`) composes each draw as `global_die +
+mat_gradient + local` via low-rank factor draws before the reshape, and
+an importance-sampling tail proposal (`tail_shift`/`tail_scale=`) adds
+the per-row log-weight channel `mc_log_w` the DesignBatch reductions
+consume.
 
 The flat batch axis is also the sharding axis: `dse.sweep(space,
 sharding=mesh)` distributes the lowered operand batch over a device mesh
@@ -54,6 +59,18 @@ DEFAULT_LAYER_GRID = (32, 48, 64, 87, 100, 120, 137, 160, 200)
 # axes must not collide with these (`with_corners` rejects the prefix).
 MC_AXES = ("mc_sa_offset_mv", "mc_delta_vth_mv")
 
+# Reserved per-row importance-sampling log-weight channel: present only
+# when `with_mc` declares a shifted/scaled proposal (tail_shift/tail_scale),
+# so the uniform-weight path through every DesignBatch reduction stays
+# bit-identical to the plain i.i.d. estimators.
+MC_LOG_W = "mc_log_w"
+
+# Rank of the low-rank factor basis behind the correlated mat/strap
+# gradient (Karhunen-Loeve-style cosine features of a squared-exponential
+# kernel).  Eight factors resolve correlation lengths down to ~1/8 of the
+# die span, which covers every calibrated `mc_corr_length`.
+MC_GRADIENT_FACTORS = 8
+
 
 def _key_entropy(key) -> tuple:
     """Normalize an MC key (int seed or JAX PRNG key) to a hashable
@@ -75,11 +92,34 @@ class MCConfig:
     `sa_offset_sigma_mv` / `vth_sigma_mv` of None mean "use each tech's
     calibrated sigma fields"; explicit values override every tech (the
     sigma=0 escape hatch reproduces the nominal sweep exactly).
+
+    `corr` scales each tech's calibrated within-die correlation fractions
+    (`mc_die_sigma_frac` / `mc_mat_sigma_frac`): 0 keeps the draws purely
+    i.i.d. (bit-identical to the uncorrelated lowering), 1 applies the
+    calibrated decomposition in full.
+
+    `tail_shift` / `tail_scale` declare an importance-sampling proposal on
+    the *local* standardized draws — z ~ N(tail_shift, tail_scale^2)
+    instead of N(0, 1), shifted toward the failure tail (larger SA offset,
+    slower access Vth) — whose exact per-row density-ratio log-weights are
+    lowered as the reserved `mc_log_w` channel.  Both are per-channel
+    (SA offset, Vth) 2-tuples; `with_mc` broadcasts scalars.  Shift only
+    the channel(s) a spec constrains: an unconstrained shifted channel
+    costs pure weight variance.
     """
     samples: int
     entropy: tuple
     sa_offset_sigma_mv: float | None = None
     vth_sigma_mv: float | None = None
+    corr: float = 0.0
+    tail_shift: tuple = (0.0, 0.0)
+    tail_scale: tuple = (1.0, 1.0)
+
+    @property
+    def is_active(self) -> bool:
+        """Whether the proposal differs from the target (weights ride)."""
+        return (any(s != 0.0 for s in self.tail_shift)
+                or any(s != 1.0 for s in self.tail_scale))
 
 
 @dataclass(frozen=True)
@@ -125,6 +165,27 @@ class LoweredSpace:
         if name in self.corners:
             return jnp.asarray(self.corners[name], jnp.float32)
         return default
+
+
+def _gradient_basis(positions: np.ndarray, corr_length: np.ndarray,
+                    n_factors: int = MC_GRADIENT_FACTORS) -> np.ndarray:
+    """Low-rank basis of the correlated mat/strap gradient -> (b, K).
+
+    Cosine features weighted by a squared-exponential spectrum and
+    row-normalized to unit marginal variance: a gradient draw is
+    `g[s] = basis @ w[s]` with `w ~ N(0, I_K)`, so `g` has unit variance
+    per row and `corr(g_i, g_j) = basis_i . basis_j`, decaying with the
+    row distance `|x_i - x_j|` on the scale of `corr_length` (both in
+    die-span units).  In the long-correlation limit the k=0 (constant)
+    feature dominates and the gradient degenerates into a shared offset.
+    """
+    x = np.asarray(positions, np.float64).reshape(-1, 1)        # (b, 1)
+    ell = np.asarray(corr_length, np.float64).reshape(-1, 1)    # (b, 1)
+    k = np.arange(n_factors, dtype=np.float64)[None, :]         # (1, K)
+    lam = np.exp(-0.5 * (k * np.pi * np.maximum(ell, 1e-3)) ** 2)
+    basis = np.sqrt(lam) * np.cos(k * np.pi * x)
+    norm = np.sqrt((basis ** 2).sum(axis=1, keepdims=True))
+    return basis / np.maximum(norm, 1e-30)
 
 
 def _as_layer_tuple(layers) -> tuple:
@@ -244,11 +305,13 @@ class DesignSpace:
 
     def with_mc(self, samples: int, key=0,
                 sa_offset_sigma_mv: float | None = None,
-                vth_sigma_mv: float | None = None) -> "DesignSpace":
+                vth_sigma_mv: float | None = None,
+                corr: float = 0.0,
+                tail_shift=0.0,
+                tail_scale=1.0) -> "DesignSpace":
         """Declare Monte-Carlo variation sampling: every design point fans
         out to `samples` rows of the SAME flat batch (sample-major), each
-        with an independently drawn BLSA offset and access-transistor Vth
-        perturbation.
+        with a drawn BLSA offset and access-transistor Vth perturbation.
 
         Draws are deterministic in `key` (an int seed or a JAX PRNG key):
         the same key lowers to bit-identical sample rows, so downstream
@@ -256,6 +319,25 @@ class DesignSpace:
         calibrated `sa_offset_sigma_mv` / `vth_sigma_mv` fields; explicit
         overrides apply to every tech (`sigma=0` with `samples=1`
         reproduces the nominal sweep exactly).
+
+        `corr` in [0, 1] turns on correlated *within-die* variation: each
+        standardized draw is composed as `global_die + mat_gradient +
+        local` with the per-tech variance fractions (`mc_die_sigma_frac`,
+        `mc_mat_sigma_frac`, scaled by `corr`) and a low-rank correlated
+        gradient along the shared-mat axis (`mc_corr_length`).  `corr=0`
+        (the default) reproduces the i.i.d. draws bit-for-bit.
+
+        `tail_shift` / `tail_scale` declare an importance-sampling
+        proposal for deep-tail (ppm) yield estimation: the local
+        standardized draws come from N(tail_shift, tail_scale^2) — shifted
+        toward the failure tail — and the exact per-row log-weights ride
+        the batch as the reserved `mc_log_w` channel, which every
+        DesignBatch reduction (`yield_fraction`/`quantile`/`mc_summary`/
+        `yield_ppm`) consumes automatically.  Each accepts a scalar
+        (applied to both channels) or a per-channel (SA offset, Vth)
+        pair; shift only the channel(s) the target spec constrains — e.g.
+        `tail_shift=(4.5, 0.0)` for a margin-only ppm floor — because an
+        unconstrained shifted channel only adds weight variance.
         """
         samples = int(samples)
         if samples < 1:
@@ -263,10 +345,27 @@ class DesignSpace:
         if self.mc is not None:
             raise ValueError("Monte-Carlo sampling already declared on "
                              "this space")
+        corr = float(corr)
+        if not 0.0 <= corr <= 1.0:
+            raise ValueError(f"with_mc needs 0 <= corr <= 1, got {corr}")
+
+        def per_channel(name, value):
+            pair = (tuple(float(v) for v in value)
+                    if np.ndim(value) else (float(value),) * 2)
+            if len(pair) != 2:
+                raise ValueError(f"with_mc {name} must be a scalar or a "
+                                 f"(sa, vth) pair, got {value!r}")
+            return pair
+
+        shift = per_channel("tail_shift", tail_shift)
+        scale = per_channel("tail_scale", tail_scale)
+        if any(s <= 0.0 for s in scale):
+            raise ValueError(f"with_mc needs tail_scale > 0, got {scale}")
         return replace(self, mc=MCConfig(
             samples=samples, entropy=_key_entropy(key),
             sa_offset_sigma_mv=sa_offset_sigma_mv,
-            vth_sigma_mv=vth_sigma_mv))
+            vth_sigma_mv=vth_sigma_mv, corr=corr,
+            tail_shift=shift, tail_scale=scale))
 
     # ---------------------------------------------------------- lowering --
     def __len__(self) -> int:
@@ -326,23 +425,75 @@ class DesignSpace:
 
         samples = 1
         if self.mc is not None:
-            samples = self.mc.samples
+            mc = self.mc
+            samples = mc.samples
             b0 = layers.shape[0]
-            rng = np.random.default_rng(self.mc.entropy)
-            z = rng.standard_normal((2, samples, b0))
+            rng = np.random.default_rng(mc.entropy)
 
             def gather(fieldname):
                 vals = [getattr(cal.get_tech(n), fieldname)
                         for n in tech_names]
                 return np.asarray(vals, np.float64)[tech_idx]
 
+            # The local i.i.d. component comes FIRST and in one draw:
+            # with corr=0 and no tail proposal it is the entire draw and
+            # consumes the rng stream exactly like the original
+            # uncorrelated lowering — bit-for-bit the same samples.
+            z = rng.standard_normal((2, samples, b0))
+            log_w = None
+            if mc.is_active:
+                # Shifted/scaled proposal on the local standardized draws;
+                # the reserved mc_log_w channel carries the exact per-row
+                # density ratio  log N(z|0,1) - log N(z|shift, scale^2),
+                # summed over the SA-offset and Vth channels (per-channel
+                # shift/scale, so an unshifted channel contributes no
+                # weight variance).  Only the local component is
+                # reweighted; the correlated die/gradient components below
+                # stay target-distributed, so per-design estimators over
+                # the sample axis remain exact.
+                shift = np.asarray(mc.tail_shift,
+                                   np.float64).reshape(2, 1, 1)
+                scale = np.asarray(mc.tail_scale,
+                                   np.float64).reshape(2, 1, 1)
+                z = shift + scale * z
+                log_w = (-0.5 * z ** 2
+                         + 0.5 * ((z - shift) / scale) ** 2
+                         + np.log(scale)).sum(axis=0)
+            if mc.corr > 0.0:
+                # Correlated within-die decomposition: a die-level offset
+                # shared by every base row of a sample, plus a low-rank
+                # mat/strap gradient along the base-row axis (the lowering
+                # order is the mat order along the die span).
+                f_die = mc.corr * gather("mc_die_sigma_frac")
+                f_mat = mc.corr * gather("mc_mat_sigma_frac")
+                over = f_die + f_mat > 1.0 + 1e-9
+                if over.any():
+                    bad = sorted({tech_names[t] for t in tech_idx[over]})
+                    raise ValueError(
+                        f"correlated-MC variance fractions of {bad} exceed "
+                        "1 (mc_die_sigma_frac + mc_mat_sigma_frac scaled "
+                        f"by corr={mc.corr} must stay <= 1)")
+                z_die = rng.standard_normal((2, samples, 1))
+                w_fac = rng.standard_normal(
+                    (2, samples, MC_GRADIENT_FACTORS))
+                pos = np.arange(b0, dtype=np.float64) / max(b0 - 1, 1)
+                basis = _gradient_basis(pos, gather("mc_corr_length"))
+                grad = np.einsum("csk,bk->csb", w_fac, basis)
+                # clamp the local remainder: the guard above grants a
+                # 1e-9 tolerance, so a sum at 1.0+eps must not sqrt a
+                # negative number into NaN draws
+                f_loc = np.maximum(1.0 - f_die - f_mat, 0.0)
+                z = (np.sqrt(f_loc)[None, None] * z
+                     + np.sqrt(f_die)[None, None] * z_die
+                     + np.sqrt(f_mat)[None, None] * grad)
+
             mu_sa = gather("sa_offset_mv")
             sig_sa = (gather("sa_offset_sigma_mv")
-                      if self.mc.sa_offset_sigma_mv is None
-                      else np.full(b0, float(self.mc.sa_offset_sigma_mv)))
+                      if mc.sa_offset_sigma_mv is None
+                      else np.full(b0, float(mc.sa_offset_sigma_mv)))
             sig_vth = (gather("vth_sigma_mv")
-                       if self.mc.vth_sigma_mv is None
-                       else np.full(b0, float(self.mc.vth_sigma_mv)))
+                       if mc.vth_sigma_mv is None
+                       else np.full(b0, float(mc.vth_sigma_mv)))
             # offset magnitudes: a sample below 0 has no physical meaning
             mc_sa = np.maximum(mu_sa[None] + sig_sa[None] * z[0], 0.0)
             mc_dvth = sig_vth[None] * z[1]
@@ -353,6 +504,8 @@ class DesignSpace:
             corners = {k: np.tile(v, samples) for k, v in corners.items()}
             corners["mc_sa_offset_mv"] = mc_sa.reshape(-1).astype(np.float32)
             corners["mc_delta_vth_mv"] = mc_dvth.reshape(-1).astype(np.float32)
+            if log_w is not None:
+                corners[MC_LOG_W] = log_w.reshape(-1).astype(np.float32)
 
         return LoweredSpace(
             tech_names=tuple(tech_names), scheme_names=tuple(scheme_names),

@@ -260,7 +260,6 @@ def simulate_row_cycle(tech: TechCal, scheme: str, layers,
         return simulate_row_cycle_phased(tech, scheme, layers,
                                          store_v=store_v, backend=backend)
     ladder = build_bl_ladder(tech, scheme, layers)
-    vpre = cal.VBL_PRE
     if store_v is None:
         store_v = tech.writeback_eff * cal.VDD_ARRAY
     operands = _fused_operands(ladder, tech, store_v)

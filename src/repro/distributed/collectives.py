@@ -17,8 +17,6 @@ gradient synchronizer (used by the DP train loop and the perf experiments).
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map

@@ -83,7 +83,6 @@ def rc_multistep_ref(c: jnp.ndarray, g_branch: jnp.ndarray,
         # scale the access (last) branch by the WL ramp value for this step
         g = jnp.concatenate([g_branch[..., :-1], g_branch[..., -1:] * s], axis=-1)
         # assemble tridiagonal A = C/dt + G
-        n = c.shape[-1]
         zeros = jnp.zeros_like(c[..., :1])
         g_lo = jnp.concatenate([zeros, g], axis=-1)        # g[i-1] at row i
         g_hi = jnp.concatenate([g, zeros], axis=-1)        # g[i]   at row i

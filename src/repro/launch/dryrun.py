@@ -30,8 +30,6 @@ RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
 
 def run_cell(arch: str, cell: str, mesh_kind: str, opt_level: int = 0) -> dict:
     import jax
-    import jax.numpy as jnp
-    from jax.sharding import NamedSharding, PartitionSpec as P
 
     from ..configs.base import SHAPE_CELLS, input_specs
     from ..configs.registry import get_arch

@@ -8,9 +8,7 @@ Layer-stacked weights carry a leading "layers" axis and are consumed by
 
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -11,8 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .attention import (attn_schema, causal_attention, decode_attention,
-                        _project_qkv)
+from .attention import attn_schema, causal_attention, decode_attention
 from .common import (ParamSpec, Schema, abstract_from_schema, add_norm,
                      apply_norm, axes_from_schema, cross_entropy,
                      embed_schema, embed_tokens, init_from_schema, lm_logits,

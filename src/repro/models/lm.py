@@ -17,8 +17,6 @@ Public entry points (all pure functions of (cfg, params, ...)):
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

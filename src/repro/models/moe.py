@@ -129,7 +129,6 @@ def moe_apply_ep(cfg, p, x):
 
     dp = mesh_ctx.dp_axes()
     b, s, d = x.shape
-    f = cfg.d_ff
     k = cfg.top_k
     dp_size = 1
     for a in dp:

@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from . import encdec, lm
-from .common import abstract_from_schema, axes_from_schema
+from .common import axes_from_schema
 
 
 def _mod(cfg):

@@ -118,7 +118,6 @@ def parse_module(text: str, pod_size: int = 256) -> dict[str, Computation]:
                 cur.while_edges.append((body.group(1), cond.group(1)))
         else:
             for cm2 in CALL_RE.finditer(line):
-                kind = line[cm2.start():cm2.start() + 9]
                 cur.call_edges.append(cm2.group(1))
             bm = BRANCH_RE.search(line)
             if bm:

@@ -10,10 +10,8 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from pathlib import Path
 
 import jax
-import numpy as np
 
 from ..ckpt.manager import CheckpointManager
 from ..configs.base import ArchConfig
@@ -74,8 +72,6 @@ def train(cfg: ArchConfig, tc: TrainConfig, verbose: bool = True) -> dict:
 
     def restore():
         ckpt.wait()
-        like = dict(params=M.abstract_params(cfg),
-                    opt=state["opt"])
         restored, step = ckpt.restore(like=state)
         if verbose:
             print(f"[fault] restored from checkpoint @ step {step}",

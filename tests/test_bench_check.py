@@ -1,0 +1,171 @@
+"""Benchmark regression gate (`tools/bench_check.py`).
+
+Unit-tests the gate against synthetic records — a regression beyond the
+tolerance fails, runner noise inside it passes, and missing metrics or
+malformed JSON fail loudly — plus the schema check that committed
+baselines (and, @slow, a fresh `benchmarks/run.py --json` run) contain
+only finite numeric metrics.
+"""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "tools"))
+
+import bench_check  # noqa: E402  (tools/ is not a package)
+
+
+def record(fused_designs_per_s=50_000.0, sharded_points_per_s=9_000.0):
+    return {
+        "meta": {"backend": "cpu"},
+        "benches": {
+            "fused_rc": {"batch": 1024,
+                         "designs_per_s": fused_designs_per_s},
+            "sharded_sweep": {
+                "per_device": {"1": {"points_per_s": sharded_points_per_s}},
+                "best_scaling_vs_1dev": 1.7,
+            },
+        },
+        "failed": [],
+    }
+
+
+def write(tmp_path, name, payload) -> Path:
+    path = tmp_path / name
+    path.write_text(payload if isinstance(payload, str)
+                    else json.dumps(payload))
+    return path
+
+
+def run_main(tmp_path, current, baseline, **kw) -> int:
+    cur = write(tmp_path, "current.json", current)
+    base = write(tmp_path, "baseline.json", baseline)
+    argv = ["--current", str(cur), "--baseline", str(base)]
+    for k, v in kw.items():
+        argv += [f"--{k.replace('_', '-')}", str(v)]
+    return bench_check.main(argv)
+
+
+class TestGate:
+    def test_within_tolerance_passes(self, tmp_path, capsys):
+        # a 20% dip is shared-runner noise, not a regression
+        assert run_main(tmp_path, record(40_000.0, 7_500.0),
+                        record()) == 0
+        assert "bench_check: OK" in capsys.readouterr().out
+
+    def test_improvement_passes_and_suggests_rebaseline(self, tmp_path,
+                                                        capsys):
+        assert run_main(tmp_path, record(120_000.0, 20_000.0),
+                        record()) == 0
+        assert "re-baselining" in capsys.readouterr().out
+
+    def test_regression_detected(self, tmp_path, capsys):
+        # >35% throughput drop on the fused engine fails, and the
+        # message names the offending metric
+        assert run_main(tmp_path, record(fused_designs_per_s=30_000.0),
+                        record()) == 1
+        err = capsys.readouterr().err
+        assert "fused_rc.designs_per_s" in err
+        assert "regression" in err
+
+    def test_regression_on_sharded_metric(self, tmp_path, capsys):
+        assert run_main(tmp_path, record(sharded_points_per_s=2_000.0),
+                        record()) == 1
+        assert ("sharded_sweep.per_device.1.points_per_s"
+                in capsys.readouterr().err)
+
+    def test_custom_tolerance(self, tmp_path):
+        current = record(fused_designs_per_s=40_000.0)   # -20%
+        assert run_main(tmp_path, current, record(),
+                        max_regression=0.1) == 1
+        assert run_main(tmp_path, current, record(),
+                        max_regression=0.3) == 0
+
+    def test_missing_metric_fails(self, tmp_path, capsys):
+        broken = record()
+        del broken["benches"]["fused_rc"]["designs_per_s"]
+        assert run_main(tmp_path, broken, record()) == 2
+        assert "missing" in capsys.readouterr().err
+        # ... and a baseline bench absent from the current record too
+        gone = record()
+        del gone["benches"]["sharded_sweep"]
+        assert run_main(tmp_path, gone, record()) == 2
+
+    def test_malformed_json_fails(self, tmp_path, capsys):
+        cur = write(tmp_path, "current.json", "{not json")
+        base = write(tmp_path, "baseline.json", record())
+        assert bench_check.main(["--current", str(cur),
+                                 "--baseline", str(base)]) == 2
+        assert "not valid JSON" in capsys.readouterr().err
+
+    def test_record_without_benches_fails(self, tmp_path, capsys):
+        assert run_main(tmp_path, {"meta": {}}, record()) == 2
+        assert "'benches'" in capsys.readouterr().err
+
+    def test_nonfinite_current_metric_fails(self, tmp_path):
+        # json.dumps happily writes NaN; the gate must still reject it
+        bad = record()
+        bad["benches"]["fused_rc"]["speedup_vs_phased"] = float("nan")
+        assert run_main(tmp_path, bad, record()) == 2
+
+    def test_missing_file_fails(self, tmp_path):
+        base = write(tmp_path, "baseline.json", record())
+        assert bench_check.main(
+            ["--current", str(tmp_path / "nope.json"),
+             "--baseline", str(base)]) == 2
+
+    def test_baseline_with_no_gated_bench_fails(self, tmp_path):
+        empty = {"meta": {}, "benches": {"roofline": {"flops": 1.0}}}
+        assert run_main(tmp_path, record(), empty) == 2
+
+
+class TestSchema:
+    def test_helpers_reject_nonfinite(self):
+        bad = record()
+        bad["benches"]["fused_rc"]["designs_per_s"] = float("inf")
+        with pytest.raises(bench_check.BenchCheckError, match="finite"):
+            bench_check.validate_finite(bad)
+        with pytest.raises(bench_check.BenchCheckError, match="no numeric"):
+            bench_check.validate_finite({"benches": {}})
+
+    def test_committed_baselines_are_finite_and_gated(self):
+        baseline_dir = REPO / "benchmarks/baselines"
+        paths = sorted(baseline_dir.glob("BENCH_*.json"))
+        assert paths, "no committed baselines under benchmarks/baselines/"
+        for path in paths:
+            rec = bench_check.load_record(path)
+            assert bench_check.validate_finite(rec) > 0
+        # every gated metric must be readable from some committed
+        # baseline, else the CI gate silently checks nothing
+        merged = {"benches": {}}
+        for path in paths:
+            merged["benches"].update(
+                bench_check.load_record(path)["benches"])
+        for bench, metric_paths in bench_check.GATED_METRICS.items():
+            for mpath in metric_paths:
+                assert bench_check.get_metric(merged, bench, mpath) > 0.0
+
+    @pytest.mark.slow
+    def test_fresh_bench_json_metrics_are_finite(self, tmp_path):
+        """Schema check on a real record: every metric emitted by
+        `benchmarks/run.py --json` is a finite number."""
+        out = tmp_path / "bench.json"
+        env = dict(os.environ, JAX_PLATFORMS="cpu")
+        env["PYTHONPATH"] = str(REPO / "src") + (
+            os.pathsep + env["PYTHONPATH"] if "PYTHONPATH" in env else "")
+        r = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "--only", "fused_rc",
+             "--json", str(out)],
+            cwd=REPO, env=env, capture_output=True, text=True,
+            timeout=900)
+        assert r.returncode == 0, r.stderr[-2000:]
+        rec = bench_check.load_record(out)
+        assert bench_check.validate_finite(rec) >= 5
+        assert bench_check.get_metric(rec, "fused_rc",
+                                      "designs_per_s") > 0.0

@@ -3,10 +3,9 @@ DSE feasibility logic, device models."""
 
 import numpy as np
 import jax.numpy as jnp
-import pytest
 
 from repro.core import calibration as cal
-from repro.core.calibration import AOS, D1B, SI
+from repro.core.calibration import SI
 from repro.core.device_models import (AOS_ACCESS, IGO_SELECTOR, SI_ACCESS,
                                       ids_ua, retention_time_ms,
                                       subthreshold_swing_mv_dec)

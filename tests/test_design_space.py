@@ -16,7 +16,6 @@ Covers the redesigned co-optimization surface:
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.core import calibration as cal

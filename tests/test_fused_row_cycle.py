@@ -13,7 +13,6 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core import calibration as cal
 from repro.core import dse, transient
 from repro.core.calibration import AOS, D1B, SI
 from repro.core.dse import best_design, full_sweep

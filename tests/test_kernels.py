@@ -2,7 +2,6 @@
 swept over shapes and dtypes."""
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

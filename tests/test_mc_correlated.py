@@ -1,0 +1,413 @@
+"""Correlated within-die variation + importance-sampled ppm tails (PR 5).
+
+Covers the two halves of the variation-aware MC engine:
+
+1. Correlated draws: `with_mc(corr=...)` composes each standardized draw
+   as `global_die + mat_gradient + local` via low-rank factor draws —
+   `corr=0` reproduces the PR-3 i.i.d. draws bit-for-bit, `corr=1`
+   applies the per-tech variance decomposition (marginal sigma
+   preserved, die component shared, gradient correlation decaying with
+   row distance).
+2. Importance sampling: a shifted/scaled proposal on the local draws
+   rides the batch as the reserved `mc_log_w` channel; the DesignBatch
+   reductions become weight-aware (uniform weights bit-identical to the
+   plain estimators), `ess()` diagnoses weight degeneracy, and
+   `yield_ppm` estimates deep-tail failure rates with a CI that NaNs
+   out when the tail ESS is too low.  The @slow oracle checks the ppm
+   estimate against a brute-force large-N i.i.d. run and the analytic
+   Gaussian tail.
+"""
+
+import math
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.core import calibration as cal
+from repro.core import dse
+from repro.core.space import (MC_AXES, MC_LOG_W, DesignSpace,
+                              _gradient_basis)
+
+POINTS = (("si", "sel_strap", 137), ("aos", "sel_strap", 87),
+          ("d1b", "direct", 1))
+
+
+def base_space():
+    return DesignSpace.points(POINTS)
+
+
+def _register(tech):
+    cal.register_tech(tech, overwrite=True)
+    return tech
+
+
+@pytest.fixture
+def die_only_tech():
+    tech = _register(cal.SI.with_(name="t_die", mc_die_sigma_frac=1.0,
+                                  mc_mat_sigma_frac=0.0))
+    yield tech
+    cal.unregister_tech(tech.name)
+
+
+@pytest.fixture
+def grad_only_tech():
+    tech = _register(cal.SI.with_(name="t_grad", mc_die_sigma_frac=0.0,
+                                  mc_mat_sigma_frac=1.0,
+                                  mc_corr_length=0.2))
+    yield tech
+    cal.unregister_tech(tech.name)
+
+
+def _iid_reference_draws(samples, key_entropy, mu_sa, sig_sa, sig_vth):
+    """The PR-3 i.i.d. draw algorithm, replicated verbatim: the corr=0
+    path must consume the rng stream identically."""
+    rng = np.random.default_rng(key_entropy)
+    z = rng.standard_normal((2, samples, len(mu_sa)))
+    mc_sa = np.maximum(np.asarray(mu_sa)[None]
+                       + np.asarray(sig_sa)[None] * z[0], 0.0)
+    mc_dvth = np.asarray(sig_vth)[None] * z[1]
+    return (mc_sa.reshape(-1).astype(np.float32),
+            mc_dvth.reshape(-1).astype(np.float32))
+
+
+class TestCorrelatedDraws:
+    def test_corr0_bit_identical_to_iid_reference(self):
+        sa_ref, dvth_ref = _iid_reference_draws(
+            16, (7,), mu_sa=(25.0, 25.0, 25.0), sig_sa=(5.0, 5.0, 4.0),
+            sig_vth=(25.0, 35.0, 20.0))
+        for kwargs in ({}, {"corr": 0.0}):
+            sp = base_space().with_mc(samples=16, key=7, **kwargs).lower()
+            np.testing.assert_array_equal(sp.corners["mc_sa_offset_mv"],
+                                          sa_ref)
+            np.testing.assert_array_equal(sp.corners["mc_delta_vth_mv"],
+                                          dvth_ref)
+            assert MC_LOG_W not in sp.corners
+
+    def test_corr1_preserves_marginal_moments(self):
+        sp = base_space().with_mc(samples=2048, key=3, corr=1.0).lower()
+        dvth = sp.corners["mc_delta_vth_mv"].reshape(2048, len(POINTS))
+        np.testing.assert_allclose(dvth.std(axis=0), (25.0, 35.0, 20.0),
+                                   rtol=0.12)
+        np.testing.assert_allclose(dvth.mean(axis=0), 0.0, atol=3.0)
+
+    def test_die_component_shared_within_a_sample(self, die_only_tech):
+        space = DesignSpace.points(
+            [(die_only_tech.name, "sel_strap", ell)
+             for ell in (64, 100, 137)])
+        sp = space.with_mc(samples=32, key=1, corr=1.0).lower()
+        dvth = sp.corners["mc_delta_vth_mv"].reshape(32, 3)
+        # a pure die-level component is one draw per sample, shared by
+        # every base row
+        np.testing.assert_allclose(dvth.std(axis=1), 0.0, atol=1e-4)
+        assert dvth.std(axis=0).min() > 0.0
+
+    def test_corr_knob_scales_shared_variance(self, die_only_tech):
+        space = DesignSpace.points(
+            [(die_only_tech.name, "sel_strap", ell) for ell in (64, 137)])
+        sp = space.with_mc(samples=2048, key=2, corr=0.5).lower()
+        dvth = sp.corners["mc_delta_vth_mv"].reshape(2048, 2)
+        rho = np.corrcoef(dvth[:, 0], dvth[:, 1])[0, 1]
+        # z = sqrt(0.5)*local + sqrt(0.5)*die  =>  corr between rows 0.5
+        assert rho == pytest.approx(0.5, abs=0.08)
+
+    def test_gradient_correlation_decays_with_distance(self,
+                                                       grad_only_tech):
+        layers = np.linspace(32, 200, 24)
+        space = DesignSpace.points(
+            [(grad_only_tech.name, "sel_strap", ell) for ell in layers])
+        sp = space.with_mc(samples=1024, key=4, corr=1.0).lower()
+        dvth = sp.corners["mc_delta_vth_mv"].reshape(1024, 24)
+        rho = np.corrcoef(dvth.T)
+        near = rho[0, 1]
+        far = rho[0, -1]
+        assert near > 0.8
+        assert far < near - 0.3
+
+    def test_gradient_basis_unit_rows_and_decay(self):
+        pos = np.linspace(0.0, 1.0, 33)
+        basis = _gradient_basis(pos, np.full(33, 0.15))
+        np.testing.assert_allclose((basis ** 2).sum(axis=1), 1.0,
+                                   rtol=1e-12)
+        gram = basis @ basis.T
+        assert gram[0, 1] > gram[0, -1]
+
+    def test_validation(self):
+        space = base_space()
+        with pytest.raises(ValueError, match="corr"):
+            space.with_mc(samples=2, corr=-0.1)
+        with pytest.raises(ValueError, match="corr"):
+            space.with_mc(samples=2, corr=1.5)
+        with pytest.raises(ValueError, match="tail_scale"):
+            space.with_mc(samples=2, tail_scale=0.0)
+        with pytest.raises(ValueError, match="pair"):
+            space.with_mc(samples=2, tail_shift=(1.0, 2.0, 3.0))
+
+    def test_over_unity_fractions_raise_at_lower(self):
+        tech = _register(cal.SI.with_(name="t_over",
+                                      mc_die_sigma_frac=0.7,
+                                      mc_mat_sigma_frac=0.5))
+        try:
+            space = DesignSpace.points([(tech.name, "sel_strap", 137)])
+            with pytest.raises(ValueError, match="t_over"):
+                space.with_mc(samples=2, corr=1.0).lower()
+            # scaled down by corr they fit again
+            space.with_mc(samples=2, corr=0.5).lower()
+        finally:
+            cal.unregister_tech(tech.name)
+
+    def test_fraction_sum_inside_guard_tolerance_stays_finite(self):
+        # the over-unity guard grants 1e-9 of float headroom; a sum
+        # landing inside it must clamp the local remainder to zero, not
+        # sqrt a negative number into NaN draws
+        tech = _register(cal.SI.with_(name="t_edge",
+                                      mc_die_sigma_frac=1.0,
+                                      mc_mat_sigma_frac=1e-10))
+        try:
+            space = DesignSpace.points([(tech.name, "sel_strap", 137)])
+            sp = space.with_mc(samples=16, key=0, corr=1.0).lower()
+            for name in MC_AXES:
+                assert np.isfinite(sp.corners[name]).all()
+        finally:
+            cal.unregister_tech(tech.name)
+
+    def test_corr_draw_determinism(self):
+        a = base_space().with_mc(samples=8, key=5, corr=1.0).lower()
+        b = base_space().with_mc(samples=8, key=5, corr=1.0).lower()
+        c = base_space().with_mc(samples=8, key=5, corr=0.7).lower()
+        for name in MC_AXES:
+            np.testing.assert_array_equal(a.corners[name], b.corners[name])
+        assert not np.array_equal(a.corners["mc_delta_vth_mv"],
+                                  c.corners["mc_delta_vth_mv"])
+
+
+class TestImportanceWeights:
+    def test_log_w_channel_gating(self):
+        assert MC_LOG_W not in base_space().with_mc(4).lower().corners
+        assert MC_LOG_W not in base_space().with_mc(
+            4, tail_shift=0.0, tail_scale=1.0).lower().corners
+        for kwargs in ({"tail_shift": 2.0}, {"tail_scale": 1.3},
+                       {"tail_shift": (2.0, 0.0)}):
+            sp = base_space().with_mc(4, **kwargs).lower()
+            assert sp.corners[MC_LOG_W].shape == (len(sp),)
+
+    def test_log_w_matches_density_ratio(self):
+        shift, scale = (2.0, 0.5), (1.3, 1.0)
+        sp = base_space().with_mc(samples=64, key=11, tail_shift=shift,
+                                  tail_scale=scale).lower()
+        rng = np.random.default_rng((11,))
+        z0 = rng.standard_normal((2, 64, len(POINTS)))
+        sh = np.asarray(shift).reshape(2, 1, 1)
+        sc = np.asarray(scale).reshape(2, 1, 1)
+        z = sh + sc * z0
+        expect = (-0.5 * z ** 2 + 0.5 * z0 ** 2 + np.log(sc)).sum(axis=0)
+        np.testing.assert_allclose(sp.corners[MC_LOG_W],
+                                   expect.reshape(-1), rtol=1e-5,
+                                   atol=1e-5)
+
+    def test_uniform_log_w_matches_unweighted_reductions(self):
+        batch = dse.sweep(base_space().with_mc(samples=64, key=0),
+                          with_transient=False)
+        uni = replace(batch, corners={**batch.corners,
+                                      MC_LOG_W: np.zeros(len(batch),
+                                                         np.float32)})
+        np.testing.assert_allclose(
+            np.asarray(uni.yield_fraction(margin_mv=120.0)),
+            np.asarray(batch.yield_fraction(margin_mv=120.0)), atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(uni.quantile(0.5, "margin_mv")),
+            np.asarray(batch.quantile(0.5, "margin_mv")), rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(uni.ess()),
+                                   np.asarray(batch.ess()), rtol=1e-6)
+
+    def test_weighted_yield_fraction_matches_numpy_oracle(self):
+        batch = dse.sweep(
+            base_space().with_mc(samples=256, key=3,
+                                 tail_shift=(1.5, 0.0)),
+            with_transient=False)
+        base = batch.base_len
+        w = np.exp(np.asarray(batch.corners[MC_LOG_W],
+                              np.float64)).reshape(-1, base)
+        margin = np.asarray(batch.margin_mv, np.float64).reshape(-1, base)
+        floor = 125.0
+        expect = ((w * (margin >= floor)).sum(axis=0) / w.sum(axis=0))
+        got = np.asarray(batch.yield_fraction(margin_mv=floor))
+        np.testing.assert_allclose(got, expect, rtol=1e-4)
+
+    def test_weighted_bulk_yield_agrees_with_iid(self):
+        floor = 128.0      # in the bulk of the si margin distribution
+        space_is = base_space().with_mc(samples=2048, key=1,
+                                        tail_shift=(1.0, 0.0))
+        space_iid = base_space().with_mc(samples=2048, key=2)
+        y_is = np.asarray(dse.sweep(space_is, with_transient=False)
+                          .yield_fraction(margin_mv=floor))
+        y_iid = np.asarray(dse.sweep(space_iid, with_transient=False)
+                           .yield_fraction(margin_mv=floor))
+        np.testing.assert_allclose(y_is, y_iid, atol=0.06)
+
+    def test_weighted_quantile(self):
+        batch = dse.sweep(
+            base_space().with_mc(samples=2048, key=5,
+                                 tail_shift=(1.0, 0.0)),
+            with_transient=False)
+        iid = dse.sweep(base_space().with_mc(samples=2048, key=6),
+                        with_transient=False)
+        med_w = np.asarray(batch.quantile(0.5, "margin_mv"))
+        med_i = np.asarray(iid.quantile(0.5, "margin_mv"))
+        np.testing.assert_allclose(med_w, med_i, atol=1.5)
+        # vector q keeps the (len(q), base) contract and stays ordered
+        qs = np.asarray(batch.quantile((0.05, 0.5, 0.95), "margin_mv"))
+        assert qs.shape == (3, batch.base_len)
+        assert (np.diff(qs, axis=0) >= 0.0).all()
+        # a NaN metric (transient off) has no weighted quantile either
+        assert np.isnan(np.asarray(batch.quantile(0.5, "trc_ns"))).all()
+
+    def test_weighted_quantile_ignores_invalid_rows_values(self):
+        # an invalid row's stale metric value must not become a CDF
+        # knot: only its weight being zero is not enough — low-q
+        # quantiles would interpolate toward it
+        batch = dse.sweep(
+            base_space().with_mc(samples=16, key=0,
+                                 tail_shift=(1.0, 0.0)),
+            with_transient=False)
+        valid = np.asarray(batch.valid).copy()
+        margin = np.asarray(batch.margin_mv).copy()
+        valid[0:batch.base_len] = False          # invalidate sample 0
+        margin[0:batch.base_len] = 0.0           # ... with garbage values
+        poisoned = replace(batch, valid=valid, margin_mv=margin)
+        lo_q = np.asarray(poisoned.quantile(0.005, "margin_mv"))
+        ref = np.asarray(batch.margin_mv).reshape(16, -1)[1:]
+        assert (lo_q >= ref.min(axis=0) - 1e-3).all()
+
+    def test_ess_diagnostic(self):
+        iid = dse.sweep(base_space().with_mc(samples=128, key=0),
+                        with_transient=False)
+        np.testing.assert_allclose(np.asarray(iid.ess()), 128.0)
+        shifted = dse.sweep(
+            base_space().with_mc(samples=128, key=0,
+                                 tail_shift=(2.0, 0.0)),
+            with_transient=False)
+        assert (np.asarray(shifted.ess()) < 128.0).all()
+        summ = shifted.mc_summary(margin_mv=80.0)
+        np.testing.assert_allclose(np.asarray(summ.corners["ess"]),
+                                   np.asarray(shifted.ess()), rtol=1e-5)
+
+    def test_yield_ppm_nan_semantics(self):
+        batch = dse.sweep(base_space().with_mc(samples=64, key=0),
+                          with_transient=False)
+        # si/aos never fail a 2.6-sigma floor in 64 draws: zero observed
+        # failures -> tail ESS 0 -> NaN, never a fake 0 ppm
+        ppm = batch.yield_ppm(margin_mv=80.0)
+        est = np.asarray(ppm["fail_ppm"])
+        assert np.isnan(est[0]) and np.isnan(est[1])
+        # d1b fails the floor in bulk: a real estimate
+        assert est[2] > 0.0
+        assert np.asarray(ppm["ess"])[2] >= 8.0
+        # an impossible ESS floor NaNs everything out
+        all_nan = batch.yield_ppm(margin_mv=80.0, min_ess=1e9)
+        assert np.isnan(np.asarray(all_nan["fail_ppm"])).all()
+        # zero valid samples: no estimate at all (mirrors yield_fraction)
+        invalid = replace(batch, valid=np.zeros(len(batch), bool))
+        assert np.isnan(
+            np.asarray(invalid.yield_ppm(margin_mv=80.0)["fail_ppm"])
+        ).all()
+
+    def test_yield_ppm_analytic_gaussian_tail(self):
+        # the margin column is exactly  m0 - sigma * z  in the SA draw,
+        # so the spec-failure probability has a closed form to test the
+        # importance-sampled estimator against
+        space = DesignSpace.points([("si", "sel_strap", 137)])
+        m0 = float(np.asarray(
+            dse.sweep(space, with_transient=False).margin_mv)[0])
+        sigma, t = 5.0, 4.0
+        floor = m0 - t * sigma
+        p_true = 0.5 * math.erfc(t / math.sqrt(2.0)) * 1e6
+        batch = dse.sweep(
+            space.with_mc(samples=4096, key=1, tail_shift=(t, 0.0),
+                          tail_scale=(1.2, 1.0)),
+            with_transient=False)
+        ppm = batch.yield_ppm(margin_mv=floor)
+        est = float(np.asarray(ppm["fail_ppm"])[0])
+        lo = float(np.asarray(ppm["fail_ppm_lo"])[0])
+        hi = float(np.asarray(ppm["fail_ppm_hi"])[0])
+        assert float(np.asarray(ppm["ess"])[0]) > 100.0
+        assert est == pytest.approx(p_true, rel=0.3)
+        width = hi - lo
+        assert lo - width <= p_true <= hi + width
+
+    def test_mc_summary_weighted_columns(self):
+        batch = dse.sweep(
+            base_space().with_mc(samples=256, key=7,
+                                 tail_shift=(1.0, 0.0)),
+            with_transient=False)
+        summ = batch.mc_summary(margin_mv=80.0)
+        assert len(summ) == batch.base_len
+        assert MC_LOG_W not in summ.corners
+        np.testing.assert_allclose(
+            np.asarray(summ.corners["yield_frac"]),
+            np.asarray(batch.yield_fraction(margin_mv=80.0)), rtol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(summ.margin_mv),
+            np.asarray(batch.quantile(0.5, "margin_mv")), rtol=1e-5)
+
+    def test_tail_report_tables(self):
+        table = report_tail_table(samples=512, key=0, tail_shift=3.0)
+        for tech in ("si", "aos", "d1b"):
+            entry = table[tech]
+            assert set(entry) >= {"fail_ppm", "fail_ppm_lo",
+                                  "fail_ppm_hi", "tail_ess"}
+            est = entry["fail_ppm"]
+            assert math.isnan(est) or 0.0 <= est <= 1e6
+        # d1b fails the functional floor in bulk — always estimable
+        assert table["d1b"]["fail_ppm"] > 1e5
+        rows = report_tail_curve(floors_mv=(40.0, 60.0), samples=256,
+                                 key=0, tail_shift=2.0)
+        assert len(rows) == 2 * 3
+        for r in rows:
+            assert math.isnan(r["fail_ppm"]) or 0.0 <= r["fail_ppm"] <= 1e6
+
+
+def report_tail_table(**kw):
+    from repro.core import report
+    return report.mc_tail_yield_table(**kw)
+
+
+def report_tail_curve(**kw):
+    from repro.core import report
+    return report.fig_tail_probability(**kw)
+
+
+@pytest.mark.slow
+class TestPpmOracle:
+    def test_is_tail_matches_bruteforce_iid_oracle(self):
+        """Acceptance: the importance-sampled ppm estimate agrees with a
+        brute-force large-N i.i.d. run within the reported confidence
+        intervals (and with the analytic Gaussian tail)."""
+        space = DesignSpace.points([("si", "sel_strap", 137)])
+        m0 = float(np.asarray(
+            dse.sweep(space, with_transient=False).margin_mv)[0])
+        sigma, t = 5.0, 3.5
+        floor = m0 - t * sigma
+        p_true = 0.5 * math.erfc(t / math.sqrt(2.0)) * 1e6
+
+        brute = dse.sweep(space.with_mc(samples=400_000, key=9),
+                          with_transient=False)
+        bf = brute.yield_ppm(margin_mv=floor)
+        bf_est = float(np.asarray(bf["fail_ppm"])[0])
+        bf_half = 0.5 * (float(np.asarray(bf["fail_ppm_hi"])[0])
+                         - float(np.asarray(bf["fail_ppm_lo"])[0]))
+
+        shifted = dse.sweep(
+            space.with_mc(samples=8192, key=4, tail_shift=(t, 0.0),
+                          tail_scale=(1.2, 1.0)),
+            with_transient=False)
+        is_ppm = shifted.yield_ppm(margin_mv=floor)
+        is_est = float(np.asarray(is_ppm["fail_ppm"])[0])
+        is_half = 0.5 * (float(np.asarray(is_ppm["fail_ppm_hi"])[0])
+                         - float(np.asarray(is_ppm["fail_ppm_lo"])[0]))
+
+        assert float(np.asarray(is_ppm["ess"])[0]) > 200.0
+        assert abs(is_est - bf_est) <= is_half + bf_half
+        assert abs(is_est - p_true) <= 2.0 * is_half
+        # the IS run needed ~50x fewer samples for a tighter interval
+        assert is_half < bf_half

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs.base import SMOKE_SHAPE, input_specs
+from repro.configs.base import input_specs
 from repro.configs.registry import ARCHS, get_arch
 from repro.models import registry as M
 from repro.models.ssm import ssd_chunked

@@ -1,9 +1,7 @@
 """Optimizer math vs a numpy reference; int8-moment variant tracks fp32."""
 
 import numpy as np
-import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.train.optimizer import (OptConfig, abstract_opt_state,
                                    lr_schedule, make_optimizer,

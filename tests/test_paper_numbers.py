@@ -7,7 +7,6 @@ These are the validation anchors of the faithful reproduction (DESIGN.md
 import jax.numpy as jnp
 import pytest
 
-from repro.core import calibration as cal
 from repro.core.calibration import AOS, D1B, SI
 from repro.core.density import (bit_density_gb_mm2, density_scaling_vs_d1b,
                                 layers_for_density, stack_height_um)

@@ -5,7 +5,6 @@ skipped at collection instead of erroring the tier-1 `-x` run.
 """
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 
@@ -86,7 +85,6 @@ def test_rc_conserves_charge(seed):
     zero = jnp.zeros((b, n), jnp.float32)
     v0 = jnp.asarray(rng.uniform(0, 1.1, (b, n)), jnp.float32)
     tr = ref.rc_multistep_ref(c, g, zero, zero, v0, jnp.ones((t,)), 0.02)
-    q0 = float((c * v0).sum(-1).max())
     qt = np.array((np.array(c)[None] * np.array(tr)).sum(-1))
     np.testing.assert_allclose(qt, np.array((c * v0).sum(-1))[None].repeat(t, 0),
                                rtol=1e-4)

@@ -1,8 +1,5 @@
 """Checkpointing, fault tolerance, stragglers, elastic replanning, data."""
 
-import math
-import time
-
 import numpy as np
 import jax
 import jax.numpy as jnp

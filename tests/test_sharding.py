@@ -5,7 +5,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.registry import get_arch
-from repro.distributed.sharding import (AXIS_RULES, dp_axes, spec_for_axes)
+from repro.distributed.sharding import dp_axes, spec_for_axes
 
 
 class FakeMesh:

@@ -1,0 +1,187 @@
+"""Benchmark regression gate: compare a fresh `benchmarks/run.py --json`
+record against a committed baseline.
+
+    python tools/bench_check.py --current BENCH_fused_rc.json
+    python tools/bench_check.py --current BENCH_sharded_sweep.json \
+        --baseline benchmarks/baselines/BENCH_sharded_sweep.json \
+        --max-regression 0.35
+
+Each benchmark gates on its throughput metrics (`GATED_METRICS`,
+dotted paths into the record's `benches` section, higher is better): the
+gate FAILS when a fresh metric lands more than `--max-regression`
+(default 35%) below the committed baseline — loose enough to tolerate
+shared-runner noise, tight enough to catch a real hot-path regression.
+Metrics missing from either record, or malformed records, fail loudly.
+
+Baselines live in `benchmarks/baselines/` and are committed on purpose:
+re-baseline (re-run `benchmarks/run.py --only <name> --json` and commit
+the new file) only in a PR that intentionally changes performance, and
+say so in the PR description — see ROADMAP.md conventions.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+# bench name (key under the record's "benches") -> dotted metric paths.
+# All gated metrics are throughputs: HIGHER IS BETTER.
+GATED_METRICS = {
+    "fused_rc": ("designs_per_s",),
+    "sharded_sweep": ("per_device.1.points_per_s",),
+}
+
+DEFAULT_MAX_REGRESSION = 0.35
+BASELINE_DIR = Path(__file__).resolve().parents[1] / "benchmarks/baselines"
+
+
+class BenchCheckError(Exception):
+    """A malformed record or a metric the gate cannot read."""
+
+
+def load_record(path) -> dict:
+    """Read one `benchmarks/run.py --json` record, failing loudly on
+    malformed JSON or a record without a `benches` section."""
+    path = Path(path)
+    try:
+        record = json.loads(path.read_text())
+    except FileNotFoundError:
+        raise BenchCheckError(f"benchmark record {path} does not exist")
+    except json.JSONDecodeError as e:
+        raise BenchCheckError(f"benchmark record {path} is not valid "
+                              f"JSON: {e}")
+    if not isinstance(record, dict) or "benches" not in record:
+        raise BenchCheckError(f"benchmark record {path} has no 'benches' "
+                              "section — was it written by "
+                              "benchmarks/run.py --json?")
+    return record
+
+
+def get_metric(record: dict, bench: str, path: str) -> float:
+    """Resolve a dotted metric path inside one bench's metrics dict."""
+    node = record["benches"].get(bench)
+    if node is None:
+        raise BenchCheckError(
+            f"bench {bench!r} is missing from the record (found: "
+            f"{sorted(record['benches'])})")
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            raise BenchCheckError(
+                f"metric {bench}.{path} is missing from the record")
+        node = node[part]
+    if not isinstance(node, (int, float)) or isinstance(node, bool) \
+            or not math.isfinite(node):
+        raise BenchCheckError(
+            f"metric {bench}.{path} is not a finite number: {node!r}")
+    return float(node)
+
+
+def iter_metrics(record: dict):
+    """Yield (dotted_name, value) for every scalar leaf under `benches`."""
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k, v in sorted(node.items()):
+                yield from walk(f"{prefix}.{k}" if prefix else str(k), v)
+        elif isinstance(node, list):
+            for i, v in enumerate(node):
+                yield from walk(f"{prefix}[{i}]", v)
+        elif isinstance(node, (int, float)) and not isinstance(node, bool):
+            yield prefix, node
+    yield from walk("", record.get("benches", {}))
+
+
+def validate_finite(record: dict) -> int:
+    """Check every numeric metric in the record is finite; return the
+    metric count (raises BenchCheckError on NaN/inf or zero metrics)."""
+    count = 0
+    for name, value in iter_metrics(record):
+        if not math.isfinite(value):
+            raise BenchCheckError(f"metric {name} is not finite: {value!r}")
+        count += 1
+    if count == 0:
+        raise BenchCheckError("record contains no numeric metrics")
+    return count
+
+
+def check(current: dict, baseline: dict,
+          max_regression: float = DEFAULT_MAX_REGRESSION) -> list[dict]:
+    """Compare every gated metric present in the BASELINE record against
+    the current one.  Returns one result dict per metric; a result with
+    `ok=False` is a regression beyond the tolerance."""
+    results = []
+    gated = [(bench, path) for bench, paths in GATED_METRICS.items()
+             for path in paths if bench in baseline["benches"]]
+    if not gated:
+        raise BenchCheckError(
+            "baseline record holds none of the gated benches "
+            f"({sorted(GATED_METRICS)}); nothing to compare")
+    for bench, path in gated:
+        base = get_metric(baseline, bench, path)
+        cur = get_metric(current, bench, path)
+        if base <= 0.0:
+            raise BenchCheckError(
+                f"baseline metric {bench}.{path} is not positive "
+                f"({base}); re-baseline it")
+        ratio = cur / base
+        results.append({
+            "metric": f"{bench}.{path}",
+            "baseline": base,
+            "current": cur,
+            "ratio": ratio,
+            "ok": ratio >= 1.0 - max_regression,
+        })
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail when a fresh benchmark record regresses >35% "
+                    "below its committed baseline")
+    ap.add_argument("--current", required=True,
+                    help="fresh benchmarks/run.py --json record")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline record (default: "
+                         "benchmarks/baselines/<basename of --current>)")
+    ap.add_argument("--max-regression", type=float,
+                    default=DEFAULT_MAX_REGRESSION, metavar="FRAC",
+                    help="tolerated fractional throughput drop "
+                         "(default %(default)s)")
+    args = ap.parse_args(argv)
+    baseline_path = (Path(args.baseline) if args.baseline
+                     else BASELINE_DIR / Path(args.current).name)
+    try:
+        current = load_record(args.current)
+        baseline = load_record(baseline_path)
+        validate_finite(current)
+        results = check(current, baseline, args.max_regression)
+    except BenchCheckError as e:
+        print(f"bench_check: ERROR - {e}", file=sys.stderr)
+        return 2
+
+    failed = [r for r in results if not r["ok"]]
+    for r in results:
+        verdict = "OK" if r["ok"] else "REGRESSED"
+        print(f"bench_check: {verdict} {r['metric']}: "
+              f"{r['current']:,.1f} vs baseline {r['baseline']:,.1f} "
+              f"({r['ratio']:.2f}x)")
+        if r["ratio"] >= 1.0 + args.max_regression:
+            print(f"bench_check: note - {r['metric']} improved "
+                  f"{r['ratio']:.2f}x over the baseline; consider "
+                  "re-baselining (see ROADMAP.md conventions)")
+    if failed:
+        names = ", ".join(r["metric"] for r in failed)
+        print(f"bench_check: FAIL - throughput regression beyond "
+              f"{args.max_regression:.0%} tolerance on: {names} "
+              f"(re-run locally; if the slowdown is intentional, "
+              f"re-baseline per ROADMAP.md)", file=sys.stderr)
+        return 1
+    print(f"bench_check: OK ({len(results)} metric(s) within "
+          f"{args.max_regression:.0%} of baseline)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
