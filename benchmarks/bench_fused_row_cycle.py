@@ -36,12 +36,21 @@ def main() -> dict:
     dt_phased, trc_phased = timeit(run_phased, repeats=2)
     err_dt = float(jnp.max(jnp.abs(trc_fused - trc_phased))) / DT_NS
 
+    # replica-closed timing variant: every design point carries an extra
+    # replica row through the same fused dispatch (2B kernel rows), so the
+    # throughput cost of timing closure is visible in the trajectory.
+    run_replica = lambda: jax.block_until_ready(
+        simulate_row_cycle(SI, "sel_strap", layers, replica=True).trc_ns)
+    dt_replica, _ = timeit(run_replica, repeats=3)
+
     emit("fused_row_cycle_b%d" % BATCH, dt_fused * 1e6,
          f"designs_per_s={BATCH / dt_fused:,.0f};max_trc_err_dt={err_dt:.2f}")
     emit("phased_row_cycle_b%d" % BATCH, dt_phased * 1e6,
          f"designs_per_s={BATCH / dt_phased:,.0f}")
     emit("fused_vs_phased_speedup", (dt_phased - dt_fused) * 1e6,
          f"speedup={dt_phased / dt_fused:.1f}x")
+    emit("fused_replica_row_cycle_b%d" % BATCH, dt_replica * 1e6,
+         f"designs_per_s={BATCH / dt_replica:,.0f}")
 
     # machine-readable record for the CI benchmark trajectory
     # (benchmarks/run.py --json collects these into BENCH_fused_rc.json)
@@ -53,6 +62,8 @@ def main() -> dict:
         "designs_per_s": BATCH / dt_fused,
         "speedup_vs_phased": dt_phased / dt_fused,
         "max_trc_err_dt": err_dt,
+        "replica_wall_s": dt_replica,
+        "replica_designs_per_s": BATCH / dt_replica,
     }
 
 

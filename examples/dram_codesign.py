@@ -7,7 +7,7 @@ the selected design with masked array ops — i.e., regenerates the
 substance of Table I / Fig. 9(c) without a single per-combo Python loop.
 
 Run:  PYTHONPATH=src python examples/dram_codesign.py [--smoke] [--mc [N]]
-                                                      [--sharded]
+                                                      [--sharded] [--replica]
 
 `--smoke` sweeps a reduced layer grid on CPU — the fast API-regression
 mode `tools/ci_check.sh` runs pre-merge.  `--mc [N]` additionally fans
@@ -17,6 +17,9 @@ the same space out to N Monte-Carlo samples per design point (SA-offset
 fused dispatch over every visible jax device (one slab per device; run
 under XLA_FLAGS=--xla_force_host_platform_device_count=8 to try it on a
 laptop) — results are bit-identical to the single-host sweep.
+`--replica` closes the SA-enable timing with a replica bitline per design
+point (instead of the fixed own-90% sense window) and prints a
+fixed-vs-closed comparison on the Table-1 anchor points.
 """
 
 import argparse
@@ -47,6 +50,10 @@ parser.add_argument("--mc-tail-shift", type=float, default=4.0,
                          "draws")
 parser.add_argument("--sharded", action="store_true",
                     help="shard the fused sweep over all jax devices")
+parser.add_argument("--replica", action="store_true",
+                    help="replica-bitline timing closure: the SA enable "
+                         "fires on a per-point replica column's crossing "
+                         "instead of the fixed own-90%% window")
 args = parser.parse_args()
 
 sharding = None
@@ -58,6 +65,9 @@ if args.sharded:
 
 grid = (64, 87, 137) if args.smoke else None
 space = DesignSpace.paper_grid(layer_grid=grid)
+if args.replica:
+    space = space.with_replica()
+    print("replica-closed SA-enable timing (per-point replica bitline)")
 print(f"sweeping design space ({len(space)} design points, one fused "
       "transient batch)...")
 batch = dse.sweep(space, sharding=sharding)
@@ -109,6 +119,23 @@ for tech, scheme, L in (("si", "sel_strap", 137), ("aos", "sel_strap", 87),
           f"tRC {float(batch.trc_ns[i]):5.2f} ns  "
           f"E_wr {float(batch.e_write_fj[i]):5.2f} fJ  "
           f"E_rd {float(batch.e_read_fj[i]):4.2f} fJ")
+
+# ---------------------------------------------------------------------------
+# Replica timing closure (--replica): fixed t_sense vs replica-closed on
+# the Table-1 anchors — what per-point timing closure buys (and costs).
+# ---------------------------------------------------------------------------
+if args.replica:
+    from repro.core.report import replica_timing_table
+    cmp = replica_timing_table()
+    print("\nfixed t_sense vs replica-closed (Table-1 anchors):")
+    print(f"  {'tech':4s} {'cells':>5s} {'tRC fix':>8s} {'tRC clo':>8s} "
+          f"{'dtRC':>6s} {'fire fix':>8s} {'fire clo':>8s} {'mrg@fire':>9s}")
+    for tech, r in cmp.items():
+        print(f"  {tech:4s} {r['replica_cells']:5.1f} "
+              f"{r['trc_fixed_ns']:8.2f} {r['trc_closed_ns']:8.2f} "
+              f"{r['trc_delta_ns']:6.2f} {r['t_fire_fixed_ns']:8.2f} "
+              f"{r['t_fire_closed_ns']:8.2f} "
+              f"{r['margin_fire_closed_mv']:9.1f}")
 
 i_d1b = row("d1b", "direct", 1)
 d1b_trc = float(batch.trc_ns[i_d1b])

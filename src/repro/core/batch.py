@@ -58,7 +58,7 @@ ARRAY_FIELDS = (
     "tech_idx", "scheme_idx", "layers",
     "density_gb_mm2", "height_um", "cbl_ff",
     "margin_mv", "margin_disturbed_mv",
-    "trc_ns", "t_sense_ns",
+    "trc_ns", "t_sense_ns", "t_fire_ns", "margin_fire_mv",
     "e_write_fj", "e_read_fj",
     "hcb_pitch_um", "blsa_area_um2",
     "manufacturable", "feasible", "valid",
@@ -67,7 +67,7 @@ ARRAY_FIELDS = (
 # Columns a with_mc sweep actually perturbs (per-sample SA offset enters
 # the margins; the Vth draw enters the access conductance, hence timing).
 MC_SAMPLED_FIELDS = ("margin_mv", "margin_disturbed_mv",
-                     "trc_ns", "t_sense_ns")
+                     "trc_ns", "t_sense_ns", "t_fire_ns", "margin_fire_mv")
 
 
 @jax.tree_util.register_pytree_node_class
@@ -91,6 +91,13 @@ class DesignBatch:
     margin_disturbed_mv: jnp.ndarray # (B,) float32
     trc_ns: jnp.ndarray              # (B,) float32 (NaN when transient off)
     t_sense_ns: jnp.ndarray          # (B,) float32 (NaN when transient off)
+    t_fire_ns: jnp.ndarray           # (B,) float32 SA-enable fire time
+    #                                  (replica-closed when the space
+    #                                  declared with_replica; NaN when the
+    #                                  transient is off or timing never
+    #                                  closed)
+    margin_fire_mv: jnp.ndarray      # (B,) float32 sense margin at the
+    #                                  actual SA fire (dv at fire - offset)
     e_write_fj: jnp.ndarray          # (B,) float32
     e_read_fj: jnp.ndarray           # (B,) float32
     hcb_pitch_um: jnp.ndarray        # (B,) float32
@@ -483,6 +490,8 @@ class DesignBatch:
             margin_disturbed_mv=f32("margin_disturbed_mv"),
             trc_ns=f32("trc_ns"),
             t_sense_ns=jnp.full((b,), jnp.nan, jnp.float32),
+            t_fire_ns=jnp.full((b,), jnp.nan, jnp.float32),
+            margin_fire_mv=jnp.full((b,), jnp.nan, jnp.float32),
             e_write_fj=f32("e_write_fj"), e_read_fj=f32("e_read_fj"),
             hcb_pitch_um=f32("hcb_pitch_um"),
             blsa_area_um2=f32("blsa_area_um2"),

@@ -138,6 +138,17 @@ class TechCal:
     mc_die_sigma_frac: float = 0.0        # die-offset variance fraction
     mc_mat_sigma_frac: float = 0.0        # mat-gradient variance fraction
     mc_corr_length: float = 0.25          # gradient corr length (die-span)
+    # --- replica-bitline timing closure (DesignSpace.with_replica) ---
+    # A dummy bitline with `replica_cells` ganged cells (storage cap and
+    # access conductance both scale) tracks the array; its own 90% signal
+    # crossing fires the main array's SA enable, so t_sense closes per
+    # corner and per MC sample instead of being the fixed own-crossing
+    # time.  More cells -> earlier fire -> faster but lower-margin
+    # sensing; `replica_cells=1` with `replica_store_frac=writeback_eff`
+    # reproduces the fixed-timing behaviour.  The replica cells are
+    # written to the full rail at manufacture, hence store_frac = 1.
+    replica_cells: float = 2.0            # ganged dummy cells on the replica
+    replica_store_frac: float = 1.0       # replica cell store level / VDD
 
     def with_(self, **kw) -> "TechCal":
         return replace(self, **kw)

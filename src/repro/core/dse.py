@@ -112,21 +112,38 @@ def sweep(space: DesignSpace | None = None, with_transient: bool = True,
             res = simulate_row_cycle_many(operands, backend=backend,
                                           b_chunk=b_chunk)
         trc, t_sense = res.trc_ns, res.t_sense_ns
+        t_fire = res.t_fire_ns
+        # margin actually available at the SA fire: the simulated
+        # developed signal at the enable instant minus the SA offset
+        # (per-sample on MC spaces, calibrated corner otherwise) — the
+        # closed-timing counterpart of the analytic charge-share margin.
+        sa_offset = sp.corner("mc_sa_offset_mv", None)
+        if sa_offset is None:
+            sa_offset = jnp.asarray(sp.tech("sa_offset_mv"), jnp.float32)
+        margin_fire = (res.dv_sense_v * 1e3 - sa_offset).astype(jnp.float32)
     else:
         trc = jnp.full((len(sp),), jnp.nan, jnp.float32)
         t_sense = trc
+        t_fire = trc
+        margin_fire = trc
 
     valid = jnp.asarray(sp.valid)
     feasible = (geom.manufacturable
                 & (margin >= cal.MIN_FUNCTIONAL_MARGIN_MV - 1e-9)
                 & (margin_d >= cal.MIN_DISTURBED_MARGIN_MV - 1e-9)
                 & valid)
+    if with_transient:
+        # a design whose timing never closed (NaN tRC: a phase timed out,
+        # or the WL ramp starved signal development past the ACT window)
+        # is invalid as a design, not merely slow
+        feasible = feasible & jnp.isfinite(trc)
 
     return DesignBatch(
         tech_idx=jnp.asarray(sp.tech_idx), scheme_idx=jnp.asarray(sp.scheme_idx),
         layers=sp.layers, density_gb_mm2=dens, height_um=height,
         cbl_ff=cbl.astype(jnp.float32), margin_mv=margin,
         margin_disturbed_mv=margin_d, trc_ns=trc, t_sense_ns=t_sense,
+        t_fire_ns=t_fire, margin_fire_mv=margin_fire,
         e_write_fj=e_wr, e_read_fj=e_rd,
         hcb_pitch_um=geom.hcb_pitch_um.astype(jnp.float32),
         blsa_area_um2=geom.blsa_area_um2.astype(jnp.float32),

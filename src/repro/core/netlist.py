@@ -92,6 +92,28 @@ def build_ladder_lowered(view, par=None):
     return assemble_ladder_arrays(par, view.tech("r_local_bl_kohm"))
 
 
+def replica_ladder_arrays(c: jnp.ndarray, g_branch: jnp.ndarray,
+                          replica_cells) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Derive the replica-bitline ladder from a main-array ladder.
+
+    The replica column shares the bitline's routing parasitics (all BL
+    nodes and branches are identical) but ganged `replica_cells` dummy
+    cells dump charge together: the storage node capacitance and the
+    access-transistor conductance both scale by the cell count, so the
+    replica develops signal faster than the worst-case main bitline by a
+    calibratable margin.  `replica_cells` may be a scalar (one tech) or a
+    (B,) array (the lowered DSE path).
+
+    c        : (B, N)   main-ladder node capacitances
+    g_branch : (B, N-1) main-ladder branch conductances
+    Returns (c_replica, g_replica) with the same shapes.
+    """
+    cells = jnp.asarray(replica_cells, jnp.float32)
+    c_rep = c.at[:, -1].mul(cells)          # ganged storage caps
+    g_rep = g_branch.at[:, -1].mul(cells)   # parallel access transistors
+    return c_rep, g_rep
+
+
 def effective_cbl_ff(tech: TechCal, scheme: str, layers) -> jnp.ndarray:
     """Effective C_BL (all capacitance the cell must share charge with)."""
     return bl_parasitics(tech, scheme, layers).c_bl_total_ff

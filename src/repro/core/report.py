@@ -308,6 +308,43 @@ def fig9b_margin_yield_vs_density(densities=None, scheme: str = "sel_strap",
     return rows
 
 
+def replica_timing_table() -> dict:
+    """Fixed t_sense vs replica-closed timing on the Table-1 target points.
+
+    Two sweeps of the same `DesignSpace.paper_targets()` — one nominal
+    (fixed own-90% SA-enable timing) and one `with_replica()` (the SA
+    enable fires on the replica bitline's own crossing) — read off as
+    per-tech tRC / fire-time / margin-at-fire comparisons.  The delta
+    columns quantify what timing closure buys: tRC drops because the
+    replica (ganged `replica_cells` dummy cells) develops signal faster
+    than the worst-case main bitline, at the cost of latching slightly
+    before the main array reaches 90% of its asymptotic signal.
+    """
+    space = DesignSpace.paper_targets()
+    fixed = dse.sweep(space, with_transient=True)
+    closed = dse.sweep(space.with_replica(), with_transient=True)
+
+    out = {}
+    for i, tname in enumerate(fixed.tech_col):
+        tech = TECHS[tname]
+        trc_f = float(fixed.trc_ns[i])
+        trc_c = float(closed.trc_ns[i])
+        out[tname] = dict(
+            layers=int(fixed.layers[i]),
+            replica_cells=float(tech.replica_cells),
+            trc_fixed_ns=trc_f,
+            trc_closed_ns=trc_c,
+            trc_delta_ns=trc_f - trc_c,
+            t_fire_fixed_ns=float(fixed.t_fire_ns[i]),
+            t_fire_closed_ns=float(closed.t_fire_ns[i]),
+            margin_fire_fixed_mv=float(fixed.margin_fire_mv[i]),
+            margin_fire_closed_mv=float(closed.margin_fire_mv[i]),
+            feasible_fixed=bool(fixed.feasible[i]),
+            feasible_closed=bool(closed.feasible[i]),
+        )
+    return out
+
+
 def table1_summary() -> dict:
     spec = fig9c_spec_table(with_transient=True)
     return dict(

@@ -134,6 +134,9 @@ class LoweredSpace:
     valid: np.ndarray           # (B,) bool
     corners: dict = field(default_factory=dict)
     samples: int = 1            # MC fan-out (B = samples * base points)
+    replica: bool = False       # replica-closed SA-enable timing: the
+    #                             operand lowering adds one replica row
+    #                             per design point (len(self) unchanged)
 
     def __len__(self) -> int:
         return int(self.tech_idx.shape[0])
@@ -206,6 +209,7 @@ class DesignSpace:
     entries: tuple = ()          # ((tech_name, scheme_name, layers), ...)
     corner_axes: tuple = ()      # ((axis_name, values), ...)
     mc: MCConfig | None = None   # Monte-Carlo sampling (with_mc)
+    replica: bool = False        # replica-closed SA timing (with_replica)
 
     # ---------------------------------------------------------- builders --
     @classmethod
@@ -278,7 +282,24 @@ class DesignSpace:
         if self.mc != other.mc:
             raise ValueError("cannot concatenate DesignSpaces with "
                              "different Monte-Carlo declarations")
+        if self.replica != other.replica:
+            raise ValueError("cannot concatenate DesignSpaces with "
+                             "different replica-timing declarations")
         return replace(self, entries=self.entries + other.entries)
+
+    def with_replica(self, enabled: bool = True) -> "DesignSpace":
+        """Close the SA-enable timing with a replica bitline.
+
+        Every design point gains a dummy replica column (same lowered
+        parasitics, storage scaled by the tech's `replica_cells` field)
+        whose own 90% crossing fires the main array's SA enable, so
+        t_sense self-adjusts per corner and per MC sample instead of
+        being the fixed own-crossing time.  The space's length and row
+        order are unchanged — the replica rows live only inside the
+        fused-engine operand batch — so `with_mc`, corner axes, sharding
+        and the IS tail-yield estimators compose unchanged.
+        """
+        return replace(self, replica=bool(enabled))
 
     def with_corners(self, **axes) -> "DesignSpace":
         """Attach corner axes (e.g. disturb-duty distributions for the
@@ -511,4 +532,4 @@ class DesignSpace:
             tech_names=tuple(tech_names), scheme_names=tuple(scheme_names),
             tech_idx=tech_idx, scheme_idx=scheme_idx, layers_np=layers,
             valid=np.ones(layers.shape[0], bool), corners=corners,
-            samples=samples)
+            samples=samples, replica=self.replica)

@@ -37,8 +37,10 @@ import jax.numpy as jnp
 
 from . import calibration as cal
 from .calibration import TechCal
-from .netlist import Ladder, build_bl_ladder, build_ladder_lowered
+from .netlist import (Ladder, build_bl_ladder, build_ladder_lowered,
+                      replica_ladder_arrays)
 from ..kernels import ops
+from ..kernels.row_cycle import ROLE_MAIN, ROLE_REPLICA
 from .units import tau_ns
 
 DT_NS = 0.02
@@ -62,13 +64,20 @@ class RowCycleResult:
     trc_ns: jnp.ndarray           # total row cycle
     dv_sense_v: jnp.ndarray       # developed signal at SA enable
     traces: dict                  # phase -> (T, B, N) waveforms (phased only)
+    t_fire_ns: jnp.ndarray | None = None  # SA-enable fire time (the ACT
+    # first-crossing; replica-closed when the replica path is enabled)
 
 
-def _first_crossing_ns(trace_ok: jnp.ndarray, dt: float, t_max: float) -> jnp.ndarray:
-    """Time of first True along axis 0 of (T, B); t_max if never."""
+def _first_crossing_ns(trace_ok: jnp.ndarray, dt: float) -> jnp.ndarray:
+    """Time of first True along axis 0 of (T, B); NaN if never crossed.
+
+    A crossing on the very last step returns the finite T*dt — distinct
+    from never-crossed (an older revision returned the phase window for
+    both, silently aliasing a last-step crossing with a timeout).
+    """
     any_ok = jnp.any(trace_ok, axis=0)
     idx = jnp.argmax(trace_ok, axis=0)
-    return jnp.where(any_ok, (idx + 1) * dt, t_max)
+    return jnp.where(any_ok, (idx + 1) * dt, jnp.nan)
 
 
 def wl_ramp(tech: TechCal, t_ns: jnp.ndarray, rising: bool = True) -> jnp.ndarray:
@@ -103,18 +112,24 @@ class FusedOperands(NamedTuple):
     gc_res: jnp.ndarray         # (B, N) restore clamp conductances
     gc_pre: jnp.ndarray         # (B, N) precharge clamp conductances
     v0: jnp.ndarray             # (B, N) initial node voltages
-    params: jnp.ndarray         # (B, 5) per-point kernel params (incl. ACTIVE)
+    params: jnp.ndarray         # (B, 6) per-point kernel params
+    #                             (incl. ACTIVE and ROLE columns)
     sa_tau_ns: jnp.ndarray      # (B,) BLSA regeneration time constants
     t_overhead_ns: jnp.ndarray  # (B,) command/decode overheads
+    replica: bool = False       # True -> rows are interleaved
+    #                             [replica, main] pairs (replica-closed
+    #                             timing); B is twice the design-point count
 
 
 def lower_operands(c, g, *, r_sa_drive_kohm, r_pre_kohm, store_v, tau_wl_ns,
-                   active=None):
+                   active=None, role=None):
     """Lower ladder arrays + drive parameters to fused-kernel operands.
 
     Every parameter may be a scalar (one tech) or a (B,) array (the
     vectorized DSE path over mixed techs); `active=0` rows are padding /
     masked-out design points that the kernel starts in the DONE state.
+    `role` selects the kernel's SA-enable timing mode per row (see
+    `kernels.row_cycle.ROLE_*`; default standalone fixed timing).
     """
     b, n = c.shape
     vdd, vpre = cal.VDD_ARRAY, cal.VBL_PRE
@@ -140,16 +155,24 @@ def lower_operands(c, g, *, r_sa_drive_kohm, r_pre_kohm, store_v, tau_wl_ns,
         jnp.full((b,), vdd, jnp.float32),
         jnp.full((b,), vpre, jnp.float32),
         jnp.ones((b,), jnp.float32) if active is None else vec(active),
+        jnp.zeros((b,), jnp.float32) if role is None else vec(role),
     ], axis=1)
     return c, g, gc_res, gc_pre, v0, params
 
 
-def _fused_operands(ladder: Ladder, tech: TechCal, store_v: float):
+def _fused_operands(ladder: Ladder, tech: TechCal, store_v: float,
+                    role=None):
     """Assemble the fused-engine operand arrays for one (tech, scheme)."""
     return lower_operands(
         ladder.c, ladder.g_branch,
         r_sa_drive_kohm=tech.r_sa_drive_kohm, r_pre_kohm=tech.r_pre_kohm,
-        store_v=store_v, tau_wl_ns=tau_ns(tech.r_wl_kohm, tech.c_wl_ff))
+        store_v=store_v, tau_wl_ns=tau_ns(tech.r_wl_kohm, tech.c_wl_ff),
+        role=role)
+
+
+def _interleave(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Row-interleave two equally-shaped batches: [a0, b0, a1, b1, ...]."""
+    return jnp.stack([a, b], axis=1).reshape((-1,) + a.shape[1:])
 
 
 def lower_design_operands(view, ladder_c=None, ladder_g=None,
@@ -164,20 +187,49 @@ def lower_design_operands(view, ladder_c=None, ladder_g=None,
     draw is already folded into the access-transistor conductance by
     `parasitics.bl_parasitics_lowered`, so the sampled rows flow through
     the same single chunked fused dispatch as nominal design points.
+
+    When `view.replica` is set, every design point lowers to TWO adjacent
+    kernel rows — [replica, main] — with the replica's ladder derived from
+    the SAME parasitics (so MC Vth draws perturb both), storage scaled by
+    the tech's `replica_cells`, and role columns wiring the replica's ACT
+    crossing to the main row's SA enable.  All batch boundaries downstream
+    (B_ALIGN padding, chunking, Pallas blocks, device slabs) are even, so
+    a pair is never split.
     """
     if ladder_c is None or ladder_g is None:
         ladder_c, ladder_g = build_ladder_lowered(view, par)
+    replica = bool(getattr(view, "replica", False))
+    b = ladder_c.shape[0]
+    active = view.valid.astype(jnp.float32)
+    sa_tau = jnp.broadcast_to(
+        jnp.asarray(view.tech("sa_tau_ns"), jnp.float32), (b,))
+    overhead = jnp.broadcast_to(
+        jnp.asarray(view.tech("t_overhead_ns"), jnp.float32), (b,))
+    tau_wl = tau_ns(view.tech("r_wl_kohm"), view.tech("c_wl_ff"))
     core = lower_operands(
         ladder_c, ladder_g,
         r_sa_drive_kohm=view.tech("r_sa_drive_kohm"),
         r_pre_kohm=view.tech("r_pre_kohm"),
         store_v=view.tech("writeback_eff") * cal.VDD_ARRAY,
-        tau_wl_ns=tau_ns(view.tech("r_wl_kohm"), view.tech("c_wl_ff")),
-        active=view.valid.astype(jnp.float32))
+        tau_wl_ns=tau_wl,
+        active=active,
+        role=ROLE_MAIN if replica else None)
+    if replica:
+        rep_c, rep_g = replica_ladder_arrays(
+            ladder_c, ladder_g, view.tech("replica_cells"))
+        rep = lower_operands(
+            rep_c, rep_g,
+            r_sa_drive_kohm=view.tech("r_sa_drive_kohm"),
+            r_pre_kohm=view.tech("r_pre_kohm"),
+            store_v=view.tech("replica_store_frac") * cal.VDD_ARRAY,
+            tau_wl_ns=tau_wl,
+            active=active,
+            role=ROLE_REPLICA)
+        core = tuple(_interleave(r, m) for r, m in zip(rep, core))
+        sa_tau = _interleave(sa_tau, sa_tau)
+        overhead = _interleave(overhead, overhead)
     return FusedOperands(
-        *core,
-        sa_tau_ns=jnp.asarray(view.tech("sa_tau_ns"), jnp.float32),
-        t_overhead_ns=jnp.asarray(view.tech("t_overhead_ns"), jnp.float32))
+        *core, sa_tau_ns=sa_tau, t_overhead_ns=overhead, replica=replica)
 
 
 # Fused-engine batches are padded (with inactive design points) up to a
@@ -249,28 +301,47 @@ def simulate_row_cycle(tech: TechCal, scheme: str, layers,
                        store_v: float | None = None,
                        backend: str = "auto",
                        traces: bool = False,
-                       b_chunk: int = DEFAULT_B_CHUNK) -> RowCycleResult:
+                       b_chunk: int = DEFAULT_B_CHUNK,
+                       replica: bool = False) -> RowCycleResult:
     """Simulate ACT/RESTORE/PRE on the ladder; batched over `layers`.
 
     Default path is the fused trace-free engine; pass ``traces=True`` to run
     the phased three-call engine and get the full (T, B, N) waveforms
-    (Fig. 8 plotting).
+    (Fig. 8 plotting).  ``replica=True`` closes the SA-enable timing with a
+    replica bitline (scaled by ``tech.replica_cells``) instead of the fixed
+    own-90% crossing.
     """
     if traces:
         return simulate_row_cycle_phased(tech, scheme, layers,
-                                         store_v=store_v, backend=backend)
+                                         store_v=store_v, backend=backend,
+                                         replica=replica)
     ladder = build_bl_ladder(tech, scheme, layers)
     if store_v is None:
         store_v = tech.writeback_eff * cal.VDD_ARRAY
-    operands = _fused_operands(ladder, tech, store_v)
-    evt, _ = _row_cycle_fused_chunked(operands, backend, b_chunk)
+    if replica:
+        main = _fused_operands(ladder, tech, store_v, role=ROLE_MAIN)
+        rep_c, rep_g = replica_ladder_arrays(ladder.c, ladder.g_branch,
+                                             tech.replica_cells)
+        rep = lower_operands(
+            rep_c, rep_g,
+            r_sa_drive_kohm=tech.r_sa_drive_kohm,
+            r_pre_kohm=tech.r_pre_kohm,
+            store_v=tech.replica_store_frac * cal.VDD_ARRAY,
+            tau_wl_ns=tau_ns(tech.r_wl_kohm, tech.c_wl_ff),
+            role=ROLE_REPLICA)
+        operands = tuple(_interleave(r, m) for r, m in zip(rep, main))
+        evt, _ = _row_cycle_fused_chunked(operands, backend, b_chunk)
+        evt = evt[1::2]
+    else:
+        operands = _fused_operands(ladder, tech, store_v)
+        evt, _ = _row_cycle_fused_chunked(operands, backend, b_chunk)
     t_dev, dv_sense, t_res_dur, t_pre = (evt[:, 0], evt[:, 1],
                                          evt[:, 2], evt[:, 3])
     t_sense, t_restore, trc = _regen_and_totals(
         tech.sa_tau_ns, tech.t_overhead_ns, t_dev, dv_sense, t_res_dur, t_pre)
     return RowCycleResult(
         t_sense_ns=t_sense, t_restore_ns=t_restore, t_precharge_ns=t_pre,
-        trc_ns=trc, dv_sense_v=dv_sense, traces={})
+        trc_ns=trc, dv_sense_v=dv_sense, traces={}, t_fire_ns=t_dev)
 
 
 def result_from_events(operands: FusedOperands,
@@ -280,14 +351,23 @@ def result_from_events(operands: FusedOperands,
     Shared by the sequential path below and the sharded driver
     (`launch.shard`), so the two can never diverge in how events map to
     result fields — a precondition of their bit-equivalence contract.
+
+    Replica-interleaved batches are de-interleaved here: the replica rows
+    (even indices) only exist to time the main rows' SA enable, so the
+    result covers the main rows (odd indices) and has the design-point
+    length the caller handed to `lower_design_operands`.
     """
+    sa_tau, overhead = operands.sa_tau_ns, operands.t_overhead_ns
+    if getattr(operands, "replica", False):
+        evt = evt[1::2]
+        sa_tau = sa_tau[1::2]
+        overhead = overhead[1::2]
     t_sense, t_restore, trc = _regen_and_totals(
-        operands.sa_tau_ns, operands.t_overhead_ns,
-        evt[:, 0], evt[:, 1], evt[:, 2], evt[:, 3])
+        sa_tau, overhead, evt[:, 0], evt[:, 1], evt[:, 2], evt[:, 3])
     return RowCycleResult(
         t_sense_ns=t_sense, t_restore_ns=t_restore,
         t_precharge_ns=evt[:, 3], trc_ns=trc,
-        dv_sense_v=evt[:, 1], traces={})
+        dv_sense_v=evt[:, 1], traces={}, t_fire_ns=evt[:, 0])
 
 
 def simulate_row_cycle_lowered(operands: FusedOperands,
@@ -355,11 +435,14 @@ def simulate_row_cycle_many(entries, backend: str = "auto",
 
 def simulate_row_cycle_phased(tech: TechCal, scheme: str, layers,
                               store_v: float | None = None,
-                              backend: str = "ref") -> RowCycleResult:
+                              backend: str = "ref",
+                              replica: bool = False) -> RowCycleResult:
     """Phased three-call engine: materializes full (T, B, N) waveforms.
 
     This is the Fig. 8 plotting path and the reference the fused engine is
-    validated against (event times within one dt).
+    validated against (event times within one dt) — including the
+    replica-closed timing mode, where the SA enable fires on the replica
+    bitline's own first crossing instead of the main array's.
     """
     ladder = build_bl_ladder(tech, scheme, layers)
     b, n = ladder.c.shape
@@ -379,14 +462,38 @@ def simulate_row_cycle_phased(tech: TechCal, scheme: str, layers,
     trace_act = ops.rc_multistep(c, g, zero_clamp, zero_clamp, v0,
                                  ramp_up, DT_NS, backend=backend)
 
-    cbl = ladder.c[:, :n - 1].sum(-1)
-    cs = ladder.c[:, n - 1]
-    dv_inf = (store_v - vpre) * cs / (cs + cbl)
-    crossed = trace_act[:, :, 0] - vpre >= 0.9 * dv_inf[None, :].astype(jnp.float32)
-    t_dev = _first_crossing_ns(crossed, DT_NS, T_ACT_NS)
+    if replica:
+        # replica column: same ladder with the storage end scaled by the
+        # replica cell count; its OWN 90% crossing fires the SA enable.
+        rep_c, rep_g = replica_ladder_arrays(ladder.c, ladder.g_branch,
+                                             tech.replica_cells)
+        rep_c = rep_c.astype(jnp.float32)
+        rep_g = rep_g.astype(jnp.float32)
+        rep_store = tech.replica_store_frac * vdd
+        rep_v0 = jnp.full((b, n), vpre, jnp.float32).at[:, n - 1].set(
+            rep_store)
+        trace_rep = ops.rc_multistep(rep_c, rep_g, zero_clamp, zero_clamp,
+                                     rep_v0, ramp_up, DT_NS, backend=backend)
+        rep_cbl = rep_c[:, :n - 1].sum(-1)
+        rep_cs = rep_c[:, n - 1]
+        rep_dv_inf = (rep_store - vpre) * rep_cs / (rep_cs + rep_cbl)
+        crossed = (trace_rep[:, :, 0] - vpre
+                   >= 0.9 * rep_dv_inf[None, :].astype(jnp.float32))
+    else:
+        cbl = ladder.c[:, :n - 1].sum(-1)
+        cs = ladder.c[:, n - 1]
+        dv_inf = (store_v - vpre) * cs / (cs + cbl)
+        crossed = (trace_act[:, :, 0] - vpre
+                   >= 0.9 * dv_inf[None, :].astype(jnp.float32))
+    t_dev = _first_crossing_ns(crossed, DT_NS)
 
-    # developed signal actually available at SA enable
-    idx_dev = jnp.clip((t_dev / DT_NS).astype(jnp.int32) - 1, 0, n_act - 1)
+    # developed signal actually available at SA enable; a NaN (never
+    # crossed) t_dev keeps the downstream phases well-defined by indexing
+    # the end of the ACT window — the NaN still propagates into
+    # t_sense/trc through `_regen_and_totals`.
+    t_dev_idx = jnp.where(jnp.isnan(t_dev), T_ACT_NS, t_dev)
+    idx_dev = jnp.clip((t_dev_idx / DT_NS).astype(jnp.int32) - 1, 0,
+                       n_act - 1)
     dv_sense = trace_act[idx_dev, jnp.arange(b), 0] - vpre
 
     # ---------------- RESTORE: SA drives the rail -----------------------
@@ -399,28 +506,31 @@ def simulate_row_cycle_phased(tech: TechCal, scheme: str, layers,
     trace_res = ops.rc_multistep(c, g, g_clamp_res, v_clamp_res, v_at_dev,
                                  ramp_on, DT_NS, backend=backend)
     restored = trace_res[:, :, n - 1] >= 0.95 * vdd
-    t_res_dur = _first_crossing_ns(restored, DT_NS, T_RESTORE_NS)
+    t_res_dur = _first_crossing_ns(restored, DT_NS)
 
     # ---------------- PRE: WL down, equalize ----------------------------
     n_pre = N_PRE_STEPS
     t_grid_pre = (jnp.arange(n_pre) + 1) * DT_NS
     ramp_down = wl_ramp(tech, t_grid_pre, rising=False).astype(jnp.float32)
-    idx_res = jnp.clip((t_res_dur / DT_NS).astype(jnp.int32) - 1, 0, n_res - 1)
+    t_res_idx = jnp.where(jnp.isnan(t_res_dur), T_RESTORE_NS, t_res_dur)
+    idx_res = jnp.clip((t_res_idx / DT_NS).astype(jnp.int32) - 1, 0,
+                       n_res - 1)
     v_end_res = trace_res[idx_res, jnp.arange(b), :]
     g_clamp_pre = zero_clamp.at[:, :n - 1].set(1.0 / tech.r_pre_kohm)
     v_clamp_pre = jnp.full((b, n), vpre, jnp.float32)
     trace_pre = ops.rc_multistep(c, g, g_clamp_pre, v_clamp_pre, v_end_res,
                                  ramp_down, DT_NS, backend=backend)
     equalized = jnp.max(jnp.abs(trace_pre[:, :, :n - 1] - vpre), axis=-1) <= 5e-3
-    t_pre = _first_crossing_ns(equalized, DT_NS, T_PRE_NS)
+    t_pre = _first_crossing_ns(equalized, DT_NS)
 
     t_sense, t_restore, trc = _regen_and_totals(
         tech.sa_tau_ns, tech.t_overhead_ns, t_dev, dv_sense, t_res_dur, t_pre)
+    traces = {"act": trace_act, "restore": trace_res, "pre": trace_pre}
+    if replica:
+        traces["replica"] = trace_rep
     return RowCycleResult(
         t_sense_ns=t_sense, t_restore_ns=t_restore, t_precharge_ns=t_pre,
-        trc_ns=trc, dv_sense_v=dv_sense,
-        traces={"act": trace_act, "restore": trace_res, "pre": trace_pre},
-    )
+        trc_ns=trc, dv_sense_v=dv_sense, traces=traces, t_fire_ns=t_dev)
 
 
 def nominal_trc_ns(tech: TechCal, scheme: str = "sel_strap",

@@ -55,16 +55,23 @@ def row_cycle_fused(c, g_branch, gc_res, gc_pre, v0, params, dt,
 
 @functools.partial(jax.jit, static_argnames=("pages_per_strap", "scale", "backend"))
 def strap_attend(q, k_pages, v_pages, strap_ids, pages_per_strap,
-                 scale=None, backend: str = "auto"):
-    """Selector+strap gated decode attention -> (B, Hq, D)."""
+                 scale=None, backend: str = "auto", lengths=None):
+    """Selector+strap gated decode attention -> (B, Hq, D).
+
+    `lengths` ((B,) int32, optional) is the valid token count per sequence;
+    tokens at flat positions >= lengths[b] are padding inside a partially
+    filled strap and are masked out of the softmax.  `None` attends every
+    token of every selected strap (all-valid).
+    """
     if backend == "auto":
         backend = "pallas" if _on_tpu() else "ref"
     if backend == "pallas":
         return strap_attend_pallas(q, k_pages, v_pages, strap_ids,
                                    pages_per_strap, scale,
+                                   lengths=lengths,
                                    interpret=not _on_tpu())
     return ref.strap_attend_ref(q, k_pages, v_pages, strap_ids,
-                                pages_per_strap, scale)
+                                pages_per_strap, scale, lengths=lengths)
 
 
 def tridiag_solve(dl, d, du, b):

@@ -102,11 +102,19 @@ def rc_multistep_ref(c: jnp.ndarray, g_branch: jnp.ndarray,
 # --------------------------------------------------------------------------
 
 # params / events column layouts (shared with kernels.row_cycle)
-_PAR_TAU_WL, _PAR_THR_REL, _PAR_VDD, _PAR_VPRE, _PAR_ACTIVE = range(5)
-ROW_CYCLE_N_PARAMS = 5
+(_PAR_TAU_WL, _PAR_THR_REL, _PAR_VDD, _PAR_VPRE, _PAR_ACTIVE,
+ _PAR_ROLE) = range(6)
+ROW_CYCLE_N_PARAMS = 6
 ROW_CYCLE_N_EVENTS = 4
 _RESTORE_FRAC = 0.95
 _EQUALIZE_TOL_V = 5e-3
+
+# _PAR_ROLE values: how a row's SA enable is timed during ACT.
+ROLE_STANDALONE = 0.0   # fixed timing: fires on the row's own 0.9 crossing
+ROLE_REPLICA = 1.0      # replica bitline: fires the SA enable of row+1,
+                        # then jumps straight to DONE (no RESTORE/PRE)
+ROLE_MAIN = 2.0         # main array row: SA enable fired by the replica
+                        # at row-1 (rows are interleaved [replica, main])
 
 
 def _thomas_small(dl, d, du, rhs):
@@ -144,12 +152,18 @@ def row_cycle_fused_ref(c: jnp.ndarray, g_branch: jnp.ndarray,
                done when max |v[:N-1] - vpre| <= 5 mV or after n_pre steps.
 
     Event times are first-crossing times (idx+1)*dt measured from the phase
-    start, or the full phase window on timeout — identical semantics to the
-    phased `core.transient` reference, which this oracle (and the Pallas
-    kernel validated against it) reproduces to within one dt.
+    start, or NaN on timeout (never crossed inside the phase window) —
+    identical semantics to the phased `core.transient` reference, which
+    this oracle (and the Pallas kernel validated against it) reproduces to
+    within one dt.
 
     c, gc_res, gc_pre, v0 : (B, N);  g_branch : (B, N-1);  params : (B, 5)
-    with columns [tau_wl_ns, thr_rel_v, vdd, vpre, active].
+    with columns [tau_wl_ns, thr_rel_v, vdd, vpre, active], or (B, 6) with
+    a trailing role column (see ROLE_*).  Replica-closed timing interleaves
+    rows as [replica, main] pairs: the replica's own ACT crossing fires the
+    SA enable of the main row directly after it, and the replica then skips
+    RESTORE/PRE (phase 0 -> 3).  A main row's recorded dv_sense is its own
+    developed signal at the moment the replica fires.
 
     Returns (events, v_end): (B, 4) [t_dev, dv_sense, t_res_dur, t_pre]
     and (B, N) final node voltages.
@@ -161,6 +175,12 @@ def row_cycle_fused_ref(c: jnp.ndarray, g_branch: jnp.ndarray,
     vdd = params[:, _PAR_VDD]
     vpre = params[:, _PAR_VPRE]
     active = params[:, _PAR_ACTIVE] > 0.5
+    if params.shape[1] > _PAR_ROLE:        # static: role column present
+        role = params[:, _PAR_ROLE]
+    else:
+        role = jnp.zeros_like(tau)
+    is_rep = jnp.abs(role - ROLE_REPLICA) < 0.5
+    is_main = role > ROLE_MAIN - 0.5
     t_total = n_act + n_res + n_pre
     caps = jnp.asarray([n_act, n_res, n_pre], jnp.int32)
 
@@ -196,8 +216,13 @@ def row_cycle_fused_ref(c: jnp.ndarray, g_branch: jnp.ndarray,
         v_sol = _thomas_small(dl, d, du, cdt * v + gcv)
         v_next = jnp.where(done[:, None], v, v_sol)
 
+        # SA-enable coupling: a main row's ACT crossing is the crossing of
+        # the replica at row-1 (replica/main pairs run ACT in lockstep, so
+        # the stateless shift is exact — the main never advances first).
+        cross_own = v_next[:, 0] - vpre >= thr_rel
+        cross_prev = jnp.concatenate([cross_own[-1:], cross_own[:-1]])
         cross = jnp.stack([
-            v_next[:, 0] - vpre >= thr_rel,
+            jnp.where(is_main, cross_prev, cross_own),
             v_next[:, n - 1] >= _RESTORE_FRAC * vdd,
             jnp.max(jnp.abs(v_next[:, : n - 1] - vpre[:, None]),
                     axis=-1) <= _EQUALIZE_TOL_V,
@@ -209,7 +234,7 @@ def row_cycle_fused_ref(c: jnp.ndarray, g_branch: jnp.ndarray,
         advance = jnp.logical_and(~done,
                                   jnp.logical_or(crossed, tin1 >= cap))
         t_evt = jnp.where(crossed, tin1.astype(jnp.float32) * dt,
-                          cap.astype(jnp.float32) * dt)
+                          jnp.float32(jnp.nan))
 
         rec = lambda ph: jnp.logical_and(advance, phase == ph)
         evt = evt.at[:, 0].set(jnp.where(rec(0), t_evt, evt[:, 0]))
@@ -218,7 +243,9 @@ def row_cycle_fused_ref(c: jnp.ndarray, g_branch: jnp.ndarray,
         evt = evt.at[:, 2].set(jnp.where(rec(1), t_evt, evt[:, 2]))
         evt = evt.at[:, 3].set(jnp.where(rec(2), t_evt, evt[:, 3]))
 
-        phase = jnp.where(advance, phase + 1, phase)
+        # replica rows are ACT-only: they jump straight to DONE
+        phase_inc = jnp.where(is_rep, 3, 1)
+        phase = jnp.where(advance, phase + phase_inc, phase)
         tin = jnp.where(advance, 0, jnp.where(done, tin, tin1))
         return t + 1, phase, tin, v_next, evt
 
@@ -235,7 +262,8 @@ def row_cycle_fused_ref(c: jnp.ndarray, g_branch: jnp.ndarray,
 
 def strap_attend_ref(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
                      strap_ids: jnp.ndarray, pages_per_strap: int,
-                     scale: float | None = None) -> jnp.ndarray:
+                     scale: float | None = None,
+                     lengths: jnp.ndarray | None = None) -> jnp.ndarray:
     """Oracle for the StrapCache gated decode attention.
 
     q         : (B, Hq, D)                 one query token per sequence
@@ -244,6 +272,11 @@ def strap_attend_ref(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
     strap_ids : (B, S)                     selected strap indices (int32);
                 strap s covers pages [s*G, (s+1)*G).  Entries may be -1
                 (= strap masked out).
+    lengths   : (B,) int32, optional       tokens actually written per
+                sequence; positions >= lengths[b] are padding and masked
+                out even when their strap is selected (a partially-filled
+                strap holds zero-initialised pages whose logit would
+                otherwise be 0, not -inf).
     Returns   : (B, Hq, D) attention output over exactly the selected straps.
     """
     b, p, page, hkv, dh = k_pages.shape
@@ -260,6 +293,9 @@ def strap_attend_ref(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
     valid = (strap_ids >= 0)[..., None]
     page_mask = jnp.any(sel & valid, axis=1)             # (B, P)
     token_mask = jnp.repeat(page_mask, page, axis=1)     # (B, P*page)
+    if lengths is not None:
+        pos = jnp.arange(p * page)[None, :]              # (1, P*page)
+        token_mask = token_mask & (pos < lengths[:, None])
 
     k = k_pages.reshape(b, p * page, hkv, dh)
     v = v_pages.reshape(b, p * page, hkv, dh)

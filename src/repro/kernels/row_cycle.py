@@ -41,13 +41,17 @@ from .ref import _thomas_small
 
 DEFAULT_B_BLK = 128
 
-# params (B, 5) column layout
+# params (B, 6) column layout
 PAR_TAU_WL = 0      # WL driver RC time constant [ns]
 PAR_THR_REL = 1     # ACT threshold: v[0] - vpre >= thr_rel  [V]
 PAR_VDD = 2         # restore rail (SA drives sense node here) [V]
 PAR_VPRE = 3        # precharge / equalize target [V]
 PAR_ACTIVE = 4      # 1.0 = live design point, 0.0 = padding (starts DONE)
-N_PARAMS = 5
+PAR_ROLE = 5        # 0 = standalone fixed timing, 1 = replica bitline
+                    # (fires row+1's SA enable, then DONE), 2 = main row
+                    # closed by the replica at row-1.  A legacy (B, 5)
+                    # params array is accepted: role defaults to 0.
+N_PARAMS = 6
 
 # events (B, 4) column layout
 EVT_T_DEV = 0       # ACT: time to 90% signal development [ns]
@@ -58,6 +62,11 @@ N_EVENTS = 4
 
 RESTORE_FRAC = 0.95     # cell restored when v_cell >= RESTORE_FRAC * VDD
 EQUALIZE_TOL_V = 5e-3   # BL equalized when max |v - vpre| <= 5 mV
+
+# PAR_ROLE values (float-coded in the params array)
+ROLE_STANDALONE = 0.0
+ROLE_REPLICA = 1.0
+ROLE_MAIN = 2.0
 
 
 def _row_cycle_kernel(c_ref, g_ref, gcr_ref, gcp_ref, v0_ref, par_ref,
@@ -73,6 +82,12 @@ def _row_cycle_kernel(c_ref, g_ref, gcr_ref, gcp_ref, v0_ref, par_ref,
     vdd = par_ref[..., PAR_VDD]
     vpre = par_ref[..., PAR_VPRE]
     active = par_ref[..., PAR_ACTIVE] > 0.5
+    if par_ref.shape[-1] > PAR_ROLE:   # static: role column present
+        role = par_ref[..., PAR_ROLE]
+    else:
+        role = jnp.zeros_like(thr_rel)
+    is_rep = jnp.abs(role - 1.0) < 0.5
+    is_main = role > 1.5
     b, n = c.shape
     cdt = c / dt * 1e-3            # fF/ns = uS -> mS (match G in 1/kOhm)
     t_total = n_act + n_res + n_pre
@@ -119,9 +134,13 @@ def _row_cycle_kernel(c_ref, g_ref, gcr_ref, gcp_ref, v0_ref, par_ref,
         v_sol = _thomas_small(dl, diag, du, rhs)
         v_next = jnp.where(done[:, None], v, v_sol)
 
-        # threshold crossings on the fresh state
+        # threshold crossings on the fresh state.  A main row's ACT
+        # crossing is the crossing of the replica at row-1 ([replica,
+        # main] pairs run ACT in lockstep, so the shift is exact).
+        cross_own = v_next[:, 0] - vpre >= thr_rel
+        cross_prev = jnp.concatenate([cross_own[-1:], cross_own[:-1]])
         cross = jnp.stack([
-            v_next[:, 0] - vpre >= thr_rel,
+            jnp.where(is_main, cross_prev, cross_own),
             v_next[:, n - 1] >= RESTORE_FRAC * vdd,
             jnp.max(jnp.abs(v_next[:, : n - 1] - vpre[:, None]),
                     axis=-1) <= EQUALIZE_TOL_V,
@@ -133,9 +152,9 @@ def _row_cycle_kernel(c_ref, g_ref, gcr_ref, gcp_ref, v0_ref, par_ref,
         cap = jnp.take_along_axis(n_phase, phase_c[None, :], axis=0)[0]
         advance = jnp.logical_and(~done,
                                   jnp.logical_or(crossed, tin1 >= cap))
-        # first-crossing time: (idx+1)*dt, or the full window if timed out
+        # first-crossing time: (idx+1)*dt, or NaN if the phase timed out
         t_evt = jnp.where(crossed, tin1.astype(jnp.float32) * dt,
-                          cap.astype(jnp.float32) * dt)
+                          jnp.float32(jnp.nan))
 
         rec = lambda ph: jnp.logical_and(advance, phase == ph)
         evt = evt.at[:, EVT_T_DEV].set(
@@ -147,7 +166,9 @@ def _row_cycle_kernel(c_ref, g_ref, gcr_ref, gcp_ref, v0_ref, par_ref,
         evt = evt.at[:, EVT_T_PRE].set(
             jnp.where(rec(2), t_evt, evt[:, EVT_T_PRE]))
 
-        phase = jnp.where(advance, phase + 1, phase)
+        # replica rows are ACT-only: they jump straight to DONE
+        phase_inc = jnp.where(is_rep, 3, 1)
+        phase = jnp.where(advance, phase + phase_inc, phase)
         tin = jnp.where(advance, 0, jnp.where(done, tin, tin1))
         return t + 1, phase, tin, v_next, evt
 
@@ -188,7 +209,7 @@ def row_cycle_fused_pallas(c: jnp.ndarray, g_branch: jnp.ndarray,
         kernel,
         grid=(n_blocks,),
         in_specs=[bspec(n), bspec(n - 1), bspec(n), bspec(n), bspec(n),
-                  bspec(N_PARAMS)],
+                  bspec(params.shape[1])],  # (B, 5) legacy or (B, 6)
         out_specs=[bspec(N_EVENTS), bspec(n)],
         out_shape=[
             jax.ShapeDtypeStruct((n_blocks * b_blk, N_EVENTS), jnp.float32),

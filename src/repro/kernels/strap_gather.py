@@ -42,12 +42,13 @@ def _compiler_params(**kw):
 
 
 def _strap_kernel(strap_ids_ref,          # scalar prefetch: (B, S)
+                  lengths_ref,            # scalar prefetch: (B,)
                   q_ref,                  # (1, grp, D)
                   k_ref,                  # (1, G*page, 1, D)
                   v_ref,                  # (1, G*page, 1, D)
                   o_ref,                  # (1, grp, D)
                   m_ref, l_ref, acc_ref,  # VMEM scratch
-                  *, scale: float, num_straps: int):
+                  *, scale: float, num_straps: int, blk: int):
     b = pl.program_id(0)
     s = pl.program_id(2)
 
@@ -65,6 +66,12 @@ def _strap_kernel(strap_ids_ref,          # scalar prefetch: (B, S)
     v = v_ref[0, :, 0, :].astype(jnp.float32)           # (T_blk, D)
 
     logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    # token-level mask: a partially filled strap has zero-padding tokens at
+    # flat positions >= lengths[b]; their logit would be a perfectly valid
+    # q.0 = 0 and they'd steal softmax mass, so mask them like the dense path
+    tok_pos = strap_id * blk + jax.lax.broadcasted_iota(jnp.int32, (1, blk), 1)
+    tok_ok = tok_pos < lengths_ref[b]                   # (1, blk)
+    logits = jnp.where(tok_ok, logits, NEG_INF)
 
     m_prev = m_ref[...]                                 # (grp, 1)
     m_cur = jnp.max(logits, axis=-1, keepdims=True)
@@ -72,7 +79,9 @@ def _strap_kernel(strap_ids_ref,          # scalar prefetch: (B, S)
     m_cur = jnp.where(valid, m_cur, jnp.full_like(m_cur, NEG_INF))
     m_new = jnp.maximum(m_prev, m_cur)
     p = jnp.exp(logits - m_new)
-    p = jnp.where(valid, p, jnp.zeros_like(p))          # mask whole strap
+    # zero p both for masked straps and masked tokens (the latter guards the
+    # degenerate exp(NEG_INF - NEG_INF) = 1 case when nothing valid yet)
+    p = jnp.where(valid & tok_ok, p, jnp.zeros_like(p))
     alpha = jnp.exp(m_prev - m_new)
     l_new = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
     acc_new = acc_ref[...] * alpha + jnp.dot(p, v, preferred_element_type=jnp.float32)
@@ -92,6 +101,7 @@ def _strap_kernel(strap_ids_ref,          # scalar prefetch: (B, S)
 def strap_attend_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
                         v_pages: jnp.ndarray, strap_ids: jnp.ndarray,
                         pages_per_strap: int, scale: float | None = None,
+                        lengths: jnp.ndarray | None = None,
                         *, interpret: bool = True) -> jnp.ndarray:
     """Pallas-backed equivalent of `ref.strap_attend_ref` -> (B, Hq, D).
 
@@ -99,6 +109,7 @@ def strap_attend_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
     k_pages   : (B, P, page, Hkv, D)
     v_pages   : (B, P, page, Hkv, D)
     strap_ids : (B, S) int32, -1 = masked
+    lengths   : (B,) int32 valid-token counts (None = every token valid)
     """
     b, p, page, hkv, d = k_pages.shape
     _, hq, _ = q.shape
@@ -116,25 +127,29 @@ def strap_attend_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
     blk = g * page
 
     raw_ids = strap_ids.astype(jnp.int32)
+    if lengths is None:
+        lengths = jnp.full((b,), p * page, jnp.int32)   # all tokens valid
+    lengths = lengths.astype(jnp.int32)
 
     # NOTE: with PrefetchScalarGridSpec the index maps receive
     # (*grid_indices, *scalar_prefetch_refs).  Masked ids (-1) are clamped
     # to 0 *only for addressing*; the kernel sees the raw id for validity.
-    def q_map(bi, hi, si, ids):
-        del ids, si
+    def q_map(bi, hi, si, ids, lens):
+        del ids, lens, si
         return (bi, hi, 0, 0)
 
-    def kv_map(bi, hi, si, ids):
+    def kv_map(bi, hi, si, ids, lens):
+        del lens
         return (bi, jnp.maximum(ids[bi, si], 0), hi, 0)
 
-    def o_map(bi, hi, si, ids):
-        del ids, si
+    def o_map(bi, hi, si, ids, lens):
+        del ids, lens, si
         return (bi, hi, 0, 0)
 
     from jax.experimental.pallas import tpu as pltpu
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(b, hkv, s),
         in_specs=[
             pl.BlockSpec((1, 1, grp, d), q_map),
@@ -149,7 +164,8 @@ def strap_attend_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
         ],
     )
 
-    kernel = functools.partial(_strap_kernel, scale=scale, num_straps=s)
+    kernel = functools.partial(_strap_kernel, scale=scale, num_straps=s,
+                               blk=blk)
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -157,5 +173,5 @@ def strap_attend_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
         interpret=interpret,
         compiler_params=_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-    )(raw_ids, q_g, k_flat, v_flat)
+    )(raw_ids, lengths, q_g, k_flat, v_flat)
     return out.reshape(b, hq, d)

@@ -248,6 +248,9 @@ def _equivalence_smoke(mc_samples: int = 16,
     check(DesignSpace.paper_grid(), "paper grid")
     check(DesignSpace.paper_grid().with_mc(samples=mc_samples, key=0),
           f"paper grid x {mc_samples} MC samples")
+    check(DesignSpace.paper_targets().with_replica()
+          .with_mc(samples=mc_samples, key=0),
+          f"replica-closed targets x {mc_samples} MC samples")
     print("shard smoke: OK")
 
 

@@ -132,10 +132,16 @@ class StrapKVCache:
         return jnp.where(keep, ids, -1).astype(jnp.int32)
 
     def attend(self, q: jnp.ndarray, backend: str = "auto") -> jnp.ndarray:
-        """Gated decode attention: (B, Hq, hd) -> (B, Hq, hd)."""
+        """Gated decode attention: (B, Hq, hd) -> (B, Hq, hd).
+
+        Passes `length` so zero-initialised padding slots inside a
+        partially filled strap are masked out of the softmax (their raw
+        logit is 0, which would otherwise compete with real tokens).
+        """
         ids = self.select_straps(q)
         return ops.strap_attend(q, self.k_pages, self.v_pages, ids,
-                                self.cfg.pages_per_strap, backend=backend)
+                                self.cfg.pages_per_strap, backend=backend,
+                                lengths=self.length)
 
     def hbm_bytes_per_token(self) -> tuple[int, int]:
         """(gated, dense) bytes read per decode step — the C_BL analogue."""

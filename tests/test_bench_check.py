@@ -21,12 +21,18 @@ sys.path.insert(0, str(REPO / "tools"))
 import bench_check  # noqa: E402  (tools/ is not a package)
 
 
-def record(fused_designs_per_s=50_000.0, sharded_points_per_s=9_000.0):
+def record(fused_designs_per_s=50_000.0, sharded_points_per_s=9_000.0,
+           replica_designs_per_s=None):
+    # replica throughput tracks the plain fused metric (~half: 2 rows
+    # per design) unless a test pins it explicitly
+    if replica_designs_per_s is None:
+        replica_designs_per_s = fused_designs_per_s / 2
     return {
         "meta": {"backend": "cpu"},
         "benches": {
             "fused_rc": {"batch": 1024,
-                         "designs_per_s": fused_designs_per_s},
+                         "designs_per_s": fused_designs_per_s,
+                         "replica_designs_per_s": replica_designs_per_s},
             "sharded_sweep": {
                 "per_device": {"1": {"points_per_s": sharded_points_per_s}},
                 "best_scaling_vs_1dev": 1.7,
@@ -73,6 +79,13 @@ class TestGate:
         err = capsys.readouterr().err
         assert "fused_rc.designs_per_s" in err
         assert "regression" in err
+
+    def test_regression_on_replica_metric(self, tmp_path, capsys):
+        # the replica variant is gated independently of the plain metric
+        assert run_main(tmp_path, record(replica_designs_per_s=10_000.0),
+                        record()) == 1
+        assert ("fused_rc.replica_designs_per_s"
+                in capsys.readouterr().err)
 
     def test_regression_on_sharded_metric(self, tmp_path, capsys):
         assert run_main(tmp_path, record(sharded_points_per_s=2_000.0),

@@ -94,10 +94,13 @@ class TestRowCycleFusedKernel:
         evt_pl, vend_pl = row_cycle_fused_pallas(
             *args, self.DT, n_act, n_res, n_pre, interpret=True, **kw)
         # event times must agree to within one integration step (usually
-        # exactly; float32 noise at a threshold can flip one step)
+        # exactly; float32 noise at a threshold can flip one step); rows
+        # that never cross a phase report NaN in BOTH engines
         t_ref = np.asarray(evt_ref)[:, [0, 2, 3]]
         t_pl = np.asarray(evt_pl)[:, [0, 2, 3]]
-        assert np.abs(t_ref - t_pl).max() <= self.DT + 1e-9
+        np.testing.assert_array_equal(np.isnan(t_ref), np.isnan(t_pl))
+        diff = np.where(np.isnan(t_ref), 0.0, np.abs(t_ref - t_pl))
+        assert diff.max() <= self.DT + 1e-9
         np.testing.assert_allclose(np.asarray(evt_ref)[:, 1],
                                    np.asarray(evt_pl)[:, 1],
                                    rtol=1e-3, atol=1e-5)
@@ -135,17 +138,40 @@ class TestRowCycleFusedKernel:
         np.testing.assert_allclose(np.asarray(v_end)[3:],
                                    np.asarray(args[4])[3:])
 
-    def test_timeout_records_full_window(self, rng):
-        """An uncrossable ACT threshold must report the full phase window."""
+    def test_timeout_is_nan_not_phase_window(self, rng):
+        """An uncrossable ACT threshold must report NaN — an older revision
+        clamped the event to the phase window, silently aliasing timeouts
+        with legitimate last-step crossings."""
         args = list(random_row_cycle_inputs(rng, 4, 6))
         params = np.array(args[5])
         params[:, 1] = 1e9                    # thr_rel no signal can reach
         args[5] = jnp.asarray(params)
         n_act = 15
-        evt, _ = row_cycle_fused_pallas(*args, self.DT, n_act, 10, 10,
+        for run in (row_cycle_fused_pallas, None):
+            if run is None:
+                evt, _ = ref.row_cycle_fused_ref(*args, self.DT, n_act,
+                                                 10, 10)
+            else:
+                evt, _ = run(*args, self.DT, n_act, 10, 10, interpret=True)
+            assert np.isnan(np.asarray(evt)[:, 0]).all()
+
+    def test_last_step_crossing_stays_finite(self, rng):
+        """The flip side of NaN timeouts: a crossing that lands exactly on
+        the final ACT step must report the finite n_act*dt, not NaN."""
+        args = list(random_row_cycle_inputs(rng, 4, 6))
+        params = np.array(args[5])
+        params[:, 1] = 1e-6                   # crosses on the first step
+        args[5] = jnp.asarray(params)
+        # find each row's natural crossing step, then shrink the window to
+        # end exactly there for row 0
+        evt_pl, _ = row_cycle_fused_pallas(*args, self.DT, 30, 10, 10,
+                                           interpret=True)
+        n_cross = int(round(float(np.asarray(evt_pl)[0, 0]) / self.DT))
+        evt, _ = row_cycle_fused_pallas(*args, self.DT, n_cross, 10, 10,
                                         interpret=True)
-        np.testing.assert_allclose(np.asarray(evt)[:, 0], n_act * self.DT,
-                                   rtol=1e-6)
+        t0 = float(np.asarray(evt)[0, 0])
+        assert np.isfinite(t0)
+        np.testing.assert_allclose(t0, n_cross * self.DT, rtol=1e-6)
 
 
 class TestTridiag:

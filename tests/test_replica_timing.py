@@ -1,0 +1,268 @@
+"""Replica-bitline timing closure + crossing-detection NaN semantics.
+
+1. Fused replica path vs the phased replica oracle: SA-enable fire time
+   within one dt on every Table-1 combo (and the full paper grid @slow).
+2. `_first_crossing_ns` sentinel regression: a crossing on the very last
+   step is a finite T*dt; never-crossed is NaN — in BOTH engines.
+3. Starved designs (WL ramp slower than the ACT window) surface as NaN
+   tRC / infeasible / pareto-inert, never as a silently clamped number.
+4. with_mc x replica stays ONE fused dispatch and is bit-deterministic
+   under a fixed key.
+5. Disabling replica keeps the nominal path bit-identical (the role
+   column is inert, and legacy (B, 5) params still lower).
+"""
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import dse, transient
+from repro.core.calibration import (SI, AOS, D1B, get_tech, register_tech,
+                                    unregister_tech)
+from repro.core.space import DesignSpace
+from repro.core.transient import (DT_NS, T_ACT_NS, _first_crossing_ns,
+                                  simulate_row_cycle,
+                                  simulate_row_cycle_phased)
+from repro.kernels import ops
+from repro.kernels.ref import ROW_CYCLE_N_PARAMS
+
+POINTS = (("si", "sel_strap", 137), ("aos", "sel_strap", 87),
+          ("d1b", "direct", 1))
+
+
+# ---------------------------------------------------------------------------
+# Fused replica path vs the phased replica oracle
+# ---------------------------------------------------------------------------
+
+class TestReplicaFusedVsPhased:
+    REGEN_SLACK_NS = 0.05
+
+    def assert_match(self, tech, scheme, layers):
+        f = simulate_row_cycle(tech, scheme, layers, replica=True)
+        p = simulate_row_cycle_phased(tech, scheme, layers, replica=True)
+        # the replica-closed SA-enable fire time: within ONE step
+        d_fire = np.abs(np.asarray(f.t_fire_ns)
+                        - np.asarray(p.t_fire_ns)).max()
+        assert d_fire <= DT_NS + 1e-9, (tech.name, scheme, d_fire)
+        d_trc = np.abs(np.asarray(f.trc_ns) - np.asarray(p.trc_ns)).max()
+        assert d_trc <= 3 * DT_NS + self.REGEN_SLACK_NS, (
+            tech.name, scheme, d_trc)
+
+    def test_table1_combos(self):
+        self.assert_match(SI, "sel_strap", jnp.asarray([87, 137]))
+        self.assert_match(AOS, "sel_strap", jnp.asarray([87, 137]))
+        self.assert_match(D1B, "direct", jnp.asarray([1]))
+
+    @pytest.mark.slow
+    def test_paper_grid(self):
+        grid = jnp.asarray([32, 48, 64, 87, 100, 120, 137, 160, 200])
+        for tech in (SI, AOS):
+            for scheme in ("direct", "strap", "core_mux", "sel_strap"):
+                self.assert_match(tech, scheme, grid)
+
+    def test_replica_fires_earlier_than_fixed(self):
+        """The ganged replica develops signal faster than the worst-case
+        main bitline, so closure fires the SA strictly earlier (and tRC
+        shrinks) — at a margin cost, since the main array latches before
+        its own 90% point."""
+        layers = jnp.asarray([137.0])
+        fixed = simulate_row_cycle(SI, "sel_strap", layers)
+        closed = simulate_row_cycle(SI, "sel_strap", layers, replica=True)
+        assert float(closed.t_fire_ns[0]) < float(fixed.t_fire_ns[0])
+        assert float(closed.trc_ns[0]) < float(fixed.trc_ns[0])
+        assert float(closed.dv_sense_v[0]) < float(fixed.dv_sense_v[0])
+
+    def test_unit_replica_approximates_fixed_timing(self):
+        """replica_cells=1 + replica_store_frac=writeback_eff makes the
+        replica an exact copy of the main column: closure reproduces the
+        fixed own-90% timing (the null calibration case)."""
+        tech = dataclasses.replace(SI, name="si_nullrep", replica_cells=1.0,
+                                   replica_store_frac=SI.writeback_eff)
+        layers = jnp.asarray([137.0])
+        fixed = simulate_row_cycle(tech, "sel_strap", layers)
+        closed = simulate_row_cycle(tech, "sel_strap", layers, replica=True)
+        assert abs(float(closed.t_fire_ns[0])
+                   - float(fixed.t_fire_ns[0])) <= DT_NS + 1e-9
+
+    def test_phased_traces_include_replica(self):
+        res = simulate_row_cycle(SI, "sel_strap", jnp.asarray([137.0]),
+                                 traces=True, replica=True)
+        assert "replica" in res.traces
+        assert res.traces["replica"].shape == res.traces["act"].shape
+
+
+# ---------------------------------------------------------------------------
+# Crossing-detection sentinel: NaN for never-crossed, finite for last-step
+# ---------------------------------------------------------------------------
+
+class TestFirstCrossingSentinel:
+    def test_last_step_crossing_is_finite(self):
+        t = 5
+        trace = np.zeros((t, 2), bool)
+        trace[-1, 0] = True                      # crosses on the VERY last step
+        out = np.asarray(_first_crossing_ns(jnp.asarray(trace), DT_NS))
+        assert out[0] == pytest.approx(t * DT_NS)
+        assert np.isnan(out[1])                  # never crossed -> NaN
+
+    def test_fused_kernel_never_crossed_is_nan(self):
+        """A threshold no bitline can reach: the fused engine must report
+        NaN event times (both backends), not the phase window."""
+        ladder_c = jnp.full((2, 6), 10.0, jnp.float32)
+        ladder_g = jnp.full((2, 5), 0.5, jnp.float32)
+        operands = list(transient.lower_operands(
+            ladder_c, ladder_g, r_sa_drive_kohm=8.0, r_pre_kohm=8.0,
+            store_v=1.0, tau_wl_ns=2.0))
+        params = operands[5].at[:, 1].set(10.0)   # unreachable dv threshold
+        operands[5] = params
+        for backend in ("ref", "pallas"):
+            evt, _ = ops.row_cycle_fused(
+                *operands, DT_NS, transient.N_ACT_STEPS,
+                transient.N_RESTORE_STEPS, transient.N_PRE_STEPS,
+                backend=backend)
+            assert np.isnan(np.asarray(evt[:, 0])).all(), backend
+
+
+# ---------------------------------------------------------------------------
+# Starved designs: NaN tRC, infeasible, pareto-inert — never clamped
+# ---------------------------------------------------------------------------
+
+class TestStarvedDesignSurfacesInvalid:
+    STARVED = "si_starved"
+
+    @pytest.fixture()
+    def starved_tech(self):
+        # WL driver RC far beyond the ACT window: tau_wl = r*c*1e-3 ns
+        # = 40000*50*1e-3 = 2000 ns >> 16 ns, so the access transistor
+        # never opens and no crossing can occur inside the phase.
+        tech = dataclasses.replace(SI, name=self.STARVED,
+                                   r_wl_kohm=40_000.0)
+        register_tech(tech, overwrite=True)
+        yield tech
+        unregister_tech(self.STARVED)
+
+    def test_starved_point_is_nan_infeasible_and_inert(self, starved_tech):
+        space = (DesignSpace.points([(self.STARVED, "sel_strap", 137)])
+                 + DesignSpace.points(POINTS))
+        batch = dse.sweep(space, with_transient=True)
+        trc = np.asarray(batch.trc_ns)
+        assert np.isnan(trc[0])                   # starved -> NaN, not clamp
+        assert np.isfinite(trc[1:]).all()         # healthy rows unaffected
+        assert not bool(np.asarray(batch.feasible)[0])
+        # NaN tRC must never dominate a finite design out of the front
+        mask = np.asarray(dse.pareto_mask(batch, require_feasible=False))
+        assert mask[1:3].any()                    # si/aos survive
+
+    def test_starved_fused_matches_phased_nan(self, starved_tech):
+        f = simulate_row_cycle(starved_tech, "sel_strap",
+                               jnp.asarray([137.0]))
+        p = simulate_row_cycle_phased(starved_tech, "sel_strap",
+                                      jnp.asarray([137.0]))
+        assert np.isnan(float(f.t_fire_ns[0]))
+        assert np.isnan(float(p.t_fire_ns[0]))
+
+
+# ---------------------------------------------------------------------------
+# DSE integration: columns, composition with MC, single dispatch
+# ---------------------------------------------------------------------------
+
+class TestReplicaDSE:
+    def test_closed_timing_columns(self):
+        space = DesignSpace.points(POINTS)
+        fixed = dse.sweep(space)
+        closed = dse.sweep(space.with_replica())
+        assert len(closed) == len(fixed)          # replica rows de-interleaved
+        t_fix = np.asarray(fixed.t_fire_ns)
+        t_clo = np.asarray(closed.t_fire_ns)
+        assert np.isfinite(t_fix).all() and np.isfinite(t_clo).all()
+        assert (t_clo < t_fix).all()
+        # margin at fire: finite, and below the full own-90% margin since
+        # the replica fires before the main array's own crossing
+        m_fire = np.asarray(closed.margin_fire_mv)
+        assert np.isfinite(m_fire).all()
+        assert (m_fire < np.asarray(fixed.margin_fire_mv) + 1e-6).all()
+
+    def test_replica_off_is_bit_identical(self):
+        space = DesignSpace.points(POINTS)
+        a = dse.sweep(space)
+        b = dse.sweep(dataclasses.replace(space, replica=False))
+        for f in ("trc_ns", "t_sense_ns", "margin_mv", "t_fire_ns"):
+            np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                          np.asarray(getattr(b, f)), f)
+
+    def test_legacy_5col_params_still_lower(self):
+        """Manually-built (B, 5) params (no role column) keep working in
+        both backends and match the (B, 6) role-0 lowering bit-for-bit."""
+        ladder = transient.build_bl_ladder(SI, "sel_strap",
+                                           jnp.asarray([100.0, 137.0]))
+        operands = list(transient._fused_operands(
+            ladder, SI, SI.writeback_eff * transient.cal.VDD_ARRAY))
+        assert operands[5].shape[1] == ROW_CYCLE_N_PARAMS
+        legacy = list(operands)
+        legacy[5] = legacy[5][:, :5]
+        for backend in ("ref", "pallas"):
+            evt6, v6 = ops.row_cycle_fused(
+                *operands, DT_NS, transient.N_ACT_STEPS,
+                transient.N_RESTORE_STEPS, transient.N_PRE_STEPS,
+                backend=backend)
+            evt5, v5 = ops.row_cycle_fused(
+                *legacy, DT_NS, transient.N_ACT_STEPS,
+                transient.N_RESTORE_STEPS, transient.N_PRE_STEPS,
+                backend=backend)
+            np.testing.assert_array_equal(np.asarray(evt6),
+                                          np.asarray(evt5), backend)
+            np.testing.assert_array_equal(np.asarray(v6),
+                                          np.asarray(v5), backend)
+
+    def test_with_mc_replica_single_dispatch(self, monkeypatch):
+        calls = []
+        real = ops.row_cycle_fused
+
+        def counting(*a, **kw):
+            calls.append(a[0].shape)
+            return real(*a, **kw)
+
+        monkeypatch.setattr(transient.ops, "row_cycle_fused", counting)
+        space = DesignSpace.points(POINTS).with_replica().with_mc(
+            samples=16, key=0)
+        batch = dse.sweep(space)
+        assert len(calls) == 1                   # ONE fused dispatch
+        # 3 points x 16 samples x 2 rows/pair, padded to B_ALIGN
+        n_rows = 3 * 16 * 2
+        expect = -(-n_rows // transient.B_ALIGN) * transient.B_ALIGN
+        assert calls[0][0] == expect
+        assert np.isfinite(np.asarray(batch.trc_ns)).all()
+
+    def test_with_mc_replica_bit_deterministic(self):
+        space = DesignSpace.points(POINTS).with_replica().with_mc(
+            samples=16, key=7)
+        a = dse.sweep(space)
+        b = dse.sweep(space)
+        for f in ("trc_ns", "t_fire_ns", "margin_fire_mv", "margin_mv"):
+            np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                          np.asarray(getattr(b, f)), f)
+
+    def test_replica_mc_shares_vth_draw_with_main(self):
+        """The MC Vth perturbation must hit replica and main rows alike
+        (it folds into the shared parasitics), so replica-closed MC tRC
+        varies across samples."""
+        space = DesignSpace.points([("si", "sel_strap", 137)]) \
+            .with_replica().with_mc(samples=32, key=1)
+        batch = dse.sweep(space)
+        t_fire = np.asarray(batch.t_fire_ns)
+        assert np.unique(t_fire).size > 1        # samples actually differ
+
+    def test_space_concat_replica_mismatch_rejected(self):
+        a = DesignSpace.points(POINTS).with_replica()
+        b = DesignSpace.points(POINTS)
+        with pytest.raises(ValueError, match="replica"):
+            _ = a + b
+
+    def test_report_replica_table(self):
+        from repro.core.report import replica_timing_table
+        table = replica_timing_table()
+        for tech in ("si", "aos", "d1b"):
+            row = table[tech]
+            assert row["trc_delta_ns"] > 0.0
+            assert row["t_fire_closed_ns"] < row["t_fire_fixed_ns"]

@@ -151,6 +151,8 @@ MESH8_SCRIPT = textwrap.dedent("""
         "ok_nominal": identical(DesignSpace.paper_grid(), 64),
         "ok_mc": identical(DesignSpace.paper_grid().with_mc(samples=8,
                                                             key=0), 64),
+        "ok_replica": identical(DesignSpace.paper_targets().with_replica()
+                                .with_mc(samples=8, key=0), 64),
         "ok_spec_guard": partial_spec_rejected,
     }
     print(json.dumps(out))
@@ -178,6 +180,11 @@ class TestShardedSweepMesh8:
 
     def test_with_mc_bit_identical(self, mesh8_result):
         assert mesh8_result["ok_mc"]
+
+    def test_replica_mc_bit_identical(self, mesh8_result):
+        """Replica-interleaved pairs must never be split across device
+        slabs: the replica-closed MC sweep is bit-identical sharded."""
+        assert mesh8_result["ok_replica"]
 
     def test_partial_axis_spec_rejected(self, mesh8_result):
         assert mesh8_result["ok_spec_guard"]

@@ -86,6 +86,60 @@ class TestStrapKVCache:
         valid = ids[ids >= 0]
         assert valid.max() <= 1                  # straps 0 and 1 only
 
+    @pytest.mark.parametrize("backend", ["ref", "pallas"])
+    def test_partial_fill_attend_matches_dense(self, backend):
+        """24 tokens fill strap 1 only halfway: the 8 zero-padding slots
+        inside it must be masked out of the softmax (their raw logit is
+        q.0 = 0, which otherwise competes with real tokens)."""
+        sc, k, v = self.make(s=64)
+        sc = sc.bulk_load(k[:, :24], v[:, :24])
+        q = jnp.asarray(self.rng.normal(size=(2, 4, 16)).astype(np.float32))
+        out = sc.attend(q, backend=backend)
+        want = dense_attention(np.array(q), np.array(k[:, :24]),
+                               np.array(v[:, :24]))
+        np.testing.assert_allclose(np.array(out), want, rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("backend", ["ref", "pallas"])
+    def test_padding_garbage_never_attended(self, backend):
+        """Poison every slot past `length` with huge values: if token-level
+        masking is wrong ANYWHERE (selected-strap padding included), the
+        poison dominates the softmax and the output explodes."""
+        import dataclasses
+        sc, k, v = self.make(s=64)
+        sc = sc.bulk_load(k[:, :24], v[:, :24])
+        kp = np.array(sc.k_pages)
+        vp = np.array(sc.v_pages)
+        kp.reshape(2, 64, 2, 16)[:, 24:] = 100.0
+        vp.reshape(2, 64, 2, 16)[:, 24:] = 100.0
+        sc = dataclasses.replace(sc, k_pages=jnp.asarray(kp),
+                                 v_pages=jnp.asarray(vp))
+        q = jnp.asarray(self.rng.normal(size=(2, 4, 16)).astype(np.float32))
+        out = sc.attend(q, backend=backend)
+        want = dense_attention(np.array(q), np.array(k[:, :24]),
+                               np.array(v[:, :24]))
+        np.testing.assert_allclose(np.array(out), want, rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("backend", ["ref", "pallas"])
+    def test_gated_partial_fill_matches_masked_dense(self, backend):
+        """Token masking composes with strap-level top-k gating: the gated
+        output equals a dense oracle over exactly the selected straps'
+        REAL tokens."""
+        sc, k, v = self.make(s=256, page=8, g=2, top=4)
+        n = 72                                    # 4.5 straps filled
+        sc = sc.bulk_load(k[:, :n], v[:, :n])
+        q = jnp.asarray(self.rng.normal(size=(2, 4, 16)).astype(np.float32))
+        ids = np.array(sc.select_straps(q))
+        out = np.array(sc.attend(q, backend=backend))
+        st = sc.cfg.strap_tokens
+        for b in range(2):
+            tok = sorted(t for s in ids[b] if s >= 0
+                         for t in range(s * st, (s + 1) * st) if t < n)
+            want = dense_attention(np.array(q[b:b + 1]),
+                                   np.array(k[b:b + 1, tok]),
+                                   np.array(v[b:b + 1, tok]))
+            np.testing.assert_allclose(out[b:b + 1], want,
+                                       rtol=2e-5, atol=2e-5)
+
 
 @pytest.mark.slow
 class TestServeEngineStrap:

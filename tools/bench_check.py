@@ -30,7 +30,7 @@ from pathlib import Path
 # bench name (key under the record's "benches") -> dotted metric paths.
 # All gated metrics are throughputs: HIGHER IS BETTER.
 GATED_METRICS = {
-    "fused_rc": ("designs_per_s",),
+    "fused_rc": ("designs_per_s", "replica_designs_per_s"),
     "sharded_sweep": ("per_device.1.points_per_s",),
 }
 

@@ -56,7 +56,7 @@ fi
 echo "== examples smoke (DesignSpace -> sweep -> DesignBatch -> MC yield) =="
 JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}" \
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-    python examples/dram_codesign.py --smoke --mc 16 > /dev/null
+    python examples/dram_codesign.py --smoke --mc 16 --replica > /dev/null
 
 echo "== sharded sweep smoke (8 forced host devices, bit-equivalence) =="
 # our forced count goes LAST so it wins over any pre-existing XLA_FLAGS;
