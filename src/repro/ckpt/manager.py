@@ -15,6 +15,7 @@ manifest format already records enough to extend to that).
 
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import shutil
@@ -97,10 +98,8 @@ class CheckpointManager:
         out = []
         for p in self.dir.glob("step_*"):
             if p.name.startswith("step_") and ".tmp" not in p.name:
-                try:
+                with contextlib.suppress(ValueError):
                     out.append(int(p.name.split("_")[1]))
-                except ValueError:
-                    pass
         return sorted(out)
 
     def latest_step(self) -> int | None:

@@ -122,10 +122,7 @@ class ArchConfig:
         d, f, v = self.d_model, self.d_ff, self.padded_vocab
         hd = self.head_dim_
         attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
-        if self.act == "swiglu":
-            mlp = 3 * d * f
-        else:
-            mlp = 2 * d * f
+        mlp = 3 * d * f if self.act == "swiglu" else 2 * d * f
         emb = v * d * (1 if self.tie_embeddings else 2)
         if self.family == "ssm":
             per_layer = self._ssm_layer_params()

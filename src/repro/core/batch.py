@@ -137,12 +137,12 @@ class DesignBatch:
     @property
     def tech_col(self) -> list:
         """Per-row tech names (host-side convenience)."""
-        return [self.tech_names[i] for i in np.asarray(self.tech_idx)]
+        return [self.tech_names[i] for i in np.asarray(self.tech_idx)]  # repro-lint: disable=RL002  (host-side report view, not sweep-path compute)
 
     @property
     def scheme_col(self) -> list:
         """Per-row scheme names (host-side convenience)."""
-        return [self.scheme_names[i] for i in np.asarray(self.scheme_idx)]
+        return [self.scheme_names[i] for i in np.asarray(self.scheme_idx)]  # repro-lint: disable=RL002  (host-side report view, not sweep-path compute)
 
     def select(self, where) -> "DesignBatch":
         """Rows selected by a boolean mask or index array (host-side).
@@ -457,7 +457,7 @@ class DesignBatch:
         contract of `full_sweep`.  Skips invalid (padding) rows.  New code
         should consume the array fields directly."""
         valid = np.asarray(self.valid)
-        return [self.point(i) for i in np.flatnonzero(valid)]
+        return [self.point(i) for i in np.flatnonzero(valid)]  # repro-lint: disable=RL002  (deprecated per-point export shim; sweep path is array-native)
 
     @classmethod
     def from_points(cls, points) -> "DesignBatch":

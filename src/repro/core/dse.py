@@ -29,6 +29,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from . import calibration as cal
+from . import contracts
 from .batch import DesignBatch, DesignPoint
 from .calibration import TECHS, TechCal
 from .density import (bit_density_gb_mm2, bit_density_lowered,
@@ -138,7 +139,7 @@ def sweep(space: DesignSpace | None = None, with_transient: bool = True,
         # is invalid as a design, not merely slow
         feasible = feasible & jnp.isfinite(trc)
 
-    return DesignBatch(
+    batch = DesignBatch(
         tech_idx=jnp.asarray(sp.tech_idx), scheme_idx=jnp.asarray(sp.scheme_idx),
         layers=sp.layers, density_gb_mm2=dens, height_um=height,
         cbl_ff=cbl.astype(jnp.float32), margin_mv=margin,
@@ -151,6 +152,8 @@ def sweep(space: DesignSpace | None = None, with_transient: bool = True,
         corners={k: jnp.asarray(v) for k, v in sp.corners.items()},
         tech_names=sp.tech_names, scheme_names=sp.scheme_names,
         n_samples=sp.samples, base_len=sp.base_len)
+    contracts.check_batch(batch, where="dse.sweep")
+    return batch
 
 
 # ---------------------------------------------------------------------------
@@ -285,7 +288,7 @@ def evaluate_grid(tech: TechCal, scheme: str, layers: np.ndarray,
         trc = np.full(len(layers), np.nan)
 
     pts = []
-    for i, layer in enumerate(np.asarray(layers)):
+    for i, layer in enumerate(np.asarray(layers)):  # repro-lint: disable=RL002  (scalar equivalence oracle for tests, not the fused sweep path)
         feas = (manufacturable
                 and margin[i] >= cal.MIN_FUNCTIONAL_MARGIN_MV - 1e-9
                 and margin_d[i] >= cal.MIN_DISTURBED_MARGIN_MV - 1e-9)

@@ -27,6 +27,8 @@ MC variants fan the same spaces out with `with_mc` and read the
 
 from __future__ import annotations
 
+import itertools
+
 import numpy as np
 
 from . import calibration as cal
@@ -99,17 +101,14 @@ def fig9b_margin_vs_density(densities=None, scheme: str = "sel_strap") -> list[d
     batch = dse.sweep(space, with_transient=False)
 
     rows = []
-    i = 0
-    for tech in techs:
-        for d in densities:
-            md = float(batch.margin_disturbed_mv[i])
-            rows.append(dict(
-                tech=tech.name, density_gb_mm2=float(d),
-                layers=int(batch.layers[i]),
-                margin_mv=float(batch.margin_mv[i]),
-                margin_with_fbe_rh_mv=md,
-                functional=bool(md >= cal.MIN_DISTURBED_MARGIN_MV)))
-            i += 1
+    for i, (tech, d) in enumerate(itertools.product(techs, densities)):
+        md = float(batch.margin_disturbed_mv[i])
+        rows.append(dict(
+            tech=tech.name, density_gb_mm2=float(d),
+            layers=int(batch.layers[i]),
+            margin_mv=float(batch.margin_mv[i]),
+            margin_with_fbe_rh_mv=md,
+            functional=bool(md >= cal.MIN_DISTURBED_MARGIN_MV)))
     return rows
 
 
@@ -295,16 +294,13 @@ def fig9b_margin_yield_vs_density(densities=None, scheme: str = "sel_strap",
     med = np.asarray(batch.quantile(0.5, "margin_disturbed_mv"))
 
     rows = []
-    i = 0
-    for tech in techs:
-        for d in densities:
-            rows.append(dict(
-                tech=tech.name, density_gb_mm2=float(d),
-                layers=int(batch.layers[i]),
-                margin_with_fbe_rh_mv_median=float(med[i]),
-                margin_with_fbe_rh_mv_p05=float(p05[i]),
-                yield_disturbed=float(y_dist[i])))
-            i += 1
+    for i, (tech, d) in enumerate(itertools.product(techs, densities)):
+        rows.append(dict(
+            tech=tech.name, density_gb_mm2=float(d),
+            layers=int(batch.layers[i]),
+            margin_with_fbe_rh_mv_median=float(med[i]),
+            margin_with_fbe_rh_mv_p05=float(p05[i]),
+            yield_disturbed=float(y_dist[i])))
     return rows
 
 

@@ -43,6 +43,7 @@ the single-host sweep.
 
 from __future__ import annotations
 
+import contextlib
 import itertools
 from dataclasses import dataclass, field, replace
 
@@ -77,11 +78,9 @@ def _key_entropy(key) -> tuple:
     entropy tuple for `np.random.default_rng` (SeedSequence entropy)."""
     if isinstance(key, (int, np.integer)):
         return (int(key),)
-    try:
+    with contextlib.suppress(Exception):
         import jax
         key = jax.random.key_data(key)
-    except Exception:
-        pass
     return tuple(int(x) for x in np.asarray(key, np.uint32).reshape(-1))
 
 
@@ -229,11 +228,10 @@ class DesignSpace:
         for tname in tech_names:
             tech = cal.get_tech(tname)
             allowed = tech.allowed_schemes
-            if schemes is None:
-                tech_schemes = allowed or tuple(routing.SCHEMES)
-            else:
-                tech_schemes = tuple(s for s in schemes
-                                     if allowed is None or s in allowed)
+            tech_schemes = (
+                (allowed or tuple(routing.SCHEMES)) if schemes is None
+                else tuple(s for s in schemes
+                           if allowed is None or s in allowed))
             if tech.layer_grid is not None:
                 grid = _as_layer_tuple(tech.layer_grid)
             elif layers is not None:

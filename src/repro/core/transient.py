@@ -36,6 +36,7 @@ from typing import NamedTuple
 import jax.numpy as jnp
 
 from . import calibration as cal
+from . import contracts
 from .calibration import TechCal
 from .netlist import (Ladder, build_bl_ladder, build_ladder_lowered,
                       replica_ladder_arrays)
@@ -228,8 +229,10 @@ def lower_design_operands(view, ladder_c=None, ladder_g=None,
         core = tuple(_interleave(r, m) for r, m in zip(rep, core))
         sa_tau = _interleave(sa_tau, sa_tau)
         overhead = _interleave(overhead, overhead)
-    return FusedOperands(
+    operands = FusedOperands(
         *core, sa_tau_ns=sa_tau, t_overhead_ns=overhead, replica=replica)
+    contracts.check_operands(operands, where="transient.lower_design_operands")
+    return operands
 
 
 # Fused-engine batches are padded (with inactive design points) up to a

@@ -175,10 +175,8 @@ def row_cycle_fused_ref(c: jnp.ndarray, g_branch: jnp.ndarray,
     vdd = params[:, _PAR_VDD]
     vpre = params[:, _PAR_VPRE]
     active = params[:, _PAR_ACTIVE] > 0.5
-    if params.shape[1] > _PAR_ROLE:        # static: role column present
-        role = params[:, _PAR_ROLE]
-    else:
-        role = jnp.zeros_like(tau)
+    role = (params[:, _PAR_ROLE] if params.shape[1] > _PAR_ROLE
+            else jnp.zeros_like(tau))      # static: role column presence
     is_rep = jnp.abs(role - ROLE_REPLICA) < 0.5
     is_main = role > ROLE_MAIN - 0.5
     t_total = n_act + n_res + n_pre

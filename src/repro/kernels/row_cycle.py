@@ -82,10 +82,8 @@ def _row_cycle_kernel(c_ref, g_ref, gcr_ref, gcp_ref, v0_ref, par_ref,
     vdd = par_ref[..., PAR_VDD]
     vpre = par_ref[..., PAR_VPRE]
     active = par_ref[..., PAR_ACTIVE] > 0.5
-    if par_ref.shape[-1] > PAR_ROLE:   # static: role column present
-        role = par_ref[..., PAR_ROLE]
-    else:
-        role = jnp.zeros_like(thr_rel)
+    role = (par_ref[..., PAR_ROLE] if par_ref.shape[-1] > PAR_ROLE
+            else jnp.zeros_like(thr_rel))   # static: role column presence
     is_rep = jnp.abs(role - 1.0) < 0.5
     is_main = role > 1.5
     b, n = c.shape

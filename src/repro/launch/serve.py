@@ -51,7 +51,7 @@ def main():
     total = args.batch * args.new_tokens
     print(f"decoded {total} tokens in {dt:.2f}s "
           f"({total / dt:.1f} tok/s, backend={args.cache})")
-    if args.cache == "strap":
+    if args.cache == "strap":  # repro-lint: disable=RL001  (KV-cache backend id, not a routing-scheme name)
         s = eng.stats
         print(f"HBM traffic vs dense: {100 * s.traffic_reduction:.1f}% "
               f"(gated {s.hbm_bytes_gated / 1e6:.1f} MB / "

@@ -46,7 +46,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..core import transient
+from ..core import contracts, transient
 from ..core.transient import (B_ALIGN, DT_NS, FusedOperands, N_ACT_STEPS,
                               N_PRE_STEPS, N_RESTORE_STEPS, RowCycleResult)
 from ..kernels import ops
@@ -121,10 +121,8 @@ def _dispatch_target(b: int, n_dev: int, b_chunk: int) -> int:
     multiple; slabs larger than `b_chunk` hold a whole number of chunks
     so in-device chunking never exceeds the memory bound."""
     slab = -(-b // n_dev)
-    if slab > b_chunk:
-        slab = -(-slab // b_chunk) * b_chunk
-    else:
-        slab = -(-slab // B_ALIGN) * B_ALIGN
+    quantum = b_chunk if slab > b_chunk else B_ALIGN
+    slab = -(-slab // quantum) * quantum
     return max(slab, B_ALIGN) * n_dev
 
 
@@ -193,6 +191,7 @@ def simulate_row_cycle_sharded(operands: FusedOperands, sharding=None,
     looping chunks on one device.  `dse.sweep(space, sharding=...)` calls
     this; the sequential path stays bit-identical and is the oracle.
     """
+    contracts.check_operands(operands, where="shard.simulate_row_cycle_sharded")
     evt, _ = row_cycle_fused_sharded(operands, sharding, backend, b_chunk)
     return transient.result_from_events(operands, evt)
 

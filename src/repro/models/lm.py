@@ -151,11 +151,9 @@ def _maybe_remat(cfg, fn):
 def _embed_inputs(cfg, params, batch, dtype):
     """Token (+ modality-stub) embedding -> (B, S, D), positions (1, S)."""
     tok_emb = embed_tokens(params, batch["tokens"], dtype)
-    if cfg.n_vision_tokens and "vision_embeds" in batch:
-        h = jnp.concatenate([batch["vision_embeds"].astype(dtype), tok_emb],
-                            axis=1)
-    else:
-        h = tok_emb
+    h = (jnp.concatenate([batch["vision_embeds"].astype(dtype), tok_emb],
+                         axis=1)
+         if cfg.n_vision_tokens and "vision_embeds" in batch else tok_emb)
     positions = jnp.arange(h.shape[1])[None, :]
     return h, positions
 

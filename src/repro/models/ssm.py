@@ -153,12 +153,8 @@ def ssd_chunked(cfg, x, bmat, cmat, dt, a_neg, h0=None):
 
     # ---- chunk states ----------------------------------------------------
     decay_to_end = jnp.exp(total[:, :, None, :] - cs)             # (B,nc,Q,nh)
-    if ng == 1:
-        s_chunk = jnp.einsum("bcsgn,bcsh,bcshp->bchpn", bh,
-                             decay_to_end, dtx)
-    else:
-        s_chunk = jnp.einsum("bcshn,bcsh,bcshp->bchpn", bh,
-                             decay_to_end, dtx)
+    spec = "bcsgn,bcsh,bcshp->bchpn" if ng == 1 else "bcshn,bcsh,bcshp->bchpn"
+    s_chunk = jnp.einsum(spec, bh, decay_to_end, dtx)
 
     # ---- inter-chunk scan -------------------------------------------------
     if h0 is None:
@@ -176,10 +172,8 @@ def ssd_chunked(cfg, x, bmat, cmat, dt, a_neg, h0=None):
 
     # ---- inter-chunk contribution -----------------------------------------
     state_decay = jnp.exp(cs)                  # decay from chunk start to qi
-    if ng == 1:
-        y_off = jnp.einsum("bcqgn,bchpn,bcqh->bcqhp", ch, h_prevs, state_decay)
-    else:
-        y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", ch, h_prevs, state_decay)
+    spec = "bcqgn,bchpn,bcqh->bcqhp" if ng == 1 else "bcqhn,bchpn,bcqh->bcqhp"
+    y_off = jnp.einsum(spec, ch, h_prevs, state_decay)
 
     y = constrain(cfg, y_diag + y_off, ("dp", seq_ax, None, head_ax, None))
     y = y.reshape(b, l, nh, hp)

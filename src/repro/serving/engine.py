@@ -43,8 +43,8 @@ class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, max_tokens: int = 2048,
                  cache_backend: str = "dense",
                  strap_cfg: StrapCacheConfig | None = None):
-        assert cache_backend in ("dense", "strap")
-        if cache_backend == "strap":
+        assert cache_backend in ("dense", "strap")  # repro-lint: disable=RL001  (KV-cache backend id, not a routing-scheme name)
+        if cache_backend == "strap":  # repro-lint: disable=RL001  (KV-cache backend id, not a routing-scheme name)
             assert cfg.family in ("dense", "vlm"), \
                 "strap cache applies to full-attention decoder families"
         self.cfg = cfg
@@ -93,7 +93,7 @@ class ServeEngine:
         new_caches = []
         layers = p["layers"]
         for li in range(cfg.n_layers):
-            lp = jax.tree.map(lambda x: x[li], layers)
+            lp = jax.tree.map(lambda x, li=li: x[li], layers)
             a_in = apply_norm(cfg, h, lp, "ln1")
             q, k_new, v_new = _project_qkv(cfg, lp, a_in)
             if cfg.rope_theta > 0:
@@ -121,11 +121,10 @@ class ServeEngine:
         """Decode one token for the whole batch; returns (B, 1) ids."""
         if token is None:
             logits = self._last_logits
-            if greedy or key is None:
-                token = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-            else:
-                token = jax.random.categorical(key, logits)[:, None].astype(
-                    jnp.int32)
+            token = (
+                jnp.argmax(logits, axis=-1) if greedy or key is None
+                else jax.random.categorical(key, logits)
+            )[:, None].astype(jnp.int32)
         if self.backend == "dense":
             logits, self._cache = M.decode_step(
                 self.cfg, self.params, self._cache, token, self._pos)

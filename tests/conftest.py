@@ -5,6 +5,10 @@ from pathlib import Path
 # tests must see exactly ONE device (the dry-run alone forces 512)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# runtime contracts (src/repro/core/contracts.py) default ON under pytest;
+# export REPRO_CHECKS=0 to time the unchecked path
+os.environ.setdefault("REPRO_CHECKS", "1")
+
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np

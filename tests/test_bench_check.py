@@ -133,6 +133,36 @@ class TestGate:
             ["--current", str(tmp_path / "nope.json"),
              "--baseline", str(base)]) == 2
 
+    def test_missing_baseline_exits_2_and_names_path(self, tmp_path,
+                                                     capsys):
+        # a gate without a committed baseline must fail as a clean exit-2
+        # diagnostic naming the expected file, never a traceback
+        cur = write(tmp_path, "current.json", record())
+        missing = tmp_path / "no_such_baseline.json"
+        assert bench_check.main(["--current", str(cur),
+                                 "--baseline", str(missing)]) == 2
+        err = capsys.readouterr().err
+        assert str(missing) in err
+        assert "benchmarks/baselines/" in err   # re-baseline hint
+
+    def test_default_baseline_lookup_missing_exits_2(self, tmp_path,
+                                                     capsys):
+        # no --baseline: the default benchmarks/baselines/<name> lookup
+        # for an unknown bench name must take the same clean path
+        cur = write(tmp_path, "BENCH_does_not_exist.json", record())
+        assert bench_check.main(["--current", str(cur)]) == 2
+        assert "BENCH_does_not_exist.json" in capsys.readouterr().err
+
+    def test_unreadable_baseline_exits_2(self, tmp_path, capsys):
+        # a directory where the baseline file should be (OSError, not
+        # FileNotFoundError) must also exit 2
+        cur = write(tmp_path, "current.json", record())
+        bad = tmp_path / "baseline_dir.json"
+        bad.mkdir()
+        assert bench_check.main(["--current", str(cur),
+                                 "--baseline", str(bad)]) == 2
+        assert "bench_check: ERROR" in capsys.readouterr().err
+
     def test_baseline_with_no_gated_bench_fails(self, tmp_path):
         empty = {"meta": {}, "benches": {"roofline": {"flops": 1.0}}}
         assert run_main(tmp_path, record(), empty) == 2

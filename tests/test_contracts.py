@@ -1,0 +1,163 @@
+"""Runtime contracts (`src/repro/core/contracts.py`).
+
+The contract layer validates operand/batch invariants at the
+`lower_design_operands`, `dse.sweep`, and sharded-dispatch seams — but
+ONLY when `REPRO_CHECKS=1` (conftest turns it on for the whole suite).
+These tests pin both directions: violations raise `ContractError` with
+the seam name when enabled, and the checks are provably free when
+disabled (a sentinel that explodes on any attribute access survives
+`check_*`, and flipping checks on/off never retraces the fused kernel).
+"""
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import contracts, dse
+from repro.core.contracts import ContractError
+from repro.core.space import DesignSpace
+from repro.core.transient import FusedOperands
+from repro.kernels import ops
+from repro.kernels.row_cycle import ROLE_MAIN, ROLE_REPLICA
+
+
+def make_operands(b=4, n=8, replica=False):
+    f32 = jnp.float32
+    role = jnp.tile(jnp.asarray([ROLE_REPLICA, ROLE_MAIN], f32), b // 2) \
+        if replica else jnp.ones((b,), f32)
+    params = jnp.stack([jnp.full((b,), v, f32)
+                        for v in (2.0, 0.1, 1.1, 0.55, 1.0)] + [role], axis=1)
+    return FusedOperands(
+        c=jnp.ones((b, n), f32), g=jnp.ones((b, n - 1), f32),
+        gc_res=jnp.ones((b, n), f32), gc_pre=jnp.ones((b, n), f32),
+        v0=jnp.full((b, n), 0.55, f32), params=params,
+        sa_tau_ns=jnp.full((b,), 0.2, f32),
+        t_overhead_ns=jnp.full((b,), 1.0, f32), replica=replica)
+
+
+class Bomb:
+    """Raises on ANY attribute/item access — proves untouched-when-off."""
+
+    def __getattr__(self, name):
+        raise AssertionError(f"disabled contract touched .{name}")
+
+    def __getitem__(self, key):
+        raise AssertionError(f"disabled contract touched [{key!r}]")
+
+
+class TestCheckOperands:
+    def test_valid_operands_pass(self):
+        contracts.check_operands(make_operands())
+        contracts.check_operands(make_operands(replica=True))
+
+    def test_shape_mismatch_fails(self):
+        bad = make_operands()._replace(g=jnp.ones((4, 8), jnp.float32))
+        with pytest.raises(ContractError, match="g must have shape"):
+            contracts.check_operands(bad)
+
+    def test_wrong_dtype_fails(self):
+        # host numpy float64 sneaking past the lowering (jnp silently
+        # truncates to f32 without x64, so build the bad operand in np)
+        bad = make_operands()._replace(c=np.ones((4, 8), np.float64))
+        with pytest.raises(ContractError, match="float32"):
+            contracts.check_operands(bad)
+
+    def test_replica_odd_batch_fails(self):
+        ops_ = make_operands(b=4, replica=True)
+        bad = FusedOperands(*[x[:3] for x in ops_[:6]],
+                            sa_tau_ns=ops_.sa_tau_ns[:3],
+                            t_overhead_ns=ops_.t_overhead_ns[:3],
+                            replica=True)
+        with pytest.raises(ContractError, match="even"):
+            contracts.check_operands(bad)
+
+    def test_replica_role_interleave_fails(self):
+        ops_ = make_operands(b=4, replica=True)
+        # swap one pair: [main, replica] instead of [replica, main]
+        params = np.asarray(ops_.params).copy()
+        params[0, 5], params[1, 5] = ROLE_MAIN, ROLE_REPLICA
+        bad = ops_._replace(params=jnp.asarray(params))
+        with pytest.raises(ContractError, match="interleaved"):
+            contracts.check_operands(bad)
+
+    def test_nonfinite_operand_fails(self):
+        ops_ = make_operands()
+        c = np.asarray(ops_.c).copy()
+        c[1, 2] = np.nan
+        with pytest.raises(ContractError, match="non-finite"):
+            contracts.check_operands(ops_._replace(c=jnp.asarray(c)),
+                                     where="unit")
+
+    def test_error_names_the_seam(self):
+        bad = make_operands()._replace(g=jnp.ones((4, 8), jnp.float32))
+        with pytest.raises(ContractError, match=r"\[my-seam\]"):
+            contracts.check_operands(bad, where="my-seam")
+
+
+class TestCheckBatch:
+    @pytest.fixture(scope="class")
+    def batch(self):
+        return dse.sweep(DesignSpace.paper_targets(), with_transient=False)
+
+    def test_sweep_output_passes(self, batch):
+        contracts.check_batch(batch)
+
+    def test_reserved_mc_corner_key_fails(self, batch):
+        b = len(np.asarray(batch.valid))
+        bad = dataclasses.replace(
+            batch, corners=dict(batch.corners,
+                                mc_rogue=jnp.zeros((b,), jnp.float32)))
+        with pytest.raises(ContractError, match="mc_rogue"):
+            contracts.check_batch(bad)
+
+    def test_corner_channel_shape_fails(self, batch):
+        bad = dataclasses.replace(
+            batch, corners=dict(batch.corners,
+                                vdd_mult=jnp.zeros((2, 2), jnp.float32)))
+        with pytest.raises(ContractError, match="vdd_mult"):
+            contracts.check_batch(bad)
+
+    def test_feasible_outside_valid_fails(self, batch):
+        feasible = np.ones_like(np.asarray(batch.feasible))
+        valid = np.zeros_like(np.asarray(batch.valid))
+        bad = dataclasses.replace(batch, feasible=jnp.asarray(feasible),
+                                  valid=jnp.asarray(valid))
+        with pytest.raises(ContractError, match="subset"):
+            contracts.check_batch(bad)
+
+    def test_mc_layout_mismatch_fails(self, batch):
+        bad = dataclasses.replace(batch, n_samples=7, base_len=3)
+        with pytest.raises(ContractError, match="sample-major"):
+            contracts.check_batch(bad)
+
+
+class TestDisabledMode:
+    """REPRO_CHECKS=0 must make every contract a free no-op."""
+
+    def test_sentinel_untouched_when_disabled(self, monkeypatch):
+        monkeypatch.setenv("REPRO_CHECKS", "0")
+        assert contracts.check_operands(Bomb()) is None
+        assert contracts.check_batch(Bomb()) is None
+
+    def test_sentinel_explodes_when_enabled(self, monkeypatch):
+        monkeypatch.setenv("REPRO_CHECKS", "1")
+        with pytest.raises(AssertionError, match="touched"):
+            contracts.check_operands(Bomb())
+
+    def test_no_retrace_when_toggled(self, monkeypatch):
+        """Enabling checks must not change what gets traced: the fused
+        kernel's jit cache stays put when REPRO_CHECKS flips, because
+        every check runs host-side outside the traced computation."""
+        space = DesignSpace.paper_targets()
+        dse.sweep(space, with_transient=True)          # warm the cache
+        size_before = ops.row_cycle_fused._cache_size()
+        assert size_before > 0
+        monkeypatch.setenv("REPRO_CHECKS", "0")
+        off = dse.sweep(space, with_transient=True)
+        monkeypatch.setenv("REPRO_CHECKS", "1")
+        on = dse.sweep(space, with_transient=True)
+        assert ops.row_cycle_fused._cache_size() == size_before
+        np.testing.assert_array_equal(np.asarray(off.trc_ns),
+                                      np.asarray(on.trc_ns))

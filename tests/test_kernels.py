@@ -148,11 +148,10 @@ class TestRowCycleFusedKernel:
         args[5] = jnp.asarray(params)
         n_act = 15
         for run in (row_cycle_fused_pallas, None):
-            if run is None:
-                evt, _ = ref.row_cycle_fused_ref(*args, self.DT, n_act,
-                                                 10, 10)
-            else:
-                evt, _ = run(*args, self.DT, n_act, 10, 10, interpret=True)
+            evt, _ = (
+                ref.row_cycle_fused_ref(*args, self.DT, n_act, 10, 10)
+                if run is None
+                else run(*args, self.DT, n_act, 10, 10, interpret=True))
             assert np.isnan(np.asarray(evt)[:, 0]).all()
 
     def test_last_step_crossing_stays_finite(self, rng):

@@ -67,7 +67,7 @@ class TestAdamW8bit:
         p32 = {k: jnp.asarray(v) for k, v in params.items()}
         p8 = {k: jnp.asarray(v) for k, v in params.items()}
         s32, s8 = opt32.init(p32), opt8.init(p8)
-        for i in range(10):
+        for _ in range(10):
             g = {"w": jnp.asarray(
                 rng.normal(size=params["w"].shape).astype(np.float32))}
             p32, s32 = opt32.update(g, s32, p32)

@@ -1,0 +1,369 @@
+"""repro-lint (`tools/repro_lint`): one positive + one negative fixture
+per rule, the pragma/baseline workflows, CLI exit codes + JSON report,
+the registry-data sync cross-check, and the acceptance check that a
+seeded RL003 violation in a scratch copy of `core/dse.py` fails the run.
+
+Fixtures are written under tmp_path replicating the scan-root-relative
+layout (`src/repro/core/...`) the rule scopes key on, and linted with
+`LintEngine(root=tmp_path)` so relpaths match.
+"""
+
+import json
+import shutil
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO))
+
+from tools.repro_lint import ALL_RULES, LintEngine  # noqa: E402
+from tools.repro_lint.engine import Finding, load_baseline  # noqa: E402
+from tools.repro_lint import rules as rl  # noqa: E402
+
+
+def lint_files(tmp_path, files, baseline=()):
+    """Write {rel: source} fixtures under tmp_path and lint them."""
+    for rel, source in files.items():
+        path = tmp_path / rel
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(textwrap.dedent(source))
+    engine = LintEngine([cls() for cls in ALL_RULES], root=tmp_path)
+    roots = sorted({rel.split("/")[0] for rel in files})
+    return engine.run([tmp_path / r for r in roots], list(baseline))
+
+
+def findings(tmp_path, files, rule=None):
+    reported, _, _ = lint_files(tmp_path, files)
+    got = [f for _, f in reported]
+    return [f for f in got if f.rule == rule] if rule else got
+
+
+CORE = "src/repro/core/mod.py"
+
+
+class TestRL001:
+    def test_eq_against_registered_name(self, tmp_path):
+        got = findings(tmp_path, {CORE: """
+            def pick(tech):
+                if tech == "aos":
+                    return 1
+                return 0
+            """}, rule="RL001")
+        assert len(got) == 1 and "'aos'" in got[0].message
+
+    def test_membership_against_registered_names(self, tmp_path):
+        got = findings(tmp_path, {CORE: """
+            def pick(scheme):
+                return scheme in ("strap", "sel_strap")
+            """}, rule="RL001")
+        assert got
+
+    def test_unregistered_name_and_registry_files_clean(self, tmp_path):
+        got = findings(tmp_path, {
+            CORE: 'MODE_OK = "fast"\ndef f(m):\n    return m == "fast"\n',
+            "src/repro/core/routing.py":
+                'def spec(n):\n    return n == "sel_strap"\n',
+        }, rule="RL001")
+        assert got == []
+
+
+class TestRL002:
+    def test_loop_over_batch_field(self, tmp_path):
+        got = findings(tmp_path, {CORE: """
+            def f(batch):
+                return [x for x in batch.margin_mv]
+            """}, rule="RL002")
+        assert len(got) == 1 and ".margin_mv" in got[0].message
+
+    def test_for_over_asarray(self, tmp_path):
+        got = findings(tmp_path, {CORE: """
+            import numpy as np
+            def f(layers):
+                out = []
+                for layer in np.asarray(layers):
+                    out.append(layer)
+                return out
+            """}, rule="RL002")
+        assert got
+
+    def test_out_of_scope_and_tuple_genexp_clean(self, tmp_path):
+        got = findings(tmp_path, {
+            # launch/ is outside the fused-core scope
+            "src/repro/launch/mod.py":
+                "def f(batch):\n    return [x for x in batch.margin_mv]\n",
+            # the tuple(float(x) ...) config-normalization idiom
+            CORE: ("import numpy as np\n"
+                   "def g(cfg):\n"
+                   "    return tuple(float(x)"
+                   " for x in np.asarray(cfg).reshape(-1))\n"),
+        }, rule="RL002")
+        assert got == []
+
+
+class TestRL003:
+    def test_nan_to_num_on_protected(self, tmp_path):
+        got = findings(tmp_path, {CORE: """
+            import jax.numpy as jnp
+            def f(trc):
+                return jnp.nan_to_num(trc)
+            """}, rule="RL003")
+        assert len(got) == 1 and "nan_to_num" in got[0].message
+
+    def test_where_isnan_zero_on_protected(self, tmp_path):
+        got = findings(tmp_path, {CORE: """
+            import jax.numpy as jnp
+            def f(margin_mv):
+                return jnp.where(jnp.isnan(margin_mv), 0.0, margin_mv)
+            """}, rule="RL003")
+        assert got
+
+    def test_unprotected_field_clean(self, tmp_path):
+        got = findings(tmp_path, {CORE: """
+            import jax.numpy as jnp
+            def f(weights):
+                return jnp.nan_to_num(weights)
+            """}, rule="RL003")
+        assert got == []
+
+
+class TestRL004:
+    def test_subscript_write_outside_owner(self, tmp_path):
+        got = findings(tmp_path, {CORE: """
+            def f(corners, vals):
+                corners["mc_extra"] = vals
+            """}, rule="RL004")
+        assert len(got) == 1 and "mc_*" in got[0].message
+
+    def test_dict_literal_key(self, tmp_path):
+        got = findings(tmp_path, {CORE: """
+            def f(vals):
+                return {"mc_sa_offset_mv": vals}
+            """}, rule="RL004")
+        assert got
+
+    def test_owner_file_and_plain_key_clean(self, tmp_path):
+        got = findings(tmp_path, {
+            "src/repro/core/space.py":
+                'def f(corners, v):\n    corners["mc_log_w"] = v\n',
+            CORE: 'def g(corners, v):\n    corners["vdd_mult"] = v\n',
+        }, rule="RL004")
+        assert got == []
+
+
+class TestRL005:
+    FUSED = """
+        import jax
+
+        def simulate_row_cycle_many(operands):
+            return dispatch(operands)
+
+        def dispatch(operands):
+            return jax.jit(engine)(operands)
+
+        def engine(x):
+            {body}
+    """
+
+    def test_hazard_inside_traced_path(self, tmp_path):
+        src = textwrap.dedent(self.FUSED).format(body="return x.item()")
+        got = findings(tmp_path, {CORE: src}, rule="RL005")
+        assert len(got) == 1
+        assert ".item()" in got[0].message and "'engine'" in got[0].message
+
+    def test_python_if_on_jnp_inside_traced_path(self, tmp_path):
+        src = textwrap.dedent(self.FUSED).format(
+            body="if jnp.max(x) > 0:\n        return x\n    return -x")
+        src = "import jax.numpy as jnp\n" + src
+        got = findings(tmp_path, {CORE: src}, rule="RL005")
+        assert got and "lax.cond" in got[0].message
+
+    def test_unreachable_function_clean(self, tmp_path):
+        src = textwrap.dedent(self.FUSED).format(body="return x") + (
+            "\ndef host_only(batch):\n    return batch.valid.item()\n")
+        got = findings(tmp_path, {CORE: src}, rule="RL005")
+        assert got == []
+
+    def test_real_repo_traced_set_is_the_fused_path(self):
+        """The call graph on the real tree must reach the kernels but
+        never leak into the model/serving stack (the n_valid bug)."""
+        engine = LintEngine([rl.RL005TracerLeak()], root=REPO)
+        rule = engine.rules[0]
+        engine.run([REPO / "src"])
+        traced = {f"{rel.rsplit('/', 1)[-1]}:{name}"
+                  for rel, name in rule.traced_names}
+        assert "ops.py:row_cycle_fused" in traced
+        assert "ref.py:row_cycle_fused_ref" in traced
+        assert "row_cycle.py:_row_cycle_kernel" in traced
+        assert not any(rel.startswith(("src/repro/models/",
+                                       "src/repro/serving/"))
+                       for rel, _ in rule.traced_names)
+        assert not any(name == "n_valid" for _, name in rule.traced_names)
+
+
+class TestRL006:
+    def test_unaligned_b_chunk_keyword(self, tmp_path):
+        got = findings(tmp_path, {CORE: """
+            def f(sweep, space):
+                return sweep(space, b_chunk=100)
+            """}, rule="RL006")
+        assert len(got) == 1 and "B_ALIGN" in got[0].message
+
+    def test_unaligned_constant_assignment(self, tmp_path):
+        got = findings(tmp_path, {CORE: "MY_B_CHUNK = 1000\n"},
+                       rule="RL006")
+        assert got
+
+    def test_aligned_values_and_tests_scope_clean(self, tmp_path):
+        got = findings(tmp_path, {
+            CORE: "def f(sweep, s):\n    return sweep(s, b_chunk=2048)\n",
+            # tests/ may use tiny unaligned batches on purpose
+            "tests/test_x.py": "def f(sweep, s):\n"
+                               "    return sweep(s, b_chunk=100)\n",
+        }, rule="RL006")
+        assert got == []
+
+
+class TestSuppression:
+    BAD = ("import jax.numpy as jnp\n"
+           "def f(trc):\n"
+           "    return jnp.nan_to_num(trc)"
+           "{pragma}\n")
+
+    def test_line_pragma_suppresses(self, tmp_path):
+        files = {CORE: self.BAD.format(
+            pragma="  # repro-lint: disable=RL003  (justified)")}
+        reported, suppressed, _ = lint_files(tmp_path, files)
+        assert reported == [] and suppressed == 1
+
+    def test_file_pragma_suppresses(self, tmp_path):
+        files = {CORE: "# repro-lint: disable-file=RL003\n"
+                       + self.BAD.format(pragma="")}
+        reported, suppressed, _ = lint_files(tmp_path, files)
+        assert reported == [] and suppressed == 1
+
+    def test_pragma_for_other_rule_does_not(self, tmp_path):
+        files = {CORE: self.BAD.format(
+            pragma="  # repro-lint: disable=RL001")}
+        reported, _, _ = lint_files(tmp_path, files)
+        assert [f.rule for _, f in reported] == ["RL003"]
+
+    def test_baseline_absorbs_exact_finding_only(self, tmp_path):
+        files = {CORE: self.BAD.format(pragma="")}
+        reported, _, _ = lint_files(tmp_path, files)
+        (fp, _), = reported
+        # baselined: absorbed, not reported
+        reported2, _, baselined = lint_files(tmp_path, files, baseline=[fp])
+        assert reported2 == [] and [b[0] for b in baselined] == [fp]
+        # a different violation is NOT covered by that fingerprint
+        files2 = {CORE: self.BAD.format(pragma="").replace(
+            "nan_to_num(trc)", "nan_to_num(trc * 2)")}
+        reported3, _, _ = lint_files(tmp_path, files2, baseline=[fp])
+        assert len(reported3) == 1
+
+    def test_committed_baseline_is_empty(self):
+        fps = load_baseline(REPO / "tools/repro_lint/baseline.json")
+        assert fps == [], ("the committed baseline must stay empty — fix "
+                           "or pragma findings instead of baselining them")
+
+
+class TestRegistrySync:
+    """rules.py hardcodes registry data (the CI lint env has no jax);
+    these cross-checks fail the suite when the model code moves."""
+
+    def test_tech_and_scheme_names(self):
+        from repro.core import calibration, routing
+        assert rl.REGISTERED_TECHS == tuple(calibration.TECHS)
+        assert rl.REGISTERED_SCHEMES == tuple(routing.SCHEMES)
+
+    def test_batch_axis_fields(self):
+        from repro.core import batch, transient
+        assert set(batch.ARRAY_FIELDS) <= rl.BATCH_AXIS_ATTRS
+        fused = set(transient.FusedOperands._fields) - {"replica"}
+        assert fused <= rl.BATCH_AXIS_ATTRS
+        assert rl.B_ALIGN == transient.B_ALIGN
+
+    def test_mc_reserved_names(self):
+        from repro.core import space
+        assert all(k.startswith(rl.MC_RESERVED_PREFIX)
+                   for k in space.MC_AXES + (space.MC_LOG_W,))
+
+    def test_rl005_roots_exist(self):
+        from repro.core import transient
+        from repro.launch import shard
+        assert hasattr(transient, "simulate_row_cycle_many") or hasattr(
+            transient, "simulate_row_cycle_lowered")
+        assert {r for r in rl.RL005TracerLeak.ROOTS} <= (
+            set(dir(transient)) | set(dir(shard)))
+
+
+def run_cli(args, cwd=REPO):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.repro_lint", *args],
+        cwd=cwd, env={"PYTHONPATH": str(REPO), "PATH": "/usr/bin:/bin",
+                      "HOME": "/tmp"},
+        capture_output=True, text=True, timeout=300)
+
+
+class TestCLI:
+    def test_repo_is_clean(self):
+        r = run_cli(["src", "tests", "benchmarks", "examples"])
+        assert r.returncode == 0, r.stdout + r.stderr
+        assert "repro_lint: OK" in r.stdout
+
+    def test_seeded_rl003_violation_fails(self, tmp_path):
+        """Acceptance check: inject a NaN-squash into a scratch copy of
+        core/dse.py and the linter must exit 1 naming RL003."""
+        scratch = tmp_path / "scratch"
+        shutil.copytree(REPO / "src", scratch / "src",
+                        ignore=shutil.ignore_patterns("__pycache__"))
+        dse = scratch / "src/repro/core/dse.py"
+        dse.write_text(dse.read_text() + textwrap.dedent("""
+            def _seeded_violation(trc):
+                return jnp.nan_to_num(trc)
+        """))
+        r = run_cli(["src"], cwd=scratch)
+        assert r.returncode == 1, r.stdout + r.stderr
+        assert "RL003" in r.stdout
+        assert "dse.py" in r.stdout
+
+    def test_json_report_and_exit_codes(self, tmp_path):
+        scratch = tmp_path / "scratch"
+        bad = scratch / "src/repro/core/mod.py"
+        bad.parent.mkdir(parents=True)
+        bad.write_text("import jax.numpy as jnp\n"
+                       "def f(trc):\n"
+                       "    return jnp.nan_to_num(trc)\n")
+        out = scratch / "report.json"
+        r = run_cli(["src", "--json", str(out)], cwd=scratch)
+        assert r.returncode == 1
+        report = json.loads(out.read_text())
+        assert [f["rule"] for f in report["findings"]] == ["RL003"]
+        assert report["findings"][0]["fingerprint"]
+        assert "RL003" in report["rules"]
+
+    def test_unparseable_file_exits_2(self, tmp_path):
+        scratch = tmp_path / "scratch"
+        bad = scratch / "src/repro/core/mod.py"
+        bad.parent.mkdir(parents=True)
+        bad.write_text("def broken(:\n")
+        r = run_cli(["src"], cwd=scratch)
+        assert r.returncode == 2
+        assert "cannot parse" in r.stderr
+
+    def test_list_rules(self):
+        r = run_cli(["--list-rules"])
+        assert r.returncode == 0
+        for rule_id in ("RL001", "RL002", "RL003", "RL004", "RL005",
+                        "RL006"):
+            assert rule_id in r.stdout
+
+
+def test_fingerprint_survives_line_drift():
+    f = Finding("RL003", "src/repro/core/mod.py", 10, 4, "msg")
+    g = Finding("RL003", "src/repro/core/mod.py", 99, 4, "msg")
+    assert f.fingerprint("  x = 1  ") == g.fingerprint("x = 1")
+    assert f.fingerprint("x = 1") != g.fingerprint("x = 2")

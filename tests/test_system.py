@@ -107,10 +107,8 @@ def test_full_dryrun_results_if_present():
     files = [f for f in files if "opt" not in f.name]
     if not files:
         pytest.skip("full dry-run sweep not run in this environment")
-    n_ok = 0
     for f in files:
         d = json.loads(f.read_text())
         assert d.get("ok"), f"{f.name}: {d.get('error', '')[:200]}"
         assert d["flops_per_device"] > 0, f.name
-        n_ok += 1
-    assert n_ok >= 64      # 32 runnable cells x 2 meshes
+    assert len(files) >= 64      # 32 runnable cells x 2 meshes

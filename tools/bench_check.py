@@ -48,11 +48,12 @@ def load_record(path) -> dict:
     path = Path(path)
     try:
         record = json.loads(path.read_text())
-    except FileNotFoundError:
-        raise BenchCheckError(f"benchmark record {path} does not exist")
+    except OSError as e:
+        raise BenchCheckError(f"benchmark record {path} cannot be read: "
+                              f"{e}") from None
     except json.JSONDecodeError as e:
         raise BenchCheckError(f"benchmark record {path} is not valid "
-                              f"JSON: {e}")
+                              f"JSON: {e}") from e
     if not isinstance(record, dict) or "benches" not in record:
         raise BenchCheckError(f"benchmark record {path} has no 'benches' "
                               "section — was it written by "
@@ -96,14 +97,13 @@ def iter_metrics(record: dict):
 def validate_finite(record: dict) -> int:
     """Check every numeric metric in the record is finite; return the
     metric count (raises BenchCheckError on NaN/inf or zero metrics)."""
-    count = 0
-    for name, value in iter_metrics(record):
+    metrics = list(iter_metrics(record))
+    for name, value in metrics:
         if not math.isfinite(value):
             raise BenchCheckError(f"metric {name} is not finite: {value!r}")
-        count += 1
-    if count == 0:
+    if not metrics:
         raise BenchCheckError("record contains no numeric metrics")
-    return count
+    return len(metrics)
 
 
 def check(current: dict, baseline: dict,
@@ -154,6 +154,11 @@ def main(argv=None) -> int:
                      else BASELINE_DIR / Path(args.current).name)
     try:
         current = load_record(args.current)
+        if not Path(baseline_path).is_file():
+            raise BenchCheckError(
+                f"baseline record {baseline_path} is missing — commit one "
+                "(re-run benchmarks/run.py --json and add the file under "
+                "benchmarks/baselines/, see ROADMAP.md conventions)")
         baseline = load_record(baseline_path)
         validate_finite(current)
         results = check(current, baseline, args.max_regression)

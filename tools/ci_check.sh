@@ -30,6 +30,9 @@ fi
 echo "== compile check =="
 python -m compileall -q src tests benchmarks tools examples
 
+echo "== repro-lint (AST-enforced repo invariants, docs/lint.md) =="
+python -m tools.repro_lint src tests benchmarks examples
+
 echo "== fast test tier (budget ${FAST_TIER_BUDGET_S}s) =="
 pytest_log="$(mktemp)"
 trap 'rm -f "$pytest_log"' EXIT

@@ -1,0 +1,16 @@
+"""repro-lint: AST-enforced array-native invariants for this repo.
+
+A purpose-built static-analysis pass (stdlib-only — the CI lint job has
+no jax) encoding the ROADMAP conventions that previously lived as prose:
+registry-driven techs/schemes, ONE fused dispatch, never-fake-zeros NaN
+semantics, reserved `mc_*` corner channels, tracer hygiene on the jitted
+fused path, and B_ALIGN/even-pair batch boundaries.
+
+    python -m tools.repro_lint src tests benchmarks examples
+
+See docs/lint.md for every rule, the pragma + baseline workflow, and the
+companion runtime layer (`src/repro/core/contracts.py`).
+"""
+
+from .engine import Finding, LintEngine, load_baseline  # noqa: F401
+from .rules import ALL_RULES  # noqa: F401

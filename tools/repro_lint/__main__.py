@@ -1,0 +1,88 @@
+"""CLI: `python -m tools.repro_lint [paths...]`.
+
+Exit codes: 0 clean, 1 live findings, 2 bad invocation / unparseable
+input.  `--json` writes the machine-readable report CI uploads as an
+artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .engine import LintEngine, load_baseline, write_baseline
+from .rules import ALL_RULES
+
+DEFAULT_PATHS = ("src", "tests", "benchmarks", "examples")
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro_lint",
+        description="AST-enforced array-native invariants (docs/lint.md)")
+    ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
+                    help="files/directories to lint (default: %(default)s)")
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="write a JSON report ('-' for stdout)")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    help="grandfathered-findings file (default: %(default)s)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report baselined findings too")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline to absorb all live findings")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    rules = [cls() for cls in ALL_RULES]
+    if args.list_rules:
+        for r in rules:
+            print(f"{r.rule_id}  {r.description}")
+        return 0
+
+    baseline_fps = [] if args.no_baseline else load_baseline(args.baseline)
+    engine = LintEngine(rules)
+    try:
+        reported, suppressed, baselined = engine.run(args.paths, baseline_fps)
+    except SyntaxError as e:
+        print(f"repro_lint: cannot parse {e.filename}:{e.lineno}: {e.msg}",
+              file=sys.stderr)
+        return 2
+
+    if args.update_baseline:
+        write_baseline(args.baseline, reported)
+        print(f"repro_lint: baselined {len(reported)} finding(s) into "
+              f"{args.baseline}")
+        return 0
+
+    for _, f in reported:
+        print(f"{f.path}:{f.line}:{f.col}: {f.rule} {f.message}")
+
+    if args.json:
+        report = {
+            "findings": [dict(f.as_dict(), fingerprint=fp)
+                         for fp, f in reported],
+            "baselined": [dict(f.as_dict(), fingerprint=fp)
+                          for fp, f in baselined],
+            "suppressed_by_pragma": suppressed,
+            "rules": {r.rule_id: r.description for r in rules},
+        }
+        text = json.dumps(report, indent=2)
+        if args.json == "-":
+            print(text)
+        else:
+            Path(args.json).write_text(text + "\n")
+
+    tail = (f"{len(reported)} finding(s), {len(baselined)} baselined, "
+            f"{suppressed} pragma-suppressed")
+    if reported:
+        print(f"repro_lint: FAIL - {tail}", file=sys.stderr)
+        return 1
+    print(f"repro_lint: OK - {tail}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

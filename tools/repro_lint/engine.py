@@ -1,0 +1,160 @@
+"""Rule engine: file walking, pragmas, baseline, and reporting.
+
+Stdlib-only on purpose — the CI lint job installs nothing but ruff, and
+this module must import (and run) there.
+
+Suppression workflow (see docs/lint.md):
+
+- same-line pragma, for findings that are INTENTIONAL and justified:
+      x = legacy_loop()   # repro-lint: disable=RL002  (deprecated view)
+- file-level pragma (any line), for files a rule cannot apply to:
+      # repro-lint: disable-file=RL001
+- committed baseline (`tools/repro_lint/baseline.json`), ONLY for
+  grandfathered findings awaiting a real fix — never for intentional
+  keeps.  Fingerprints hash (rule, path, stripped source line), so
+  baselined findings survive line drift but die with the offending code.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import json
+import re
+from pathlib import Path
+
+PRAGMA_RE = re.compile(
+    r"#\s*repro-lint:\s*(disable|disable-file)=([A-Z0-9, ]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str          # scan-root-relative posix path
+    line: int          # 1-indexed
+    col: int           # 0-indexed
+    message: str
+
+    def fingerprint(self, line_text: str) -> str:
+        key = f"{self.rule}:{self.path}:{line_text.strip()}"
+        return hashlib.sha1(key.encode()).hexdigest()[:16]
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class FileContext:
+    """Everything a rule needs about one parsed source file."""
+
+    def __init__(self, path: Path, rel: str, source: str):
+        self.path = path
+        self.rel = rel
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=str(path))
+        self.line_pragmas: dict[int, set] = {}
+        self.file_pragmas: set = set()
+        for i, line in enumerate(self.lines, start=1):
+            m = PRAGMA_RE.search(line)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group(2).split(",") if r.strip()}
+            if m.group(1) == "disable-file":
+                self.file_pragmas |= rules
+            else:
+                self.line_pragmas.setdefault(i, set()).update(rules)
+
+    def suppressed(self, finding: Finding) -> bool:
+        if finding.rule in self.file_pragmas:
+            return True
+        return finding.rule in self.line_pragmas.get(finding.line, set())
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+
+def iter_py_files(paths) -> list[Path]:
+    out = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            out.extend(sorted(f for f in p.rglob("*.py")
+                              if "__pycache__" not in f.parts))
+        elif p.suffix == ".py":
+            out.append(p)
+    return out
+
+
+def load_baseline(path) -> list[str]:
+    """Read the committed baseline: a list of finding fingerprints."""
+    path = Path(path)
+    if not path.exists():
+        return []
+    data = json.loads(path.read_text())
+    return list(data.get("findings", []))
+
+
+def write_baseline(path, findings_with_fp) -> None:
+    payload = {
+        "comment": ("grandfathered repro-lint findings (fingerprints of "
+                    "rule:path:line-text); see docs/lint.md — intentional "
+                    "keeps belong in pragmas, not here"),
+        "findings": sorted(fp for fp, _ in findings_with_fp),
+    }
+    Path(path).write_text(json.dumps(payload, indent=2) + "\n")
+
+
+class LintEngine:
+    def __init__(self, rules, root: Path | None = None):
+        self.rules = list(rules)
+        self.root = Path(root) if root else Path.cwd()
+
+    def _relpath(self, path: Path) -> str:
+        try:
+            return path.resolve().relative_to(self.root.resolve()).as_posix()
+        except ValueError:
+            return path.as_posix()
+
+    def run(self, paths, baseline_fps=()):
+        """Lint `paths`; returns (reported, suppressed_count, baselined).
+
+        `reported` is the list of live findings; findings matching a
+        same-line/file pragma or a baseline fingerprint are counted but
+        not reported.  Each baseline fingerprint absorbs at most as many
+        findings as it occurs in the baseline list.
+        """
+        files = iter_py_files(paths)
+        contexts = []
+        for f in files:
+            source = f.read_text()
+            contexts.append(FileContext(f, self._relpath(f), source))
+
+        # project-wide pre-pass (RL005's call graph wants every module)
+        project = {ctx.rel: ctx for ctx in contexts}
+        for rule in self.rules:
+            prepare = getattr(rule, "prepare", None)
+            if prepare:
+                prepare(project)
+
+        reported, suppressed, baselined = [], 0, []
+        budget = {}
+        for fp in baseline_fps:
+            budget[fp] = budget.get(fp, 0) + 1
+        for ctx in contexts:
+            for rule in self.rules:
+                if not rule.applies_to(ctx.rel):
+                    continue
+                for finding in rule.check(ctx):
+                    if ctx.suppressed(finding):
+                        suppressed += 1
+                        continue
+                    fp = finding.fingerprint(ctx.line_text(finding.line))
+                    if budget.get(fp, 0) > 0:
+                        budget[fp] -= 1
+                        baselined.append((fp, finding))
+                        continue
+                    reported.append((fp, finding))
+        return reported, suppressed, baselined

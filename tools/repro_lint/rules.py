@@ -1,0 +1,474 @@
+"""The RL rules.  Each encodes a shipped bug class or ROADMAP convention;
+docs/lint.md carries the full story per rule.
+
+Every rule is an `ast`-visitor-style checker with:
+  - `rule_id` / `description`
+  - `applies_to(rel)`: scan-root-relative posix path scope
+  - `check(ctx)`: yield `Finding`s for one `FileContext`
+  - optional `prepare(project)`: project-wide pre-pass (RL005)
+
+The registry data rules match against (tech/scheme names, batch field
+names, alignment constants) is HARDCODED here rather than imported from
+`src/repro` — the CI lint job has no jax, so this package must never
+import the model code.  Keep the lists in sync with
+`core/calibration.py` / `core/routing.py` / `core/batch.py` /
+`core/transient.py`; the unit tests cross-check them.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .engine import Finding
+
+# --- mirrored repo registry data (see module docstring) -------------------
+REGISTERED_TECHS = ("si", "aos", "d1b")
+REGISTERED_SCHEMES = ("direct", "strap", "core_mux", "sel_strap")
+REGISTERED_NAMES = frozenset(REGISTERED_TECHS + REGISTERED_SCHEMES)
+
+# DesignBatch.ARRAY_FIELDS + the FusedOperands fields: iterating any of
+# these with a Python loop in core/kernels is a per-sample loop.
+BATCH_AXIS_ATTRS = frozenset({
+    "tech_idx", "scheme_idx", "layers",
+    "density_gb_mm2", "height_um", "cbl_ff",
+    "margin_mv", "margin_disturbed_mv",
+    "trc_ns", "t_sense_ns", "t_fire_ns", "margin_fire_mv",
+    "e_write_fj", "e_read_fj",
+    "hcb_pitch_um", "blsa_area_um2",
+    "manufacturable", "feasible", "valid",
+    # FusedOperands
+    "c", "g", "gc_res", "gc_pre", "v0", "params",
+    "sa_tau_ns", "t_overhead_ns",
+})
+
+# identifiers whose NaN means "no estimate / never crossed" — the
+# never-fake-zeros fields (PR-4 fake 0.0 yield, PR-6 clamped crossings)
+PROTECTED_TOKENS = ("trc", "margin", "yield", "t_sense", "t_fire",
+                    "t_dev", "ppm", "fail_ppm")
+
+MC_RESERVED_PREFIX = "mc_"
+B_ALIGN = 64
+
+
+def _under(rel: str, *prefixes: str) -> bool:
+    return any(rel.startswith(p) for p in prefixes)
+
+
+def _identifiers(node) -> set:
+    """Every Name id and Attribute attr in a subtree, lowercased."""
+    out = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name):
+            out.add(sub.id.lower())
+        elif isinstance(sub, ast.Attribute):
+            out.add(sub.attr.lower())
+    return out
+
+
+def _mentions_protected(node) -> bool:
+    idents = _identifiers(node)
+    return any(tok in ident for ident in idents for tok in PROTECTED_TOKENS)
+
+
+def _is_zero(node) -> bool:
+    return (isinstance(node, ast.Constant)
+            and isinstance(node.value, (int, float))
+            and not isinstance(node.value, bool)
+            and node.value == 0)
+
+
+def _call_attr(node):
+    """'attr' for f(...) spelled x.attr(...) or attr(...), else None."""
+    if not isinstance(node, ast.Call):
+        return None
+    if isinstance(node.func, ast.Attribute):
+        return node.func.attr
+    if isinstance(node.func, ast.Name):
+        return node.func.id
+    return None
+
+
+class RuleBase:
+    rule_id = "RL000"
+    description = ""
+
+    def applies_to(self, rel: str) -> bool:
+        raise NotImplementedError
+
+    def check(self, ctx):
+        raise NotImplementedError
+
+    def finding(self, ctx, node, message) -> Finding:
+        return Finding(self.rule_id, ctx.rel, node.lineno,
+                       getattr(node, "col_offset", 0), message)
+
+
+class RL001NameSpecialCase(RuleBase):
+    """No string comparison against registered tech/scheme names outside
+    the registries — capability flags, not `name == "d1b"` branches."""
+
+    rule_id = "RL001"
+    description = ("string comparison against a registered tech/scheme "
+                   "name outside the registries")
+    EXEMPT = ("src/repro/core/calibration.py", "src/repro/core/routing.py")
+
+    def applies_to(self, rel):
+        return _under(rel, "src/repro/") and rel not in self.EXEMPT
+
+    def check(self, ctx):
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Compare):
+                continue
+            for op, cmp in zip(node.ops, node.comparators):
+                hit = None
+                if isinstance(op, (ast.Eq, ast.NotEq)):
+                    for side in (node.left, cmp):
+                        if (isinstance(side, ast.Constant)
+                                and side.value in REGISTERED_NAMES):
+                            hit = side.value
+                elif isinstance(op, (ast.In, ast.NotIn)) and isinstance(
+                        cmp, (ast.Tuple, ast.List, ast.Set)):
+                    for elt in cmp.elts:
+                        if (isinstance(elt, ast.Constant)
+                                and elt.value in REGISTERED_NAMES):
+                            hit = elt.value
+                if hit is not None:
+                    yield self.finding(
+                        ctx, node,
+                        f"comparison against registered name {hit!r}; "
+                        "branch on a registry capability flag "
+                        "(TechCal/SchemeSpec field) instead of the name")
+
+
+class RL002BatchPythonLoop(RuleBase):
+    """No Python for/while loop iterating a batch-axis array in core/ or
+    kernels/ — per-sample work must be one fused dispatch / lax.map."""
+
+    rule_id = "RL002"
+    description = "Python loop over a batch-axis array in core/kernels"
+
+    def applies_to(self, rel):
+        return _under(rel, "src/repro/core/", "src/repro/kernels/")
+
+    def _iter_exprs(self, tree):
+        # tuple(float(x) for x in np.asarray(cfg).reshape(-1)) is the
+        # repo's config-normalization idiom (PRNG entropy, layer grids,
+        # corner value lists) — tiny host-side tuples, not batch loops.
+        tuple_genexps = {
+            id(arg)
+            for node in ast.walk(tree)
+            if isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name) and node.func.id == "tuple"
+            for arg in node.args if isinstance(arg, ast.GeneratorExp)
+        }
+        for node in ast.walk(tree):
+            if isinstance(node, ast.For):
+                yield node, node.iter
+            elif isinstance(node, ast.While):
+                yield node, node.test
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                   ast.GeneratorExp)):
+                if id(node) in tuple_genexps:
+                    continue
+                for gen in node.generators:
+                    yield node, gen.iter
+
+    def _trigger(self, iter_expr):
+        for sub in ast.walk(iter_expr):
+            # iterating a DesignBatch / FusedOperands / LoweredSpace
+            # batch-axis field (x.margin_mv, self.tech_idx, ops.params)
+            if isinstance(sub, ast.Attribute) and sub.attr in BATCH_AXIS_ATTRS:
+                return f"batch-axis field .{sub.attr}"
+            # iterating a corner channel's (B,) values
+            if (isinstance(sub, ast.Subscript)
+                    and isinstance(sub.value, ast.Attribute)
+                    and sub.value.attr == "corners"):
+                return "a corners[...] channel"
+            # materializing an array just to loop it
+            if _call_attr(sub) in ("flatnonzero", "asarray"):
+                return f"a {_call_attr(sub)}(...) materialization"
+        return None
+
+    def check(self, ctx):
+        for node, iter_expr in self._iter_exprs(ctx.tree):
+            why = self._trigger(iter_expr)
+            if why:
+                yield self.finding(
+                    ctx, node,
+                    f"Python loop iterates {why}; per-sample work must "
+                    "stay ONE fused dispatch (vectorize or lax.map)")
+
+
+class RL003FakeZeros(RuleBase):
+    """Never replace NaN with 0 on tRC/margin/yield-class fields: NaN
+    means 'no estimate / never crossed', 0 is a great-looking lie."""
+
+    rule_id = "RL003"
+    description = "NaN squashed to zero on a protected metric field"
+
+    def applies_to(self, rel):
+        return _under(rel, "src/repro/", "benchmarks/", "examples/")
+
+    def check(self, ctx):
+        for node in ast.walk(ctx.tree):
+            attr = _call_attr(node)
+            if attr == "nan_to_num" and any(
+                    _mentions_protected(a) for a in node.args):
+                yield self.finding(
+                    ctx, node,
+                    "nan_to_num on a protected metric fakes a 0.0 for "
+                    "'no estimate'; keep the NaN (mask or gate instead)")
+            elif attr == "where" and len(node.args) == 3:
+                cond, if_true, if_false = node.args
+                cond_attr = _call_attr(cond)
+                if (cond_attr == "isnan" and _is_zero(if_true)
+                        and _mentions_protected(cond)):
+                    yield self.finding(
+                        ctx, node,
+                        "where(isnan(x), 0, ...) on a protected metric "
+                        "fakes a 0.0; keep the NaN")
+                elif (cond_attr == "isfinite" and _is_zero(if_false)
+                        and _mentions_protected(cond)):
+                    yield self.finding(
+                        ctx, node,
+                        "where(isfinite(x), ..., 0) on a protected metric "
+                        "fakes a 0.0; keep the NaN")
+
+
+class RL004ReservedMCChannel(RuleBase):
+    """Writes to reserved `mc_*` corner channels happen ONLY in
+    core/space.py (the MC lowering owns them)."""
+
+    rule_id = "RL004"
+    description = "write to a reserved mc_* corner channel outside space.py"
+    OWNER = "src/repro/core/space.py"
+
+    def applies_to(self, rel):
+        return _under(rel, "src/repro/") and rel != self.OWNER
+
+    def _is_reserved_key(self, node) -> bool:
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            return node.value.startswith(MC_RESERVED_PREFIX)
+        # corners[MC_LOG_W] = ... / corners[space.MC_LOG_W] = ...
+        if isinstance(node, ast.Name):
+            return node.id.startswith("MC_")
+        if isinstance(node, ast.Attribute):
+            return node.attr.startswith("MC_")
+        return False
+
+    def check(self, ctx):
+        for node in ast.walk(ctx.tree):
+            targets = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                targets = [node.target]
+            elif isinstance(node, ast.Dict):
+                for key in node.keys:
+                    if key is not None and self._is_reserved_key(key):
+                        yield self.finding(
+                            ctx, node,
+                            "dict literal creates a reserved mc_* corner "
+                            "channel; only core/space.py's MC lowering "
+                            "may write these")
+                continue
+            for t in targets:
+                if isinstance(t, ast.Subscript) and self._is_reserved_key(
+                        t.slice):
+                    yield self.finding(
+                        ctx, node,
+                        "subscript write to a reserved mc_* corner "
+                        "channel; only core/space.py's MC lowering may "
+                        "write these")
+
+
+class RL005TracerLeak(RuleBase):
+    """Tracer hygiene on the jitted fused path: no float()/.item()/
+    np.asarray/if-on-jnp inside functions the fused dispatch traces.
+
+    Two-phase: (a) name-level call graph over src/repro, reachability
+    from the fused-path entry points; (b) of those, functions that are
+    jit/pallas roots (decorator or body) and everything THEY reach form
+    the traced set, whose bodies get the tracer-hazard checks.
+    """
+
+    rule_id = "RL005"
+    description = "host-side op on a traced value inside the fused path"
+    ROOTS = ("simulate_row_cycle_many", "simulate_row_cycle_sharded")
+    NP_ALIASES = ("np", "numpy", "onp")
+    NP_BANNED = ("asarray", "array", "where", "isnan", "isfinite",
+                 "sum", "mean", "min", "max", "nonzero", "flatnonzero")
+
+    def __init__(self):
+        self.traced_names = frozenset()
+
+    def applies_to(self, rel):
+        return _under(rel, "src/repro/")
+
+    # -- project pre-pass ---------------------------------------------------
+    def prepare(self, project):
+        """Build a module-qualified call graph over src/repro.
+
+        Nodes are (module, func-name).  A `Name` reference resolves to a
+        def in the SAME module or one pulled in by a from-import; an
+        `Attribute` reference (`mod.func`) resolves only against
+        MODULE-LEVEL functions (methods are too generically named —
+        matching them fuses unrelated subsystems into one blob).
+        Over-approximate on purpose: a spurious edge only widens the
+        checked set, a missed one silently exempts code.
+        """
+        mods = {rel: ctx for rel, ctx in project.items()
+                if _under(rel, "src/repro/")}
+        defs_by_mod = {}   # rel -> {name: [def nodes]} (incl. nested/methods)
+        toplevel = {}      # name -> [rels defining it at module level]
+        imports = {}       # rel -> names bound by from-imports
+        for rel, ctx in mods.items():
+            d = {}
+            for node in ast.walk(ctx.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    d.setdefault(node.name, []).append(node)
+            defs_by_mod[rel] = d
+            for stmt in ast.walk(ctx.tree):
+                if isinstance(stmt, ast.ImportFrom):
+                    imports.setdefault(rel, set()).update(
+                        a.asname or a.name for a in stmt.names)
+            for stmt in ctx.tree.body:
+                if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    toplevel.setdefault(stmt.name, []).append(rel)
+
+        edges = {}         # (rel, name) -> {(rel, name)}
+        jit_marked = set()
+        for rel, d in defs_by_mod.items():
+            for name, fnodes in d.items():
+                key = (rel, name)
+                refs = set()
+                jitted = False
+                for fn in fnodes:
+                    for dec in fn.decorator_list:
+                        if _identifiers(dec) & {"jit", "pallas_call"}:
+                            jitted = True
+                    for sub in ast.walk(fn):
+                        if isinstance(sub, ast.Name) and sub.id != name:
+                            if sub.id in d:
+                                refs.add((rel, sub.id))
+                            elif sub.id in imports.get(rel, set()) \
+                                    and sub.id in toplevel:
+                                refs.update((r, sub.id)
+                                            for r in toplevel[sub.id])
+                        elif isinstance(sub, ast.Attribute) \
+                                and sub.attr != name and sub.attr in toplevel:
+                            refs.update((r, sub.attr)
+                                        for r in toplevel[sub.attr])
+                        if _call_attr(sub) in ("jit", "pallas_call",
+                                               "shard_map"):
+                            jitted = True
+                edges[key] = refs
+                if jitted:
+                    jit_marked.add(key)
+
+        def closure(seeds):
+            seen, stack = set(), list(seeds)
+            while stack:
+                cur = stack.pop()
+                if cur in seen or cur not in edges:
+                    continue
+                seen.add(cur)
+                stack.extend(edges[cur])
+            return seen
+
+        roots = [(rel, name) for rel, d in defs_by_mod.items()
+                 for name in d if name in self.ROOTS]
+        reachable = closure(roots)
+        self.traced_names = frozenset(closure(reachable & jit_marked))
+
+    # -- per-file checks ----------------------------------------------------
+    def _hazards(self, fn):
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Call):
+                if (isinstance(sub.func, ast.Attribute)
+                        and sub.func.attr == "item"):
+                    yield sub, ".item() forces a traced value to host"
+                elif (isinstance(sub.func, ast.Attribute)
+                        and isinstance(sub.func.value, ast.Name)
+                        and sub.func.value.id in self.NP_ALIASES
+                        and sub.func.attr in self.NP_BANNED):
+                    yield sub, (f"numpy op np.{sub.func.attr} on a traced "
+                                "value; use jnp")
+                elif (isinstance(sub.func, ast.Name) and sub.func.id == "float"
+                        and sub.args
+                        and not isinstance(sub.args[0], ast.Constant)):
+                    yield sub, "float() concretizes a traced value"
+            elif isinstance(sub, (ast.If, ast.While)) and not isinstance(
+                    sub, ast.IfExp):
+                test_ids = {s.id for s in ast.walk(sub.test)
+                            if isinstance(s, ast.Name)}
+                if "jnp" in test_ids:
+                    kind = "if" if isinstance(sub, ast.If) else "while"
+                    yield sub, (f"Python `{kind}` on a jnp expression "
+                                "inside the traced fused path; use "
+                                "jnp.where / lax.cond")
+
+    def check(self, ctx):
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and (ctx.rel, node.name) in self.traced_names:
+                for sub, why in self._hazards(node):
+                    yield self.finding(
+                        ctx, sub,
+                        f"{why} (inside {node.name!r}, reachable from the "
+                        "jitted fused row-cycle dispatch)")
+
+
+class RL006BatchAlignment(RuleBase):
+    """Batch-dimension literals must be positive B_ALIGN (64) multiples —
+    which also keeps every replica-mode [replica, main] boundary even."""
+
+    rule_id = "RL006"
+    description = "batch-dimension literal breaks B_ALIGN/even-pair rules"
+    KEYWORDS = ("b_chunk", "b_blk")
+    NAME_TOKENS = ("B_CHUNK", "B_BLK", "B_ALIGN")
+
+    def applies_to(self, rel):
+        return _under(rel, "src/repro/", "benchmarks/", "examples/")
+
+    def _bad(self, value) -> bool:
+        return not (isinstance(value, int) and not isinstance(value, bool)
+                    and value > 0 and value % B_ALIGN == 0)
+
+    def check(self, ctx):
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    if kw.arg in self.KEYWORDS and isinstance(
+                            kw.value, ast.Constant) and self._bad(
+                            kw.value.value):
+                        yield self.finding(
+                            ctx, node,
+                            f"{kw.arg}={kw.value.value!r} is not a "
+                            f"positive multiple of B_ALIGN ({B_ALIGN}); "
+                            "unaligned chunks break compiled-shape "
+                            "sharing and can split a replica pair")
+                if (isinstance(node.func, ast.Name)
+                        and node.func.id == "validate_b_chunk"
+                        and node.args
+                        and isinstance(node.args[0], ast.Constant)
+                        and self._bad(node.args[0].value)):
+                    yield self.finding(
+                        ctx, node,
+                        f"validate_b_chunk({node.args[0].value!r}) will "
+                        f"always raise; pass a positive B_ALIGN "
+                        f"({B_ALIGN}) multiple")
+            elif isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if (isinstance(t, ast.Name)
+                            and any(tok in t.id for tok in self.NAME_TOKENS)
+                            and isinstance(node.value, ast.Constant)
+                            and self._bad(node.value.value)):
+                        yield self.finding(
+                            ctx, node,
+                            f"{t.id} = {node.value.value!r} is not a "
+                            f"positive multiple of B_ALIGN ({B_ALIGN})")
+
+
+ALL_RULES = (RL001NameSpecialCase, RL002BatchPythonLoop, RL003FakeZeros,
+             RL004ReservedMCChannel, RL005TracerLeak, RL006BatchAlignment)
