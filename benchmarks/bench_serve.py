@@ -1,0 +1,95 @@
+"""Co-design-service throughput: queries/sec through a warm DSEService.
+
+Drives `serving.dse_service.DSEService` with a mixed pool of distinct
+sweep/yield queries, twice:
+
+  cold epoch : every query is a memo miss; the whole epoch is queued
+               first and flushed as micro-batch windows, so the number
+               is the packed-dispatch serving rate (compile cost is paid
+               beforehand by an untimed shape warm-up + `memo_clear`);
+  memo epoch : the same queries again — every one answers from the LRU
+               memo without touching the engine.
+
+CI gates `queries_per_s` (both epochs / total wall) via
+BENCH_serve.json; `cold_queries_per_s` and `memo_queries_per_s` record
+the two regimes separately, and the memo/rows stats expose hit rate and
+slab occupancy for the trajectory artifact.
+"""
+
+from __future__ import annotations
+
+import time
+
+from .common import emit
+
+
+def _query_pool():
+    from repro.core.space import DesignSpace
+
+    return [
+        (DesignSpace.product(techs=["aos"], layers=(4, 8, 16, 32)),
+         "sweep", None),
+        (DesignSpace.product(techs=["si"], layers=(8, 16, 32, 64)),
+         "sweep", None),
+        (DesignSpace.product(techs=["d1b"]), "sweep", None),
+        (DesignSpace.product(techs=["aos"], layers=(8, 16))
+         .with_corners(rh_toggles=(1e5, 3e5)), "sweep", None),
+        (DesignSpace.paper_targets().with_replica(), "sweep", None),
+        (DesignSpace.paper_targets().with_mc(samples=32, key=0),
+         "yield", {"margin_mv": 5.0}),
+    ]
+
+
+def _epoch(svc, pool) -> float:
+    """Queue the whole pool, flush as micro-batch windows, wait for
+    every response; returns wall seconds."""
+    t0 = time.perf_counter()
+    futures = [svc.submit(space, kind=kind, spec=spec)
+               for space, kind, spec in pool]
+    svc.flush()
+    for f in futures:
+        f.result(timeout=0)
+    return time.perf_counter() - t0
+
+
+def main() -> dict:
+    from repro.serving.dse_service import DSEService
+
+    pool = _query_pool()
+    svc = DSEService(window_ms=0.0)
+    svc.warm()
+    _epoch(svc, pool)       # untimed: compile every slab shape
+    svc.memo_clear()        # results gone, compiled shapes stay cached
+
+    cold_s = _epoch(svc, pool)
+    memo_s = _epoch(svc, pool)
+
+    n = len(pool)
+    cold_qps = n / cold_s
+    memo_qps = n / memo_s
+    total_qps = (2 * n) / (cold_s + memo_s)
+    stats = svc.stats()
+    occupancy = (stats["rows"]["requested"] / stats["rows"]["dispatched"]
+                 if stats["rows"]["dispatched"] else 0.0)
+
+    emit("serve_cold", cold_s / n * 1e6, f"queries_per_s={cold_qps:,.1f}")
+    emit("serve_memo", memo_s / n * 1e6, f"queries_per_s={memo_qps:,.1f}")
+    emit("serve_total", (cold_s + memo_s) / (2 * n) * 1e6,
+         f"queries_per_s={total_qps:,.1f};"
+         f"hit_rate={stats['memo']['hit_rate']:.2f}")
+
+    return {
+        "queries": n,
+        "rows_per_epoch": sum(len(space) for space, _, _ in pool),
+        "queries_per_s": total_qps,
+        "cold_queries_per_s": cold_qps,
+        "memo_queries_per_s": memo_qps,
+        "memo_hit_rate": stats["memo"]["hit_rate"],
+        "dispatches": stats["dispatches"],
+        "windows": stats["windows"],
+        "slab_occupancy": occupancy,
+    }
+
+
+if __name__ == "__main__":
+    main()

@@ -9,8 +9,9 @@ from .common import emit, timeit
 
 
 def main():
-    from repro.core.dse import best_design, full_sweep
+    from repro.core.dse import best_design, sweep
     from repro.core.report import table1_summary
+    from repro.core.space import DesignSpace
 
     dt, summary = timeit(table1_summary, repeats=1, warmup=0)
     m = summary["sense_margin_mv"]
@@ -19,12 +20,13 @@ def main():
          f"{summary['bit_density']};margin_si={m['si']:.0f}mV;"
          f"tRC_si={t['si']:.1f}ns;tRC_d1b={t['d1b']:.1f}ns")
 
-    dt, pts = timeit(full_sweep, np.array([64, 87, 137, 200]), True,
-                     repeats=1, warmup=0)
-    best = best_design(pts)
-    emit("table1_dse_sweep", dt / len(pts) * 1e6,
-         f"points={len(pts)};best={best.tech}/{best.scheme}@{best.layers}L;"
-         f"feasible={sum(p.feasible for p in pts)}")
+    space = DesignSpace.paper_grid(layer_grid=(64, 87, 137, 200))
+    dt, batch = timeit(sweep, space, repeats=1, warmup=0)
+    best = best_design(batch)
+    feasible = int(np.asarray(batch.feasible & batch.valid).sum())
+    emit("table1_dse_sweep", dt / len(batch) * 1e6,
+         f"points={len(batch)};best={best.tech}/{best.scheme}@{best.layers}L;"
+         f"feasible={feasible}")
 
 
 if __name__ == "__main__":

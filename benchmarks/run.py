@@ -22,7 +22,8 @@ import traceback
 
 from . import (bench_fig3_routing, bench_fig8_transient, bench_fig9_scaling,
                bench_fused_row_cycle, bench_kernels, bench_roofline,
-               bench_sharded_sweep, bench_strap_cache, bench_table1)
+               bench_serve, bench_sharded_sweep, bench_strap_cache,
+               bench_table1)
 
 ALL = {
     "table1": bench_table1.main,
@@ -30,6 +31,7 @@ ALL = {
     "fig8": bench_fig8_transient.main,
     "fused_rc": bench_fused_row_cycle.main,
     "sharded_sweep": bench_sharded_sweep.main,
+    "serve": bench_serve.main,
     "fig9": bench_fig9_scaling.main,
     "kernels": bench_kernels.main,
     "strap_cache": bench_strap_cache.main,

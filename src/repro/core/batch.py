@@ -21,6 +21,7 @@ jit/tree_map/sharding semantics are unchanged.
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, replace
 
 import numpy as np
@@ -161,6 +162,83 @@ class DesignBatch:
         out = jax.tree_util.tree_map(take, self)
         return replace(out, n_samples=0 if self.n_samples != 1 else 1,
                        base_len=0)
+
+    def slice_rows(self, start: int, stop: int) -> "DesignBatch":
+        """Contiguous row slice [start:stop) — the demux/streaming helper.
+
+        Cheaper and more explicit than `select` for the serving layer's
+        per-client slab slices and per-chunk streaming: no index
+        materialization, plain array slicing on every leaf.  Like
+        `select`, slicing a Monte-Carlo batch destroys the sample-major
+        layout, so the MC aux is cleared to the `n_samples=0` sentinel
+        unless the batch was a plain (n_samples == 1) sweep.
+        """
+        start, stop = int(start), int(stop)
+        if not 0 <= start <= stop <= len(self):
+            raise ValueError(
+                f"slice_rows [{start}:{stop}) out of range for a "
+                f"{len(self)}-row batch")
+        cut = lambda a: jnp.asarray(a)[start:stop]
+        out = jax.tree_util.tree_map(cut, self)
+        return replace(out, n_samples=0 if self.n_samples != 1 else 1,
+                       base_len=0)
+
+    @classmethod
+    def concat(cls, batches) -> "DesignBatch":
+        """Merge batches row-wise into one flat batch — the micro-batch
+        packing helper.
+
+        Name tables are unioned (indices remapped per input batch), so
+        batches from different sweeps compose.  All inputs must carry the
+        same corner channels and be plain (n_samples == 1) batches —
+        concatenating sample-major MC layouts would interleave segments
+        of different bases, so MC batches must be `mc_summary`-reduced
+        first.
+        """
+        batches = list(batches)
+        if not batches:
+            raise ValueError("concat needs at least one batch")
+        corner_keys = set(batches[0].corners)
+        for b in batches[1:]:
+            if set(b.corners) != corner_keys:
+                raise ValueError(
+                    "concat needs identical corner channels on every "
+                    f"batch (got {sorted(corner_keys)} vs "
+                    f"{sorted(b.corners)})")
+        if any(b.n_samples != 1 for b in batches):
+            raise ValueError(
+                "concat only composes plain (n_samples == 1) batches; "
+                "reduce MC batches with mc_summary first — concatenating "
+                "sample-major layouts would interleave their segments")
+        tech_names: list = []
+        scheme_names: list = []
+        for b in batches:
+            for n in b.tech_names:
+                if n not in tech_names:
+                    tech_names.append(n)
+            for n in b.scheme_names:
+                if n not in scheme_names:
+                    scheme_names.append(n)
+        parts = []
+        for b in batches:
+            tmap = np.asarray([tech_names.index(n) for n in b.tech_names]
+                              or [0], np.int32)
+            smap = np.asarray([scheme_names.index(n) for n in b.scheme_names]
+                              or [0], np.int32)
+            parts.append(replace(
+                b,
+                tech_idx=jnp.asarray(tmap)[b.tech_idx],
+                scheme_idx=jnp.asarray(smap)[b.scheme_idx]))
+        # field-wise concatenation (NOT tree_map: the inputs' static aux
+        # data — name tables — legitimately differ before the union)
+        cat = lambda xs: jnp.concatenate([jnp.asarray(x) for x in xs])
+        kwargs = {f: cat([getattr(p, f) for p in parts])
+                  for f in ARRAY_FIELDS}
+        corners = {k: cat([p.corners[k] for p in parts])
+                   for k in batches[0].corners}
+        return cls(corners=corners, tech_names=tuple(tech_names),
+                   scheme_names=tuple(scheme_names),
+                   n_samples=1, base_len=0, **kwargs)
 
     def pad_to(self, multiple: int) -> "DesignBatch":
         """Pad the batch axis up to a multiple (sharding/chunk alignment).
@@ -455,7 +533,14 @@ class DesignBatch:
     def to_points(self) -> list:
         """Deprecated compatibility view: the old `list[DesignPoint]`
         contract of `full_sweep`.  Skips invalid (padding) rows.  New code
-        should consume the array fields directly."""
+        should consume the array fields directly.  Removal timeline:
+        docs/api.md."""
+        warnings.warn(
+            "DesignBatch.to_points is deprecated and will be removed (see "
+            "docs/api.md for the timeline); consume the DesignBatch array "
+            "columns directly (tech_col/scheme_col for names, point(i) "
+            "for a single row)",
+            DeprecationWarning, stacklevel=2)
         valid = np.asarray(self.valid)
         return [self.point(i) for i in np.flatnonzero(valid)]  # repro-lint: disable=RL002  (deprecated per-point export shim; sweep path is array-native)
 

@@ -25,6 +25,9 @@ Legacy surface: `full_sweep` / `evaluate_grid` still return the old
 
 from __future__ import annotations
 
+import warnings
+from dataclasses import dataclass
+
 import numpy as np
 import jax.numpy as jnp
 
@@ -46,7 +49,8 @@ from .transient import simulate_row_cycle, simulate_row_cycle_many
 
 __all__ = [
     "DesignBatch", "DesignPoint", "DesignSpace",
-    "sweep", "pareto_mask", "pareto_front", "best_design",
+    "SweepPlan", "plan_sweep", "finalize_sweep",
+    "sweep", "pareto_mask", "pareto_front", "best_design", "as_batch",
     "full_sweep", "evaluate_grid", "sweep_combos",
 ]
 
@@ -59,28 +63,41 @@ SUPPORTED_CORNER_AXES = ("rh_toggles", "trc_cycles")
 # The vectorized sweep
 # ---------------------------------------------------------------------------
 
-def sweep(space: DesignSpace | None = None, with_transient: bool = True,
-          backend: str = "auto",
-          b_chunk: int = transient.DEFAULT_B_CHUNK,
-          sharding=None) -> DesignBatch:
-    """Score a whole `DesignSpace` in one vectorized pass -> `DesignBatch`.
+@dataclass(frozen=True)
+class SweepPlan:
+    """A lowered, dispatch-ready sweep: everything `sweep` does before the
+    fused engine runs.
 
-    All metrics are computed as flat (B,) arrays over the lowered space;
-    the transient row-cycle times come from ONE chunked pass through the
-    fused engine (`transient.simulate_row_cycle_many` on the lowered
-    operand batch) — never a per-combo transient call.
-
-    `sharding` (a `jax.sharding.Mesh` or `NamedSharding`) distributes
-    that fused dispatch over a device mesh instead — each device (and
-    each host under multi-process JAX) evaluates its own slab of the
-    grid via `repro.launch.shard`, with results bit-identical to the
-    single-host path (which remains the equivalence oracle).
+    The plan/finalize split is the serving seam: `plan_sweep` lowers a
+    space to its operand batch, `finalize_sweep` turns a transient result
+    back into the scored `DesignBatch` — and BOTH halves are the exact
+    code `sweep` itself runs, so a caller that dispatches the operands
+    elsewhere (e.g. `serving.dse_service` packing many clients' plans
+    into one shared slab) gets results bit-identical to a direct
+    `dse.sweep` by construction.
     """
-    if sharding is not None and not with_transient:
-        raise ValueError(
-            "sharding= only distributes the fused transient dispatch; a "
-            "with_transient=False sweep is host-side array ops with "
-            "nothing to shard — pass sharding=None")
+    space: DesignSpace
+    sp: object                         # LoweredSpace
+    par: object                        # BLParasitics over the lowered space
+    operands: transient.FusedOperands | None   # None when transient is off
+
+    def __len__(self) -> int:
+        return len(self.sp)
+
+    @property
+    def with_transient(self) -> bool:
+        return self.operands is not None
+
+
+def plan_sweep(space: DesignSpace | None = None,
+               with_transient: bool = True) -> SweepPlan:
+    """Lower a `DesignSpace` to a dispatch-ready `SweepPlan`.
+
+    Validates corner axes, assembles the parasitic decomposition, and
+    (when the transient is on) lowers the whole space to ONE
+    `FusedOperands` batch — the heavy per-request work a warm serving
+    engine wants to do once per space, off the dispatch path.
+    """
     if space is None:
         space = DesignSpace.paper_grid()
     sp = space.lower()
@@ -90,9 +107,32 @@ def sweep(space: DesignSpace | None = None, with_transient: bool = True,
     if unknown:
         raise ValueError(f"unsupported corner axes {unknown}; sweep "
                          f"understands {SUPPORTED_CORNER_AXES}")
-
     par = bl_parasitics_lowered(sp)
-    cbl = par.c_bl_total_ff
+    operands = None
+    if with_transient:
+        ladder_c, ladder_g = build_ladder_lowered(sp, par)
+        operands = transient.lower_design_operands(
+            sp, ladder_c=ladder_c, ladder_g=ladder_g)
+    return SweepPlan(space=space, sp=sp, par=par, operands=operands)
+
+
+def finalize_sweep(plan: SweepPlan,
+                   res: transient.RowCycleResult | None = None) -> DesignBatch:
+    """Score a planned sweep into a `DesignBatch`.
+
+    `res` is the fused-engine result for `plan.operands` (None iff the
+    plan was made with `with_transient=False`).  This is the second half
+    of `sweep`: every non-transient metric is computed here as flat (B,)
+    arrays over the plan's lowered space, then assembled with the
+    transient columns into the batch.
+    """
+    if plan.with_transient != (res is not None):
+        raise ValueError(
+            "finalize_sweep needs the fused-engine result exactly when "
+            "the plan lowered transient operands (with_transient="
+            f"{plan.with_transient}, res={'set' if res is not None else 'None'})")
+    sp = plan.sp
+    cbl = plan.par.c_bl_total_ff
     dens = bit_density_lowered(sp)
     height = stack_height_lowered(sp)
     margin = sense_margin_lowered(sp, cbl_ff=cbl)
@@ -101,17 +141,7 @@ def sweep(space: DesignSpace | None = None, with_transient: bool = True,
     e_rd = read_energy_lowered(sp, cbl_ff=cbl)
     geom = bonding_geometry_lowered(sp)
 
-    if with_transient:
-        ladder_c, ladder_g = build_ladder_lowered(sp, par)
-        operands = transient.lower_design_operands(
-            sp, ladder_c=ladder_c, ladder_g=ladder_g)
-        if sharding is not None:
-            from ..launch import shard
-            res = shard.simulate_row_cycle_sharded(
-                operands, sharding, backend=backend, b_chunk=b_chunk)
-        else:
-            res = simulate_row_cycle_many(operands, backend=backend,
-                                          b_chunk=b_chunk)
+    if res is not None:
         trc, t_sense = res.trc_ns, res.t_sense_ns
         t_fire = res.t_fire_ns
         # margin actually available at the SA fire: the simulated
@@ -133,7 +163,7 @@ def sweep(space: DesignSpace | None = None, with_transient: bool = True,
                 & (margin >= cal.MIN_FUNCTIONAL_MARGIN_MV - 1e-9)
                 & (margin_d >= cal.MIN_DISTURBED_MARGIN_MV - 1e-9)
                 & valid)
-    if with_transient:
+    if res is not None:
         # a design whose timing never closed (NaN tRC: a phase timed out,
         # or the WL ramp starved signal development past the ACT window)
         # is invalid as a design, not merely slow
@@ -154,6 +184,44 @@ def sweep(space: DesignSpace | None = None, with_transient: bool = True,
         n_samples=sp.samples, base_len=sp.base_len)
     contracts.check_batch(batch, where="dse.sweep")
     return batch
+
+
+def sweep(space: DesignSpace | None = None, with_transient: bool = True,
+          backend: str = "auto",
+          b_chunk: int = transient.DEFAULT_B_CHUNK,
+          sharding=None) -> DesignBatch:
+    """Score a whole `DesignSpace` in one vectorized pass -> `DesignBatch`.
+
+    All metrics are computed as flat (B,) arrays over the lowered space;
+    the transient row-cycle times come from ONE chunked pass through the
+    fused engine (`transient.simulate_row_cycle_many` on the lowered
+    operand batch) — never a per-combo transient call.  Internally this
+    is `plan_sweep` -> fused dispatch -> `finalize_sweep`; the split is
+    public so a warm serving engine (`serving.dse_service`) can pack many
+    plans into one shared dispatch and finalize each identically.
+
+    `sharding` (a `jax.sharding.Mesh` or `NamedSharding`) distributes
+    that fused dispatch over a device mesh instead — each device (and
+    each host under multi-process JAX) evaluates its own slab of the
+    grid via `repro.launch.shard`, with results bit-identical to the
+    single-host path (which remains the equivalence oracle).
+    """
+    if sharding is not None and not with_transient:
+        raise ValueError(
+            "sharding= only distributes the fused transient dispatch; a "
+            "with_transient=False sweep is host-side array ops with "
+            "nothing to shard — pass sharding=None")
+    plan = plan_sweep(space, with_transient=with_transient)
+    res = None
+    if plan.operands is not None:
+        if sharding is not None:
+            from ..launch import shard
+            res = shard.simulate_row_cycle_sharded(
+                plan.operands, sharding, backend=backend, b_chunk=b_chunk)
+        else:
+            res = simulate_row_cycle_many(plan.operands, backend=backend,
+                                          b_chunk=b_chunk)
+    return finalize_sweep(plan, res)
 
 
 # ---------------------------------------------------------------------------
@@ -197,20 +265,38 @@ def pareto_mask(batch: DesignBatch, require_feasible: bool = True,
     return cand & ~dominated
 
 
-def _as_batch(points_or_batch):
+def as_batch(points_or_batch) -> DesignBatch:
+    """Normalize any selection input to a `DesignBatch`.
+
+    THE compatibility adapter of the selection layer: a `DesignBatch`
+    passes through untouched; a legacy `list[DesignPoint]` (or any
+    iterable of point-shaped objects) is bridged via
+    `DesignBatch.from_points`.  `pareto_front` / `best_design` are
+    batch-native internally and use this adapter at their boundary —
+    list-in/list-out back-compat lives here and nowhere else.
+    """
     if isinstance(points_or_batch, DesignBatch):
-        return points_or_batch, None
-    points = list(points_or_batch)
-    return DesignBatch.from_points(points), points
+        return points_or_batch
+    return DesignBatch.from_points(list(points_or_batch))
+
+
+def _legacy_points(points_or_batch):
+    """The list half of the back-compat boundary: the materialized legacy
+    list when the caller passed one (so outputs keep list form), else
+    None for the batch-native path."""
+    if isinstance(points_or_batch, DesignBatch):
+        return None
+    return list(points_or_batch)
 
 
 def pareto_front(points_or_batch, require_feasible: bool = True,
                  extra_maximize=(), extra_minimize=()):
     """Non-dominated set.  `DesignBatch` in -> filtered `DesignBatch` out;
-    legacy `list[DesignPoint]` in -> list out (order preserved).  Extra
-    (B,) objective columns (e.g. an MC yield column) pass through to
-    `pareto_mask`."""
-    batch, points = _as_batch(points_or_batch)
+    legacy `list[DesignPoint]` in -> list out (order preserved), bridged
+    through the `as_batch` adapter.  Extra (B,) objective columns (e.g.
+    an MC yield column) pass through to `pareto_mask`."""
+    points = _legacy_points(points_or_batch)
+    batch = as_batch(points_or_batch if points is None else points)
     mask = np.asarray(pareto_mask(batch, require_feasible,
                                   extra_maximize=extra_maximize,
                                   extra_minimize=extra_minimize))
@@ -232,7 +318,8 @@ def best_design(points_or_batch,
     column or defaults to the batch's `corners["yield_frac"]` (set by
     `DesignBatch.mc_summary`).
     """
-    batch, points = _as_batch(points_or_batch)
+    points = _legacy_points(points_or_batch)
+    batch = as_batch(points_or_batch if points is None else points)
     cand = (np.asarray(batch.valid) & np.asarray(batch.feasible)
             & (np.asarray(batch.density_gb_mm2) >= density_target - 1e-9))
     if min_yield is not None:
@@ -307,8 +394,13 @@ def sweep_combos(layer_grid: np.ndarray) -> list[tuple[TechCal, str, np.ndarray]
 
     Deprecated: capability flags on each registered `TechCal` drive this
     now (no name-based special cases); new code should build a
-    `DesignSpace` instead.
+    `DesignSpace` instead.  Removal timeline: docs/api.md.
     """
+    warnings.warn(
+        "dse.sweep_combos is deprecated and will be removed (see "
+        "docs/api.md for the timeline); build a DesignSpace "
+        "(DesignSpace.paper_grid / product) instead",
+        DeprecationWarning, stacklevel=2)
     combos: list[tuple[TechCal, str, np.ndarray]] = []
     for tech in TECHS.values():
         schemes = tech.allowed_schemes or tuple(SCHEMES)
@@ -326,8 +418,18 @@ def full_sweep(layer_grid: np.ndarray | None = None,
     Deprecated compatibility shim: equivalent to
     `sweep(DesignSpace.paper_grid(layer_grid)).to_points()`.  One batched
     fused-engine pass computes every transient, exactly like `sweep`.
+    Removal timeline: docs/api.md.
     """
+    warnings.warn(
+        "dse.full_sweep is deprecated and will be removed (see docs/api.md "
+        "for the timeline); use dse.sweep(DesignSpace.paper_grid(...)) and "
+        "consume the DesignBatch columns",
+        DeprecationWarning, stacklevel=2)
     grid = None if layer_grid is None else tuple(
         float(x) for x in np.asarray(layer_grid).reshape(-1))
     space = DesignSpace.paper_grid(layer_grid=grid)
-    return sweep(space, with_transient=with_transient).to_points()
+    with warnings.catch_warnings():
+        # the shim IS the deprecated surface; its internal to_points call
+        # must not double-warn the caller
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return sweep(space, with_transient=with_transient).to_points()

@@ -373,6 +373,21 @@ def result_from_events(operands: FusedOperands,
         dv_sense_v=evt[:, 1], traces={}, t_fire_ns=evt[:, 0])
 
 
+def row_cycle_events(operands: FusedOperands, backend: str = "auto",
+                     b_chunk: int = DEFAULT_B_CHUNK) -> jnp.ndarray:
+    """Raw fused-engine event columns for a lowered operand batch -> (B, 4).
+
+    The pre-rollup view of `simulate_row_cycle_lowered`: one chunked pass
+    through the fused engine, no `_regen_and_totals`, no replica
+    de-interleave.  This is the serving layer's packing seam — many
+    requests' operand batches can be concatenated, dispatched once, and
+    the event rows sliced back per request before each request's own
+    `result_from_events` rollup (which is where replica pairs collapse).
+    """
+    evt, _ = _row_cycle_fused_chunked(operands[:6], backend, b_chunk)
+    return evt
+
+
 def simulate_row_cycle_lowered(operands: FusedOperands,
                                backend: str = "auto",
                                b_chunk: int = DEFAULT_B_CHUNK) -> RowCycleResult:

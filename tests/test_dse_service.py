@@ -1,0 +1,327 @@
+"""Co-design-as-a-service engine (PR 8).
+
+Covers the serving subsystem's contract:
+
+1. Micro-batch windows: >= 2 concurrent clients' mixed sweep/yield
+   queries pack into ONE shared fused dispatch per (replica-mode) group,
+   and each demuxed `DesignBatch` is bit-identical to the client calling
+   `dse.sweep` directly.
+2. LRU memo: hit/miss/eviction accounting, corner-hash sensitivity
+   (spaces differing in any corner/MC value never collide), and
+   same-key responses bit-identical to a fresh sweep.
+3. Streaming: chunked partial results concat back to the monolithic
+   sweep; MC spaces are rejected (draws depend on the base length).
+4. Batch helpers (`slice_rows`/`concat`) and the `as_batch` adapter the
+   batch-native API cleanup hangs on, plus the legacy-view
+   DeprecationWarnings.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import dse, transient
+from repro.core.batch import ARRAY_FIELDS, DesignBatch, DesignPoint
+from repro.core.space import DesignSpace
+from repro.serving.dse_service import DSEService, Query, request_key
+
+S_A = DesignSpace.product(techs=["aos"], layers=(87, 137))
+S_B = DesignSpace.product(techs=["si"], layers=(87,))
+S_MC = DesignSpace.product(techs=["aos"], layers=(87,)).with_mc(
+    samples=8, key=5)
+
+
+def assert_batches_identical(a: DesignBatch, b: DesignBatch):
+    """NaN-aware bit-identity across every array field, corner channel
+    and the static aux data."""
+    assert a.tech_names == b.tech_names
+    assert a.scheme_names == b.scheme_names
+    assert a.n_samples == b.n_samples
+    # base_len 0 is the "= len" sentinel, so compare the effective value
+    assert (a.base_len or len(a)) == (b.base_len or len(b))
+    assert set(a.corners) == set(b.corners)
+
+    def eq(x, y):
+        x, y = np.asarray(x), np.asarray(y)
+        if x.dtype.kind == "f":
+            return ((x == y) | (np.isnan(x) & np.isnan(y))).all()
+        return (x == y).all()
+
+    for f in ARRAY_FIELDS:
+        assert eq(getattr(a, f), getattr(b, f)), f
+    for k in a.corners:
+        assert eq(a.corners[k], b.corners[k]), f"corners[{k}]"
+
+
+@pytest.fixture
+def svc():
+    return DSEService(window_ms=0.0)
+
+
+@pytest.fixture
+def count_dispatches(monkeypatch):
+    """Count the service's packed fused dispatches (the serving seam —
+    direct `dse.sweep` calls go through `simulate_row_cycle_many` and
+    are not counted)."""
+    calls = []
+    orig = transient.row_cycle_events
+
+    def counting(*a, **k):
+        calls.append(1)
+        return orig(*a, **k)
+
+    monkeypatch.setattr(transient, "row_cycle_events", counting)
+    return calls
+
+
+class TestMicroBatchWindow:
+    def test_two_clients_share_one_dispatch(self, svc, count_dispatches):
+        fa, fb = svc.submit(S_A), svc.submit(S_B)
+        assert svc.flush() == 2
+        assert len(count_dispatches) == 1
+        assert_batches_identical(fa.result(timeout=0).batch, dse.sweep(S_A))
+        assert_batches_identical(fb.result(timeout=0).batch, dse.sweep(S_B))
+
+    def test_mixed_sweep_yield_one_dispatch(self, svc, count_dispatches):
+        fa = svc.submit(S_A)
+        fy = svc.submit(S_MC, kind="yield", spec={"margin_mv": 5.0})
+        svc.flush()
+        assert len(count_dispatches) == 1
+        ry = fy.result(timeout=0)
+        assert_batches_identical(ry.batch, dse.sweep(S_MC))
+        assert "yield_frac" in ry.summary.corners
+        assert len(ry.summary) == len(S_MC) // 8
+        assert_batches_identical(fa.result(timeout=0).batch, dse.sweep(S_A))
+
+    def test_replica_mode_gets_own_dispatch(self, svc, count_dispatches):
+        s_rep = S_A.with_replica()
+        fa, fr = svc.submit(S_A), svc.submit(s_rep)
+        svc.flush()
+        # replica operands interleave [replica, main] rows, so the two
+        # modes cannot share a slab: one dispatch per group
+        assert len(count_dispatches) == 2
+        assert_batches_identical(fa.result(timeout=0).batch, dse.sweep(S_A))
+        assert_batches_identical(fr.result(timeout=0).batch,
+                                 dse.sweep(s_rep))
+
+    def test_identical_queries_coalesce(self, svc, count_dispatches):
+        f1, f2 = svc.submit(S_A), svc.submit(S_A)
+        svc.flush()
+        assert len(count_dispatches) == 1
+        st = svc.stats()
+        assert st["memo"]["coalesced"] == 1
+        assert st["memo"]["misses"] == 1
+        assert_batches_identical(f1.result(timeout=0).batch,
+                                 f2.result(timeout=0).batch)
+
+    def test_background_dispatcher_serves_threads(self):
+        out = {}
+        barrier = threading.Barrier(2)
+
+        def client(name, space, service):
+            barrier.wait()
+            out[name] = service.sweep(space, timeout=60.0)
+
+        with DSEService(window_ms=25.0) as service:
+            threads = [threading.Thread(target=client,
+                                        args=(n, s, service))
+                       for n, s in (("a", S_A), ("b", S_B))]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            st = service.stats()
+        assert st["windows"] >= 1 and st["requests"] == 2
+        assert_batches_identical(out["a"], dse.sweep(S_A))
+        assert_batches_identical(out["b"], dse.sweep(S_B))
+
+    def test_bad_request_fails_only_its_own_future(self, svc):
+        bad = DesignSpace.product(techs=["aos"], layers=(87,)) \
+            .with_corners(not_an_axis=(1.0,))
+        fb, fa = svc.submit(bad), svc.submit(S_A)
+        svc.flush()
+        with pytest.raises(ValueError, match="unsupported corner axes"):
+            fb.result(timeout=0)
+        assert_batches_identical(fa.result(timeout=0).batch, dse.sweep(S_A))
+        assert svc.stats()["errors"] == 1
+
+
+class TestMemo:
+    def test_repeat_answers_from_memo(self, svc, count_dispatches):
+        first = svc.sweep(S_A)
+        f = svc.submit(S_A)
+        svc.flush()
+        r = f.result(timeout=0)
+        assert r.memo_hit
+        assert len(count_dispatches) == 1          # no re-dispatch
+        # the memoized response stays bit-identical to a fresh sweep
+        assert_batches_identical(r.batch, dse.sweep(S_A))
+        assert_batches_identical(r.batch, first)
+
+    def test_corner_values_never_collide(self, svc, count_dispatches):
+        base = DesignSpace.product(techs=["aos"], layers=(87,))
+        c1 = base.with_corners(rh_toggles=(1e5,))
+        c2 = base.with_corners(rh_toggles=(3e5,))
+        assert request_key(c1) != request_key(c2)
+        svc.sweep(c1)
+        f = svc.submit(c2)
+        svc.flush()
+        r = f.result(timeout=0)
+        assert not r.memo_hit
+        assert len(count_dispatches) == 2
+        assert np.asarray(r.batch.corners["rh_toggles"])[0] == 3e5
+
+    def test_mc_key_and_flags_partition_the_memo(self):
+        base = DesignSpace.product(techs=["aos"], layers=(87,))
+        keys = {request_key(base),
+                request_key(base, with_transient=False),
+                request_key(base.with_replica()),
+                request_key(base.with_mc(samples=8, key=0)),
+                request_key(base.with_mc(samples=8, key=1)),
+                request_key(base.with_mc(samples=16, key=0))}
+        assert len(keys) == 6
+
+    def test_lru_eviction(self, count_dispatches):
+        service = DSEService(window_ms=0.0, memo_entries=2)
+        service.sweep(S_A)
+        service.sweep(S_B)
+        service.sweep(S_A)                         # touch A: B becomes LRU
+        s_c = DesignSpace.product(techs=["d1b"])
+        service.sweep(s_c)                         # evicts B
+        st = service.stats()
+        assert st["memo"]["evictions"] == 1
+        assert st["memo"]["entries"] == 2
+        n = len(count_dispatches)
+        assert service.submit(S_B) and service.flush() == 1
+        assert len(count_dispatches) == n + 1      # B was evicted: re-dispatch
+        # re-inserting B pushed A out (LRU after the C insert); C survived
+        n = len(count_dispatches)
+        f = service.submit(s_c)
+        service.flush()
+        assert f.result(timeout=0).memo_hit
+        assert len(count_dispatches) == n
+        assert service.stats()["memo"]["evictions"] == 2
+
+    def test_memo_disabled(self, count_dispatches):
+        service = DSEService(window_ms=0.0, memo_entries=0)
+        service.sweep(S_A)
+        service.sweep(S_A)
+        assert len(count_dispatches) == 2
+        assert service.stats()["memo"]["entries"] == 0
+
+
+class TestStreaming:
+    def test_chunks_concat_to_monolithic_sweep(self, svc):
+        space = DesignSpace.product(techs=["aos", "si"], layers=(87, 137))
+        chunks = list(svc.sweep_stream(space, chunk_rows=4))
+        assert len(chunks) > 1
+        for c in chunks:
+            assert_batches_identical(c.response.batch, dse.sweep(c.space))
+        merged = DesignBatch.concat([c.response.batch for c in chunks])
+        assert_batches_identical(merged, dse.sweep(space))
+
+    def test_restream_hits_memo(self, svc, count_dispatches):
+        space = DesignSpace.product(techs=["aos"], layers=(87, 137))
+        list(svc.sweep_stream(space, chunk_rows=2))
+        n = len(count_dispatches)
+        again = list(svc.sweep_stream(space, chunk_rows=2))
+        assert len(count_dispatches) == n
+        assert all(c.response.memo_hit for c in again)
+        assert svc.stats()["chunks_streamed"] == 2 * len(again)
+
+    def test_mc_space_rejected(self, svc):
+        with pytest.raises(ValueError, match="sweep_stream cannot chunk"):
+            next(iter(svc.sweep_stream(S_MC)))
+
+
+class TestQueryValidation:
+    def test_bad_kind(self):
+        with pytest.raises(ValueError, match="unknown query kind"):
+            Query.make(S_A, kind="mystery")
+
+    def test_yield_needs_mc(self):
+        with pytest.raises(ValueError, match="needs a Monte-Carlo space"):
+            Query.make(S_A, kind="yield")
+
+    def test_bad_spec_key(self):
+        with pytest.raises(ValueError, match="unknown spec key"):
+            Query.make(S_MC, kind="yield", spec={"margin_Mv": 5.0})
+
+    def test_spec_only_for_yield(self):
+        with pytest.raises(ValueError, match="only applies to yield"):
+            Query.make(S_A, kind="sweep", spec={"margin_mv": 5.0})
+
+    def test_space_type_checked(self):
+        with pytest.raises(TypeError, match="needs a DesignSpace"):
+            Query.make("aos")
+
+
+class TestBatchHelpers:
+    def test_slice_concat_roundtrip(self):
+        batch = dse.sweep(S_A)
+        parts = [batch.slice_rows(0, 3), batch.slice_rows(3, len(batch))]
+        assert len(parts[0]) == 3
+        merged = DesignBatch.concat(parts)
+        assert_batches_identical(merged, batch)
+
+    def test_slice_bounds_checked(self):
+        batch = dse.sweep(S_A)
+        with pytest.raises(ValueError):
+            batch.slice_rows(0, len(batch) + 1)
+        with pytest.raises(ValueError):
+            batch.slice_rows(-1, 2)
+
+    def test_concat_remaps_name_tables(self):
+        a, b = dse.sweep(S_A), dse.sweep(S_B)
+        merged = DesignBatch.concat([a, b])
+        assert len(merged) == len(a) + len(b)
+        decode = lambda bt: [bt.tech_names[i]
+                             for i in np.asarray(bt.tech_idx)]
+        assert decode(merged) == decode(a) + decode(b)
+        schemes = lambda bt: [bt.scheme_names[i]
+                              for i in np.asarray(bt.scheme_idx)]
+        assert schemes(merged) == schemes(a) + schemes(b)
+
+    def test_concat_rejects_mc_and_mismatched_corners(self):
+        mc = dse.sweep(S_MC)
+        with pytest.raises(ValueError, match="n_samples == 1"):
+            DesignBatch.concat([mc, mc])
+        plain = dse.sweep(S_A)
+        cornered = dse.sweep(DesignSpace.product(techs=["aos"],
+                                                 layers=(87,))
+                             .with_corners(rh_toggles=(1e5,)))
+        with pytest.raises(ValueError, match="corner channels"):
+            DesignBatch.concat([plain, cornered])
+
+
+class TestAsBatchAdapter:
+    def test_passthrough_and_points(self):
+        batch = dse.sweep(S_A)
+        assert dse.as_batch(batch) is batch
+        with pytest.warns(DeprecationWarning):
+            pts = batch.to_points()
+        rebuilt = dse.as_batch(pts)
+        assert isinstance(rebuilt, DesignBatch)
+        assert len(rebuilt) == len(batch)
+
+    def test_pareto_front_list_in_list_out(self):
+        batch = dse.sweep(S_A)
+        with pytest.warns(DeprecationWarning):
+            pts = batch.to_points()
+        front_pts = dse.pareto_front(pts)
+        front_batch = dse.pareto_front(batch)
+        assert all(isinstance(p, DesignPoint) for p in front_pts)
+        assert isinstance(front_batch, DesignBatch)
+        assert len(front_pts) == len(front_batch)
+
+
+class TestDeprecations:
+    def test_legacy_views_warn(self):
+        with pytest.warns(DeprecationWarning, match="full_sweep is deprecated"):
+            dse.full_sweep(layer_grid=(87,), with_transient=False)
+        with pytest.warns(DeprecationWarning,
+                          match="sweep_combos is deprecated"):
+            dse.sweep_combos(layer_grid=(87,))
+        with pytest.warns(DeprecationWarning, match="to_points is deprecated"):
+            dse.sweep(S_B).to_points()

@@ -1,0 +1,113 @@
+"""`repro.launch.serve` CLI: request validation, structured errors and
+the 0/1/2 exit-code convention (PR 8 bugfix).
+
+The launcher must never die with a raw traceback on malformed input:
+every rejection is a machine-readable `{"error": ...}` record on stderr
+plus exit code 2 (`bench_check`'s "malformed record" convention); an
+engine-side failure while serving a well-formed request exits 1; a fully
+served run exits 0 with one JSON summary line per request.
+"""
+
+import json
+
+import pytest
+
+from repro.launch import serve
+from repro.launch.serve import (EXIT_BAD_REQUEST, EXIT_FAIL, EXIT_OK,
+                                RequestError, parse_request)
+
+
+class TestParseRequest:
+    def test_minimal_defaults(self):
+        kind, space, spec = parse_request({"techs": ["aos"], "layers": [87]})
+        assert kind == "sweep" and spec == {}
+        assert len(space) > 0
+
+    def test_full_request(self):
+        kind, space, spec = parse_request({
+            "kind": "yield", "techs": ["aos"], "layers": [87, 137],
+            "corners": {"rh_toggles": [1e5, 3e5]},
+            "mc": {"samples": 8, "key": 3}, "replica": True,
+            "spec": {"margin_mv": 5.0}})
+        assert kind == "yield"
+        assert space.mc is not None and space.mc.samples == 8
+        assert space.replica
+        assert dict(space.corner_axes)["rh_toggles"] == (1e5, 3e5)
+        assert spec == {"margin_mv": 5.0}
+
+    @pytest.mark.parametrize("obj,msg", [
+        ([1, 2], "must be a JSON object"),
+        ({"bogus": 1}, "unknown request key"),
+        ({"techs": []}, "non-empty list"),
+        ({"techs": ["not_a_tech"]}, "bad tech"),
+        ({"schemes": ["not_a_scheme"]}, "bad scheme"),
+        ({"layers": [0]}, "positive integers"),
+        ({"layers": [4.5]}, "positive integers"),
+        ({"mc": {"key": 1}}, "'samples'"),
+        ({"corners": "hot"}, "'corners' must be"),
+        ({"spec": ["margin_mv"]}, "'spec' must be"),
+        ({"mc": {"samples": 8, "wat": 1}}, "invalid request"),
+    ])
+    def test_rejections(self, obj, msg):
+        with pytest.raises(RequestError, match=msg):
+            parse_request(obj)
+
+
+class TestExitCodes:
+    def test_served_ok(self, capsys):
+        rc = serve.main(["--request",
+                         '{"kind": "sweep", "techs": ["aos"],'
+                         ' "layers": [87]}', "--stats"])
+        assert rc == EXIT_OK
+        lines = [json.loads(ln)
+                 for ln in capsys.readouterr().out.splitlines()]
+        assert lines[0]["rows"] > 0 and lines[0]["kind"] == "sweep"
+        assert lines[-1]["stats"]["requests"] == 1
+
+    def test_malformed_json_exits_2(self, capsys):
+        rc = serve.main(["--request", "{not json"])
+        assert rc == EXIT_BAD_REQUEST
+        err = json.loads(capsys.readouterr().err.strip())
+        assert err["error"]["code"] == "bad_request"
+
+    def test_unknown_tech_exits_2(self, capsys):
+        rc = serve.main(["--request", '{"techs": ["zzz"]}'])
+        assert rc == EXIT_BAD_REQUEST
+        err = json.loads(capsys.readouterr().err.strip())
+        assert err["error"]["code"] == "bad_request"
+        assert err["error"]["request"] == 0
+
+    def test_requests_file_jsonl_and_array(self, tmp_path, capsys):
+        req = {"techs": ["aos"], "layers": [87]}
+        jl = tmp_path / "reqs.jsonl"
+        jl.write_text(json.dumps(req) + "\n")
+        assert serve.main(["--requests-file", str(jl)]) == EXIT_OK
+        arr = tmp_path / "reqs.json"
+        arr.write_text(json.dumps([req]))
+        assert serve.main(["--requests-file", str(arr)]) == EXIT_OK
+        capsys.readouterr()
+        assert serve.main(["--requests-file",
+                           str(tmp_path / "missing.json")]) \
+            == EXIT_BAD_REQUEST
+
+    def test_engine_failure_exits_1(self, capsys, monkeypatch):
+        from repro.core import dse
+
+        def boom(*a, **k):
+            raise RuntimeError("engine fell over")
+
+        monkeypatch.setattr(dse, "plan_sweep", boom)
+        rc = serve.main(["--request", '{"techs": ["aos"], "layers": [87]}'])
+        assert rc == EXIT_FAIL
+        err = json.loads(capsys.readouterr().err.strip())
+        assert err["error"]["code"] == "serve_failed"
+        assert "engine fell over" in err["error"]["message"]
+
+    def test_json_output_file(self, tmp_path, capsys):
+        out = tmp_path / "responses.json"
+        rc = serve.main(["--request", '{"techs": ["aos"], "layers": [87]}',
+                         "--json", str(out)])
+        assert rc == EXIT_OK
+        payload = json.loads(out.read_text())
+        assert payload["responses"][0]["rows"] > 0
+        assert payload["stats"]["dispatches"] >= 0

@@ -32,6 +32,7 @@ from pathlib import Path
 GATED_METRICS = {
     "fused_rc": ("designs_per_s", "replica_designs_per_s"),
     "sharded_sweep": ("per_device.1.points_per_s",),
+    "serve": ("queries_per_s",),
 }
 
 DEFAULT_MAX_REGRESSION = 0.35

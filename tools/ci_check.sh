@@ -69,6 +69,11 @@ JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}" \
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m repro.launch.shard --smoke --expect-devices 8
 
+echo "== serving smoke (2 concurrent clients, 1 shared dispatch, memo) =="
+JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}" \
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.launch.serve --smoke
+
 if [[ "${1:-}" == "--slow" ]]; then
     echo "== slow test tier =="
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q -m slow \
