@@ -7,11 +7,17 @@ ops and summing operand sizes.  Each op is attributed to the mesh axes its
 replica groups span — in particular whether it crosses the pod boundary
 (devices 0..255 vs 256..511), which is what the strapped-collective
 analysis cares about.
+
+The generic HLO-text scanning helpers at the bottom
+(`scan_custom_call_targets` / `scan_f64_mentions` / `scan_constant_bytes`
+/ `scan_host_transfer_ops`) are shared with `tools/flowcheck`'s dispatch
+auditor, which asserts compiled-artifact invariants on the fused engine.
 """
 
 from __future__ import annotations
 
 import re
+import warnings
 from collections import defaultdict
 
 DTYPE_BYTES = {
@@ -23,16 +29,24 @@ DTYPE_BYTES = {
 COLLECTIVE_RE = re.compile(
     r"=\s*(?:\([^)]*\)|(?:[a-z0-9_]+)\[[^\]]*\])?\s*"
     r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start)?\(", re.I)
+    r"(?:-start|-done)?\(", re.I)
 
 SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
 
 
-def _shape_bytes(shape_str: str) -> int:
+def _shape_bytes(shape_str: str, unknown: dict | None = None) -> int:
+    """Total bytes of every typed shape in `shape_str`.
+
+    Shapes whose dtype token is not in `DTYPE_BYTES` contribute 0 bytes;
+    pass `unknown` (a dtype -> count dict) to have them tallied instead of
+    dropped without a trace.
+    """
     total = 0
     for m in SHAPE_RE.finditer(shape_str):
         dt, dims = m.group(1), m.group(2)
         if dt not in DTYPE_BYTES:
+            if unknown is not None:
+                unknown[dt] = unknown.get(dt, 0) + 1
             continue
         n = 1
         if dims:
@@ -49,24 +63,33 @@ def parse_collectives(hlo_text: str, pod_size: int = 256) -> dict:
     Bytes counted = output operand size of each collective op (the payload
     that actually moves once; all-reduce ~2x for ring but roofline uses the
     standard 2(n-1)/n model applied downstream).
+
+    Ops the byte accounting cannot attribute are counted, not dropped:
+    `unknown_dtypes` tallies shape tokens outside `DTYPE_BYTES` (their
+    bytes are missing from the totals — a warning flags the undercount)
+    and `async_done_ops` counts `-done`-form async completions (skipped
+    on purpose: their `-start` halves carry the payload; the count lets a
+    caller cross-check the pairing).
     """
     out = dict(by_type=defaultdict(int), cross_pod_bytes=0,
-               in_pod_bytes=0, ops=0)
+               in_pod_bytes=0, ops=0, async_done_ops=0)
+    unknown: dict[str, int] = {}
     for line in hlo_text.splitlines():
         m = COLLECTIVE_RE.search(line)
         if m is None:
             continue
         op = m.group(1).lower()
         if "-done(" in line:
-            continue  # avoid double counting async pairs
+            out["async_done_ops"] += 1
+            continue  # the paired -start carries the payload bytes
         # output shape: the lhs "x[...] = <shape> op(...)" — take the first
         # shape on the line (the result type)
         head = line.split("=", 1)
         shape_src = head[1] if len(head) > 1 else line
-        nbytes = _shape_bytes(shape_src.split("(", 1)[0])
+        nbytes = _shape_bytes(shape_src.split("(", 1)[0], unknown)
         if nbytes == 0:
             # tuple result: fall back to everything before the op name
-            nbytes = _shape_bytes(shape_src)
+            nbytes = _shape_bytes(shape_src, unknown)
         out["by_type"][op] += nbytes
         out["ops"] += 1
         # replica-group span
@@ -103,4 +126,71 @@ def parse_collectives(hlo_text: str, pod_size: int = 256) -> dict:
             out["in_pod_bytes"] += nbytes
     out["by_type"] = dict(out["by_type"])
     out["total_bytes"] = sum(out["by_type"].values())
+    out["unknown_dtypes"] = unknown
+    if unknown:
+        warnings.warn(
+            f"parse_collectives: {sum(unknown.values())} collective "
+            f"operand shape(s) with dtype(s) {sorted(unknown)} are not in "
+            "DTYPE_BYTES and were excluded from the byte totals — the "
+            "roofline collective bytes are an undercount",
+            stacklevel=2)
+    if out["async_done_ops"]:
+        warnings.warn(
+            f"parse_collectives: skipped {out['async_done_ops']} "
+            "'-done'-form async completion op(s); their '-start' halves "
+            "carry the payload bytes (see async_done_ops in the result)",
+            stacklevel=2)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Generic compiled-artifact scans (shared with tools/flowcheck)
+# ---------------------------------------------------------------------------
+
+CUSTOM_CALL_RE = re.compile(r'custom_call_target="([^"]+)"')
+F64_RE = re.compile(r"\bf64\[")
+CONSTANT_RE = re.compile(r"=\s*([^=]*?)\bconstant\(")
+HOST_TRANSFER_RE = re.compile(r"\b(infeed|outfeed|send|send-done|"
+                              r"recv|recv-done)\(")
+
+
+def scan_custom_call_targets(hlo_text: str) -> dict:
+    """custom_call_target -> occurrence count over the HLO text."""
+    out: dict[str, int] = {}
+    for m in CUSTOM_CALL_RE.finditer(hlo_text):
+        out[m.group(1)] = out.get(m.group(1), 0) + 1
+    return out
+
+
+def scan_f64_mentions(hlo_text: str, limit: int = 8) -> list:
+    """Lines mentioning an f64 shape (silent-promotion probe); at most
+    `limit` samples, stripped."""
+    hits = []
+    for line in hlo_text.splitlines():
+        if F64_RE.search(line):
+            hits.append(line.strip())
+            if len(hits) >= limit:
+                break
+    return hits
+
+
+def scan_constant_bytes(hlo_text: str, min_bytes: int = 0) -> list:
+    """(nbytes, stripped line) per HLO constant instruction with
+    nbytes >= min_bytes, largest first."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = CONSTANT_RE.search(line)
+        if m is None:
+            continue
+        nbytes = _shape_bytes(m.group(1))
+        if nbytes >= min_bytes:
+            out.append((nbytes, line.strip()))
+    return sorted(out, key=lambda x: -x[0])
+
+
+def scan_host_transfer_ops(hlo_text: str) -> dict:
+    """Host-transfer op name -> count (infeed/outfeed/send/recv)."""
+    out: dict[str, int] = {}
+    for m in HOST_TRANSFER_RE.finditer(hlo_text):
+        out[m.group(1)] = out.get(m.group(1), 0) + 1
     return out

@@ -172,6 +172,20 @@ class DSEService:
     (also usable as a context manager); without it every blocking call
     serves its own window inline and `submit`/`flush` give deterministic
     window control.
+
+    Lock discipline (checked by `tools/flowcheck --only locks`, and the
+    contract documented in docs/serving.md):
+
+    - `self._cv` (Condition) protects the request-side state: `_queue`,
+      `_stats`, `_running`, `_thread`.  Nothing blocking — in particular
+      no JAX dispatch — ever runs under it.
+    - `self._dispatch_lock` (Lock) serializes serving and protects the
+      memo (`_memo`).  The only permitted nesting is
+      `_dispatch_lock -> _cv` (stats updates inside a serve); the
+      reverse order never occurs, so the pair cannot deadlock.
+    - shared attributes are always accessed as `self.<attr>` under the
+      owning lock — never aliased into a local first — so every access
+      is visible to the static checker.
     """
 
     def __init__(self, window_ms: float = 3.0, memo_entries: int = 64,
@@ -221,7 +235,7 @@ class DSEService:
         """Blocking sweep query -> `DesignBatch` (the `dse.sweep`
         equivalent, served through the shared engine)."""
         fut = self.submit(space, kind="sweep", with_transient=with_transient)
-        if not self._running:
+        if not self._dispatcher_running():
             self.flush()
         return fut.result(timeout=timeout).batch
 
@@ -234,7 +248,7 @@ class DSEService:
         `corners["yield_frac"]` / `corners["ess"]`).
         """
         fut = self.submit(space, kind="yield", spec=spec)
-        if not self._running:
+        if not self._dispatcher_running():
             self.flush()
         return fut.result(timeout=timeout)
 
@@ -265,7 +279,7 @@ class DSEService:
             raise ValueError(f"chunk_rows must be >= 1, got {chunk_rows}")
         for i, sub in enumerate(_split_space(space, chunk_rows)):
             fut = self.submit(sub, kind="sweep")
-            if not self._running:
+            if not self._dispatcher_running():
                 self.flush()
             resp = fut.result(timeout=timeout)
             with self._cv:
@@ -278,20 +292,25 @@ class DSEService:
         first real client never pays the jit trace."""
         space = space if space is not None else DesignSpace.paper_targets()
         fut = self.submit(space, kind="sweep")
-        if not self._running:
+        if not self._dispatcher_running():
             self.flush()
         return fut.result(timeout=None)
 
     # --------------------------------------------------------- lifecycle --
+    def _dispatcher_running(self) -> bool:
+        with self._cv:
+            return self._running
+
     def start(self) -> "DSEService":
         """Launch the background dispatcher (idempotent)."""
         with self._cv:
             if self._running:
                 return self
             self._running = True
-        self._thread = threading.Thread(target=self._dispatch_loop,
-                                        name="dse-service", daemon=True)
-        self._thread.start()
+            thread = threading.Thread(target=self._dispatch_loop,
+                                      name="dse-service", daemon=True)
+            self._thread = thread
+        thread.start()
         return self
 
     def stop(self) -> None:
@@ -300,10 +319,10 @@ class DSEService:
             if not self._running:
                 return
             self._running = False
+            thread, self._thread = self._thread, None
             self._cv.notify_all()
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+        if thread is not None:
+            thread.join()
 
     def __enter__(self) -> "DSEService":
         return self.start()
@@ -334,31 +353,35 @@ class DSEService:
             try:
                 self._serve_window(pending)
             except Exception as e:       # safety net; errors surface via
-                for p in pending:        # the futures, never kill the loop
-                    if not p.future.done():
-                        self._stats.errors += 1
-                        p.future.set_exception(e)
+                failed = [p for p in pending if not p.future.done()]
+                with self._cv:           # the futures, never kill the loop
+                    self._stats.errors += len(failed)
+                for p in failed:
+                    p.future.set_exception(e)
         return len(pending)
 
     def _serve_window(self, pending: list[_Pending]) -> None:
-        st = self._stats
-        st.windows += 1
         ready: list[tuple[_Pending, DesignBatch, bool]] = []
         misses: OrderedDict[tuple, list[_Pending]] = OrderedDict()
+        hits = coalesced = rows_requested = 0
         for p in pending:
-            st.rows_requested += len(p.query.space)
+            rows_requested += len(p.query.space)
             cached = self._memo_get(p.query.key)
             if cached is not None:
-                st.memo_hits += 1
+                hits += 1
                 ready.append((p, cached, True))
             else:
                 group = misses.setdefault(p.query.key, [])
                 if group:
                     # identical concurrent queries coalesce onto one plan
-                    st.coalesced += 1
-                else:
-                    st.memo_misses += 1
+                    coalesced += 1
                 group.append(p)
+        with self._cv:
+            self._stats.windows += 1
+            self._stats.rows_requested += rows_requested
+            self._stats.memo_hits += hits
+            self._stats.memo_misses += len(misses)
+            self._stats.coalesced += coalesced
 
         # plan every unique miss (a bad request fails only its own
         # group), then pack compatible operand batches into shared
@@ -383,8 +406,9 @@ class DSEService:
             packed = _pack_operands(parts)
             evt = transient.row_cycle_events(packed, backend=self.backend,
                                              b_chunk=self.b_chunk)
-            st.dispatches += 1
-            st.rows_dispatched += int(packed.c.shape[0])
+            with self._cv:
+                self._stats.dispatches += 1
+                self._stats.rows_dispatched += int(packed.c.shape[0])
             lo = 0
             for k, part in zip(keys, parts):
                 b = int(part.c.shape[0])
@@ -407,12 +431,14 @@ class DSEService:
             try:
                 p.future.set_result(self._respond(p, batch, was_hit))
             except Exception as e:
-                st.errors += 1
+                with self._cv:
+                    self._stats.errors += 1
                 if not p.future.done():
                     p.future.set_exception(e)
 
     def _fail(self, group: list[_Pending], exc: Exception) -> None:
-        self._stats.errors += len(group)
+        with self._cv:
+            self._stats.errors += len(group)
         for p in group:
             if not p.future.done():
                 p.future.set_exception(exc)
@@ -423,13 +449,17 @@ class DSEService:
         if p.query.kind == "yield":
             summary = batch.mc_summary(**dict(p.query.spec))
         elapsed_ms = (time.perf_counter() - p.t0) * 1e3
-        st = self._stats
-        st.total_latency_ms += elapsed_ms
-        st.max_latency_ms = max(st.max_latency_ms, elapsed_ms)
+        with self._cv:
+            self._stats.total_latency_ms += elapsed_ms
+            self._stats.max_latency_ms = max(self._stats.max_latency_ms,
+                                             elapsed_ms)
         return Response(batch=batch, summary=summary, memo_hit=was_hit,
                         elapsed_ms=elapsed_ms)
 
     # -------------------------------------------------------------- memo --
+    # `_memo_get`/`_memo_put` run on the serving path, which already holds
+    # `_dispatch_lock` (flush acquires it around `_serve_window`); the
+    # public `memo_clear` takes it explicitly.
     def _memo_get(self, key: tuple) -> DesignBatch | None:
         batch = self._memo.get(key)
         if batch is not None:
@@ -441,14 +471,19 @@ class DSEService:
             return
         self._memo[key] = batch
         self._memo.move_to_end(key)
+        evicted = 0
         while len(self._memo) > self.memo_entries:
             self._memo.popitem(last=False)
-            self._stats.memo_evictions += 1
+            evicted += 1
+        if evicted:
+            with self._cv:
+                self._stats.memo_evictions += evicted
 
     def memo_clear(self) -> int:
         """Drop every memoized result; returns how many were dropped."""
-        n = len(self._memo)
-        self._memo.clear()
+        with self._dispatch_lock:
+            n = len(self._memo)
+            self._memo.clear()
         return n
 
     # ------------------------------------------------------------- stats --
@@ -457,6 +492,8 @@ class DSEService:
         with self._cv:
             st = replace(self._stats)
             queued = len(self._queue)
+        with self._dispatch_lock:
+            memo_entries = len(self._memo)
         lookups = st.memo_hits + st.memo_misses
         served = st.memo_hits + st.memo_misses + st.coalesced
         return {
@@ -467,7 +504,7 @@ class DSEService:
             "windows": st.windows,
             "dispatches": st.dispatches,
             "memo": {
-                "entries": len(self._memo),
+                "entries": memo_entries,
                 "capacity": self.memo_entries,
                 "hits": st.memo_hits,
                 "misses": st.memo_misses,

@@ -316,6 +316,83 @@ class TestAsBatchAdapter:
         assert len(front_pts) == len(front_batch)
 
 
+class TestThreadStress:
+    """N concurrent clients x M repeated queries against the live
+    dispatcher (REPRO_CHECKS=1 via conftest): every response must stay
+    bit-identical to a direct `dse.sweep`, and the `stats()` counters
+    must reconcile — `requests == memo_hits + dispatched-served`
+    (misses + coalesced), with nothing queued and no errors."""
+
+    N_CLIENTS = 6
+    N_ITERS = 4
+    SPACES = (S_A, S_B,
+              DesignSpace.product(techs=["d1b"], layers=(87,)))
+
+    def _hammer(self, service):
+        results = [[] for _ in range(self.N_CLIENTS)]
+        errors = []
+        barrier = threading.Barrier(self.N_CLIENTS)
+
+        def client(i):
+            try:
+                barrier.wait()
+                for j in range(self.N_ITERS):
+                    k = (i + j) % len(self.SPACES)
+                    results[i].append(
+                        (k, service.sweep(self.SPACES[k], timeout=120.0)))
+            except Exception as e:               # pragma: no cover
+                errors.append(e)
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(self.N_CLIENTS)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert errors == []
+        return results
+
+    def _check_identity(self, results):
+        golden = [dse.sweep(s) for s in self.SPACES]
+        for per_thread in results:
+            assert len(per_thread) == self.N_ITERS
+            for k, batch in per_thread:
+                assert_batches_identical(batch, golden[k])
+
+    def test_stress_memo_on(self):
+        with DSEService(window_ms=2.0, memo_entries=64) as service:
+            results = self._hammer(service)
+            st = service.stats()
+        self._check_identity(results)
+        total = self.N_CLIENTS * self.N_ITERS
+        memo = st["memo"]
+        assert st["requests"] == total
+        # every request is served exactly once: memo hit, dispatched as
+        # a window miss, or coalesced onto a window twin
+        assert memo["hits"] + memo["misses"] + memo["coalesced"] == total
+        # each distinct space misses at least its first lookup
+        assert memo["misses"] >= len(self.SPACES)
+        assert st["queued"] == 0 and st["errors"] == 0
+        assert st["windows"] >= 1 and st["dispatches"] >= 1
+        assert st["rows"]["dispatched"] >= st["dispatches"]
+
+    def test_stress_memo_off(self):
+        with DSEService(window_ms=2.0, memo_entries=0) as service:
+            results = self._hammer(service)
+            st = service.stats()
+        self._check_identity(results)
+        total = self.N_CLIENTS * self.N_ITERS
+        memo = st["memo"]
+        assert st["requests"] == total
+        assert memo["hits"] == 0 and memo["entries"] == 0
+        # with no memo every request is a window miss or a coalesced twin
+        assert memo["misses"] + memo["coalesced"] == total
+        assert st["queued"] == 0 and st["errors"] == 0
+        # all queries are nominal, so each window packs its misses into
+        # one slab: never more dispatches than misses, never zero
+        assert 1 <= st["dispatches"] <= memo["misses"]
+
+
 class TestDeprecations:
     def test_legacy_views_warn(self):
         with pytest.warns(DeprecationWarning, match="full_sweep is deprecated"):

@@ -1,0 +1,180 @@
+"""flowcheck dispatch/retrace auditors (`tools/flowcheck`, FC1xx/FC2xx).
+
+Fast tier: the dispatch recorder's patching seam, the chunk-count
+contract math, and the seeded FC101/FC105 violations (the FC105 check
+pulls only the first finding out of `analyze_bucket`, which needs just
+the trace-only pallas jaxpr — no compile).
+
+Slow tier: the acceptance runs — the full entry-point matrix audits
+clean (>= 8 configs), the retrace matrix neither forks nor re-traces
+the compile cache, and each seeded violation fails the CLI gate naming
+the rule.  These compile fresh jitted wrappers per shape bucket and
+`audit_retrace` clears the global jit cache, so they stay out of the
+budgeted fast tier.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO))
+
+from tools.flowcheck import dispatch, retrace  # noqa: E402
+
+
+class TestChunkMath:
+    def test_chunk_dispatch_counts(self):
+        assert dispatch._chunk_dispatches(64, 64) == 1
+        assert dispatch._chunk_dispatches(65, 64) == 2
+        assert dispatch._chunk_dispatches(128, 64) == 2
+        assert dispatch._chunk_dispatches(129, 64) == 3
+        assert dispatch._chunk_dispatches(2048, 2048) == 1
+
+    def test_entry_matrix_covers_acceptance(self):
+        names = [name for name, _ in dispatch.ENTRY_CONFIGS]
+        assert len(names) >= 8                  # acceptance floor
+        assert len(set(names)) == len(names)
+        retrace_names = [name for name, _ in retrace.matrix()]
+        assert len(set(retrace_names)) == len(retrace_names)
+
+
+def _one_recorded_call():
+    """Run the smallest real entry point under the recorder and return
+    (recorder, the one EngineCall).  Uses the warm default-backend
+    engine, so no fresh compile."""
+    from repro.core import dse
+    from repro.core.space import DesignSpace
+    with dispatch.record_dispatches() as rec:
+        dse.sweep(DesignSpace.product(techs=["aos"], layers=(87,)))
+    assert len(rec.engine_calls) == 1 and rec.sharded_calls == []
+    return rec, rec.engine_calls[0]
+
+
+class TestRecorder:
+    def test_counts_and_restores_the_seam(self):
+        from repro.kernels import ops
+        orig = ops.row_cycle_fused
+        rec, call = _one_recorded_call()
+        assert ops.row_cycle_fused is orig      # seam restored on exit
+        assert rec.orig_engine is orig
+        assert rec.total == 1
+        # the bucket key is hashable and shape-complete (6 operands)
+        assert len(call.shapes) == 6 and len(call.dtypes) == 6
+        assert call.statics[4] in ("auto", "ref", "pallas")
+        assert hash(call.key)
+        b = call.shapes[0][0]
+        from repro.core import transient
+        assert b % transient.B_ALIGN == 0       # padding contract
+
+    def test_bucket_name_is_stable(self):
+        _, call = _one_recorded_call()
+        name = dispatch._bucket_name(call)
+        assert name.startswith(f"B{call.shapes[0][0]}x")
+        assert f"backend={call.statics[4]}" in name
+
+
+class TestSeededFast:
+    def test_extra_dispatch_yields_fc101(self, monkeypatch):
+        """The seeded double-sweep config must produce exactly one FC101
+        naming the dispatch counts; bucket analysis is stubbed out so
+        the fast tier never compiles."""
+        monkeypatch.setattr(dispatch, "analyze_bucket",
+                            lambda call, engine_fn=None: iter(()))
+        pairs, stats = dispatch.audit_dispatch(
+            configs=dispatch.SEEDED_CONFIGS["extra-dispatch"])
+        assert [f.rule for f, _ in pairs] == ["FC101"]
+        f = pairs[0][0]
+        assert f.where == "seeded-extra-dispatch"
+        assert "2 fused dispatch(es)" in f.message
+        assert "contract says 1" in f.message
+        cfg = stats["configs"]["seeded-extra-dispatch"]
+        assert cfg == {"expected": 1, "actual": 2, "sharded": 0}
+
+    def test_double_pallas_engine_yields_fc105(self):
+        """FC105 is the FIRST finding `analyze_bucket` yields and needs
+        only the trace-only pallas jaxpr, so pulling one item off the
+        generator stays compile-free."""
+        _, call = _one_recorded_call()
+        first = next(dispatch.analyze_bucket(
+            call, engine_fn=dispatch.seeded_double_pallas_engine))
+        assert first.rule == "FC105"
+        assert "2 pallas_call" in first.message
+
+    def test_clean_bucket_has_one_pallas_call(self):
+        """Negative twin: the real engine's pallas trace is exactly one
+        kernel launch, so the generator's first finding (if any) is not
+        FC105.  Only the pallas trace is forced."""
+        _, call = _one_recorded_call()
+        gen = dispatch.analyze_bucket(call)
+        first = next(gen, None)
+        assert first is None or first.rule != "FC105"
+
+
+@pytest.mark.slow
+class TestFullAudit:
+    def test_dispatch_matrix_clean(self):
+        """Acceptance: every entry-point config dispatches exactly its
+        contract count and every shape bucket passes FC102-FC105."""
+        pairs, stats = dispatch.audit_dispatch()
+        assert pairs == [], [f.render() for f, _ in pairs]
+        assert len(stats["configs"]) >= 8
+        for name, cfg in stats["configs"].items():
+            assert cfg["actual"] == cfg["expected"], (name, cfg)
+        assert stats["configs"]["sharded-default-mesh"]["sharded"] == 1
+        assert stats["buckets_analyzed"]
+
+    def test_retrace_matrix_clean(self):
+        pairs, stats = retrace.audit_retrace()
+        assert pairs == [], [f.render() for f, _ in pairs]
+        assert stats["cache_entries"] <= stats["distinct_buckets"]
+
+    def test_seeded_extra_dispatch_full(self):
+        """With real bucket analysis the seeded config still reports
+        ONLY FC101 — the bucket itself is healthy."""
+        pairs, _ = dispatch.audit_dispatch(
+            configs=dispatch.SEEDED_CONFIGS["extra-dispatch"])
+        assert [f.rule for f, _ in pairs] == ["FC101"]
+
+    def test_seeded_cache_fork_yields_fc201(self):
+        pairs, stats = retrace.audit_retrace(
+            configs=retrace.matrix()[:1]
+            + retrace.SEEDED_CONFIGS["cache-fork"])
+        rules = [f.rule for f, _ in pairs]
+        assert "FC201" in rules
+        f = next(f for f, _ in pairs if f.rule == "FC201")
+        assert f.where == "seeded-bypass-dispatch"
+        assert "outside the audited seam" in f.message
+
+
+def run_cli(args, cwd=REPO):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.flowcheck", *args],
+        cwd=cwd, env={"PYTHONPATH": str(REPO), "PATH": "/usr/bin:/bin",
+                      "HOME": "/tmp", "JAX_PLATFORMS": "cpu"},
+        capture_output=True, text=True, timeout=600)
+
+
+@pytest.mark.slow
+class TestCLIGate:
+    def test_full_flowcheck_repo_clean(self, tmp_path):
+        out = tmp_path / "report.json"
+        r = run_cli(["--json", str(out)])
+        assert r.returncode == 0, r.stdout + r.stderr
+        report = json.loads(out.read_text())
+        assert report["findings"] == []
+        assert len(report["stats"]["dispatch"]["configs"]) >= 8
+
+    def test_seeded_double_pallas_fails_gate(self):
+        r = run_cli(["--only", "dispatch",
+                     "--seed-violation", "double-pallas"])
+        assert r.returncode == 1, r.stdout + r.stderr
+        assert "FC105" in r.stdout
+
+    def test_seeded_cache_fork_fails_gate(self):
+        r = run_cli(["--only", "retrace", "--seed-violation", "cache-fork"])
+        assert r.returncode == 1, r.stdout + r.stderr
+        assert "FC201" in r.stdout

@@ -1,0 +1,334 @@
+"""flowcheck lock-discipline analyzer (`tools/flowcheck/locks`, FC3xx):
+one positive + one negative fixture per rule, the interprocedural
+held-lock propagation (helpers called under a lock vs thread-entry
+references), the flowcheck pragma/baseline conventions, and the
+acceptance checks that (a) the real serving/runtime tree is clean and
+(b) the seeded lock-free stats write fails the CLI gate naming FC301.
+
+The locks analyzer is stdlib-only (it runs in the jax-free CI lint
+job), so everything here is fast-tier.
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO))
+
+from tools.flowcheck.common import apply_baseline, load_baseline  # noqa: E402
+from tools.flowcheck.locks import DEFAULT_PATHS, LockChecker  # noqa: E402
+
+HEADER = "import threading\n\n\n"
+
+
+def svc_src(body):
+    """Dedent a class-body fixture and prepend the import header."""
+    return HEADER + textwrap.dedent(body)
+
+
+def check(tmp_path, source, name="svc.py"):
+    """Write one fixture file and run the FC3xx checker on it."""
+    path = tmp_path / name
+    path.write_text(source)
+    pairs, suppressed, _ = LockChecker(root=tmp_path).check_paths([path])
+    return pairs, suppressed
+
+
+def rules_of(pairs):
+    return sorted({f.rule for f, _ in pairs})
+
+
+class TestFC301:
+    BARE = svc_src("""\
+        class Svc:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._stats = {}
+
+            def bump(self):
+                self._stats["requests"] = self._stats.get("requests", 0) + 1
+        """)
+
+    def test_bare_access_flagged(self, tmp_path):
+        pairs, _ = check(tmp_path, self.BARE)
+        assert rules_of(pairs) == ["FC301"]
+        f = pairs[0][0]
+        assert "self._stats" in f.message and "no lock held" in f.message
+        assert f.line and pairs[0][1]        # anchored to a source line
+
+    def test_mutator_call_is_a_write(self, tmp_path):
+        pairs, _ = check(tmp_path, svc_src("""\
+            class Svc:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._queue = []
+
+                def push(self, x):
+                    self._queue.append(x)
+            """))
+        assert rules_of(pairs) == ["FC301"]
+        assert "write" in pairs[0][0].message
+
+    def test_locked_access_clean(self, tmp_path):
+        pairs, _ = check(tmp_path, svc_src("""\
+            class Svc:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._stats = {}
+
+                def bump(self):
+                    with self._lock:
+                        self._stats["requests"] = 1
+            """))
+        assert pairs == []
+
+    def test_immutable_config_scalar_exempt(self, tmp_path):
+        pairs, _ = check(tmp_path, svc_src("""\
+            class Svc:
+                def __init__(self, window_ms):
+                    self._lock = threading.Lock()
+                    self.window_ms = float(window_ms)
+
+                def window_s(self):
+                    return self.window_ms / 1e3
+            """))
+        assert pairs == []
+
+
+class TestFC302:
+    ABBA = svc_src("""\
+        class Svc:
+            def __init__(self):
+                self._a = threading.Lock()
+                self._b = threading.Lock()
+                self._items = []
+
+            def one(self):
+                with self._a:
+                    with self._b:
+                        self._items.append(1)
+
+            def two(self):
+                with self._b:
+                    with self._a:
+                        self._items.append(2)
+        """)
+
+    def test_abba_flagged(self, tmp_path):
+        pairs, _ = check(tmp_path, self.ABBA)
+        assert "FC302" in rules_of(pairs)
+        msg = next(f.message for f, _ in pairs if f.rule == "FC302")
+        assert "ABBA" in msg
+
+    def test_consistent_order_clean(self, tmp_path):
+        pairs, _ = check(tmp_path, self.ABBA.replace(
+            "with self._b:\n            with self._a:",
+            "with self._a:\n            with self._b:"))
+        assert pairs == []
+
+
+class TestFC303:
+    def test_dispatch_under_condition_flagged(self, tmp_path):
+        pairs, _ = check(tmp_path, svc_src("""\
+            class Svc:
+                def __init__(self):
+                    self._cv = threading.Condition()
+                    self._queue = []
+
+                def serve(self, plan_sweep, space):
+                    with self._cv:
+                        self._queue.append(plan_sweep(space))
+            """))
+        assert "FC303" in rules_of(pairs)
+        msg = next(f.message for f, _ in pairs if f.rule == "FC303")
+        assert "plan_sweep" in msg and "self._cv" in msg
+
+    def test_future_result_under_condition_flagged(self, tmp_path):
+        pairs, _ = check(tmp_path, svc_src("""\
+            class Svc:
+                def __init__(self):
+                    self._cv = threading.Condition()
+                    self._out = []
+
+                def collect(self, fut):
+                    with self._cv:
+                        self._out.append(fut.result())
+            """))
+        assert "FC303" in rules_of(pairs)
+
+    def test_dispatch_under_plain_lock_clean(self, tmp_path):
+        pairs, _ = check(tmp_path, svc_src("""\
+            class Svc:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._queue = []
+
+                def serve(self, plan_sweep, space):
+                    with self._lock:
+                        self._queue.append(plan_sweep(space))
+            """))
+        assert pairs == []
+
+
+class TestFC304:
+    SPLIT = svc_src("""\
+        class Svc:
+            def __init__(self):
+                self._a = threading.Lock()
+                self._b = threading.Lock()
+                self._stats = {}
+
+            def one(self):
+                with self._a:
+                    self._stats["x"] = 1
+
+            def two(self):
+                with self._b:
+                    self._stats["y"] = 2
+        """)
+
+    def test_split_lock_flagged(self, tmp_path):
+        pairs, _ = check(tmp_path, self.SPLIT)
+        assert rules_of(pairs) == ["FC304"]
+        assert "split-lock" in pairs[0][0].message
+
+    def test_common_lock_clean(self, tmp_path):
+        # both sites hold _a; the extra _b on one site is harmless
+        pairs, _ = check(tmp_path, self.SPLIT.replace(
+            "with self._b:\n            self._stats",
+            "with self._a:\n            with self._b:\n"
+            "                self._stats"))
+        assert pairs == []
+
+
+class TestInterprocedural:
+    def test_helper_called_under_lock_clean(self, tmp_path):
+        pairs, _ = check(tmp_path, svc_src("""\
+            class Svc:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._queue = []
+
+                def push(self, x):
+                    with self._lock:
+                        self._push(x)
+
+                def _push(self, x):
+                    self._queue.append(x)
+            """))
+        assert pairs == []
+
+    def test_thread_target_is_fresh_entry(self, tmp_path):
+        # `Thread(target=self._run)` makes _run a thread entry point with
+        # nothing held, so its bare queue write must be flagged
+        pairs, _ = check(tmp_path, svc_src("""\
+            class Svc:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._queue = []
+                    self._thread = None
+
+                def start(self):
+                    with self._lock:
+                        self._thread = threading.Thread(target=self._run)
+
+                def _run(self):
+                    self._queue.append(1)
+            """))
+        assert rules_of(pairs) == ["FC301"]
+        f = pairs[0][0]
+        assert "_run()" in f.message and "self._queue" in f.message
+
+
+class TestSuppressionAndBaseline:
+    def test_flowcheck_pragma_suppresses(self, tmp_path):
+        src = TestFC301.BARE.replace(
+            '0) + 1', '0) + 1  # flowcheck: disable=FC301  (justified)')
+        pairs, suppressed = check(tmp_path, src)
+        assert pairs == [] and suppressed >= 1
+
+    def test_repro_lint_pragma_does_not_suppress(self, tmp_path):
+        # each tool's pragma tag silences only its own rules
+        src = TestFC301.BARE.replace(
+            '0) + 1', '0) + 1  # repro-lint: disable=FC301')
+        pairs, suppressed = check(tmp_path, src)
+        assert rules_of(pairs) == ["FC301"] and suppressed == 0
+
+    def test_fingerprint_survives_line_shift(self, tmp_path):
+        pairs, _ = check(tmp_path, TestFC301.BARE)
+        fps = [f.fingerprint(text) for f, text in pairs]
+        shifted = TestFC301.BARE.replace(
+            HEADER, HEADER + "# a new header comment\nX = 1\n\n")
+        pairs2, _ = check(tmp_path, shifted)
+        reported, baselined = apply_baseline(pairs2, fps)
+        assert reported == [] and len(baselined) == len(pairs)
+
+    def test_committed_baseline_is_empty(self):
+        fps = load_baseline(REPO / "tools/flowcheck/baseline.json")
+        assert fps == [], ("the committed flowcheck baseline must stay "
+                           "empty — fix or pragma findings instead")
+
+
+class TestRepoClean:
+    def test_default_paths_exist(self):
+        for rel in DEFAULT_PATHS:
+            assert (REPO / rel).is_file(), rel
+
+    def test_serving_and_runtime_are_clean(self):
+        """The lock-discipline contract documented on DSEService holds:
+        no bare shared access, no ABBA nesting, no dispatch under the
+        CV, no split-lock protection."""
+        pairs, _, n_classes = LockChecker(root=REPO).check_paths()
+        assert n_classes >= 2
+        assert pairs == [], [f.render() for f, _ in pairs]
+
+
+def run_cli(args, cwd=REPO):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.flowcheck", *args],
+        cwd=cwd, env={"PYTHONPATH": str(REPO), "PATH": "/usr/bin:/bin",
+                      "HOME": "/tmp", "JAX_PLATFORMS": "cpu"},
+        capture_output=True, text=True, timeout=300)
+
+
+class TestCLI:
+    def test_locks_only_repo_clean(self):
+        r = run_cli(["--only", "locks"])
+        assert r.returncode == 0, r.stdout + r.stderr
+        assert "0 finding(s)" in r.stdout
+
+    def test_seeded_lock_write_fails_gate(self):
+        """Acceptance check: the seeded lock-free stats write must fail
+        the build naming the analyzer's rule."""
+        r = run_cli(["--only", "locks", "--seed-violation", "lock-write"])
+        assert r.returncode == 1, r.stdout + r.stderr
+        assert "FC301" in r.stdout
+        assert "seeded_service.py" in r.stdout
+
+    def test_json_report(self, tmp_path):
+        out = tmp_path / "report.json"
+        r = run_cli(["--only", "locks", "--seed-violation", "lock-write",
+                     "--json", str(out)])
+        assert r.returncode == 1
+        report = json.loads(out.read_text())
+        assert report["tool"] == "flowcheck"
+        assert report["analyzers"] == ["locks"]
+        assert {f["rule"] for f in report["findings"]} == {"FC301"}
+        assert all(f["fingerprint"] for f in report["findings"])
+        assert report["stats"]["locks"]["classes_scanned"] >= 1
+
+    def test_list_rules(self):
+        r = run_cli(["--list-rules"])
+        assert r.returncode == 0
+        for rule in ("FC101", "FC102", "FC103", "FC104", "FC105",
+                     "FC201", "FC202",
+                     "FC301", "FC302", "FC303", "FC304"):
+            assert rule in r.stdout, rule
+
+    def test_unknown_analyzer_exits_2(self):
+        r = run_cli(["--only", "vibes"])
+        assert r.returncode == 2
+        assert "unknown analyzer" in r.stderr

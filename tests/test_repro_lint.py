@@ -264,6 +264,19 @@ class TestSuppression:
         reported3, _, _ = lint_files(tmp_path, files2, baseline=[fp])
         assert len(reported3) == 1
 
+    def test_baseline_survives_line_shift(self, tmp_path):
+        """Fingerprints hash (rule, path, stripped line text), not line
+        numbers: inserting unrelated lines above a baselined finding
+        must not resurrect it."""
+        files = {CORE: self.BAD.format(pragma="")}
+        reported, _, _ = lint_files(tmp_path, files)
+        (fp, _), = reported
+        shifted = {CORE: "# an unrelated header comment\nX = 1\n\n"
+                   + self.BAD.format(pragma="")}
+        reported2, _, baselined = lint_files(tmp_path, shifted,
+                                             baseline=[fp])
+        assert reported2 == [] and [b[0] for b in baselined] == [fp]
+
     def test_committed_baseline_is_empty(self):
         fps = load_baseline(REPO / "tools/repro_lint/baseline.json")
         assert fps == [], ("the committed baseline must stay empty — fix "

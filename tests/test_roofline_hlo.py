@@ -1,0 +1,98 @@
+"""HLO-text parsing (`repro/roofline/hlo`): the collective byte
+accounting's hardened edges — unknown dtypes and `-done` async
+completions warn + count instead of silently dropping — and the
+generic compiled-artifact scan helpers the flowcheck dispatch auditor
+builds on.  Pure text fixtures: no jax, fast tier.
+"""
+
+import warnings
+
+import pytest
+
+from repro.roofline import hlo
+
+AR = ("r = f32[128] all-reduce(f32[128] p), "
+      "replica_groups={{0,1}}")
+
+
+class TestParseCollectives:
+    def test_known_dtype_bytes_counted(self):
+        out = hlo.parse_collectives(AR)
+        assert out["by_type"] == {"all-reduce": 512}
+        assert out["ops"] == 1
+        assert out["in_pod_bytes"] == 512 and out["cross_pod_bytes"] == 0
+        assert out["unknown_dtypes"] == {} and out["async_done_ops"] == 0
+
+    def test_unknown_dtype_warns_and_counts(self):
+        text = ("r = q4[64,64] all-reduce(q4[64,64] p), "
+                "replica_groups={{0,1}}")
+        with pytest.warns(UserWarning, match="undercount"):
+            out = hlo.parse_collectives(text)
+        assert "q4" in out["unknown_dtypes"]
+        assert out["unknown_dtypes"]["q4"] >= 1
+        assert out["by_type"]["all-reduce"] == 0    # excluded, not guessed
+        assert out["ops"] == 1                      # ...but still counted
+
+    def test_async_done_warns_and_counts(self):
+        text = "\n".join([
+            "s = f32[128] all-reduce-start(f32[128] p), "
+            "replica_groups={{0,1}}",
+            "d = f32[128] all-reduce-done(s)",
+        ])
+        with pytest.warns(UserWarning, match="'-start' halves"):
+            out = hlo.parse_collectives(text)
+        assert out["async_done_ops"] == 1
+        # payload counted once, on the -start half
+        assert out["by_type"] == {"all-reduce": 512}
+        assert out["ops"] == 1
+
+    def test_clean_text_does_not_warn(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            out = hlo.parse_collectives(AR)
+        assert out["total_bytes"] == 512
+
+    def test_cross_pod_split(self):
+        text = AR.replace("{{0,1}}", "{{0,256}}")
+        out = hlo.parse_collectives(text, pod_size=256)
+        assert out["cross_pod_bytes"] == 512 and out["in_pod_bytes"] == 0
+
+
+class TestScanHelpers:
+    def test_custom_call_targets(self):
+        text = ('c1 = f32[8] custom-call(p), '
+                'custom_call_target="lapack_sgetrf"\n'
+                'c2 = f32[8] custom-call(q), '
+                'custom_call_target="lapack_sgetrf"\n')
+        assert hlo.scan_custom_call_targets(text) == {"lapack_sgetrf": 2}
+        assert hlo.scan_custom_call_targets("add = f32[8] add(a, b)") == {}
+
+    def test_f64_mentions_and_limit(self):
+        text = "\n".join(f"x{i} = f64[4] add(a, b)" for i in range(5))
+        assert len(hlo.scan_f64_mentions(text)) == 5
+        assert len(hlo.scan_f64_mentions(text, limit=2)) == 2
+        assert hlo.scan_f64_mentions("y = f32[64] add(a, b)") == []
+
+    def test_constant_bytes_threshold(self):
+        # 1024*32 f32 = 131072 bytes == flowcheck's CONST_BYTES_LIMIT
+        text = "\n".join([
+            "big = f32[1024,32] constant({...})",
+            "small = f32[2] constant({1, 2})",
+        ])
+        got = hlo.scan_constant_bytes(text)
+        assert [n for n, _ in got] == [131072, 8]   # largest first
+        # the flowcheck gate uses min_bytes=LIMIT+1: an exactly-at-limit
+        # constant passes, one byte more would not
+        assert hlo.scan_constant_bytes(text, min_bytes=131072 + 1) == []
+        assert hlo.scan_constant_bytes(text, min_bytes=131072)[0][0] \
+            == 131072
+
+    def test_host_transfer_ops(self):
+        text = "\n".join([
+            "i = (f32[8], token[]) infeed(tok)",
+            "o = token[] outfeed(x, tok)",
+            "o2 = token[] outfeed(y, tok)",
+        ])
+        assert hlo.scan_host_transfer_ops(text) == {"infeed": 1,
+                                                    "outfeed": 2}
+        assert hlo.scan_host_transfer_ops("z = f32[8] add(a, b)") == {}

@@ -33,6 +33,10 @@ python -m compileall -q src tests benchmarks tools examples
 echo "== repro-lint (AST-enforced repo invariants, docs/lint.md) =="
 python -m tools.repro_lint src tests benchmarks examples
 
+echo "== flowcheck (dispatch/retrace/lock audits, docs/lint.md) =="
+JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}" \
+    python -m tools.flowcheck --json flowcheck_report.json
+
 echo "== fast test tier (budget ${FAST_TIER_BUDGET_S}s) =="
 pytest_log="$(mktemp)"
 trap 'rm -f "$pytest_log"' EXIT

@@ -1,0 +1,18 @@
+"""flowcheck: compiled-artifact and concurrency invariants for the fused
+sweep and serving fabric.
+
+Three analyzers (see each module's docstring for the rule catalogue):
+
+- ``dispatch`` (FC1xx) — jaxpr/HLO audit of every public fused entry
+  point over a declared shape-bucket matrix,
+- ``retrace``  (FC2xx) — compile-cache behavior over the key space,
+- ``locks``    (FC3xx) — stdlib-only lock-discipline AST analysis of the
+  threaded serving/runtime classes.
+
+CLI: ``python -m tools.flowcheck`` (see ``--help``); conventions —
+pragmas ``# flowcheck: disable=FCxxx``, committed fingerprint baseline,
+exit codes 0 (clean) / 1 (findings) / 2 (usage or internal error) —
+mirror ``tools/repro_lint`` (workflow: docs/lint.md).
+"""
+
+from .common import Finding, apply_baseline, flow_context  # noqa: F401

@@ -1,0 +1,188 @@
+"""CLI: python -m tools.flowcheck [--only dispatch,retrace,locks] ...
+
+Exit codes (same contract as tools/repro_lint):
+  0  clean (or everything suppressed/baselined)
+  1  live findings — the CI gate fails, naming analyzer + rule
+  2  usage or internal error (an analyzer crashing must not read as OK)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import traceback
+from pathlib import Path
+
+from .common import apply_baseline, load_baseline
+
+ANALYZERS = ("dispatch", "retrace", "locks")
+
+SEEDS = ("extra-dispatch", "double-pallas", "cache-fork", "lock-write")
+
+_SEEDED_LOCK_SOURCE = '''\
+import threading
+
+
+class SeededService:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._stats = {}
+
+    def bump(self):
+        self._stats["requests"] = self._stats.get("requests", 0) + 1
+'''
+
+
+def _ensure_importable(root: Path) -> None:
+    """dispatch/retrace import repro.* (src layout) and tools.*."""
+    for p in (str(root), str(root / "src")):
+        if p not in sys.path:
+            sys.path.insert(0, p)
+
+
+def _list_rules() -> int:
+    from . import dispatch, locks, retrace
+    lock_rules = {
+        "FC301": "shared mutable attribute accessed with no lock held",
+        "FC302": "lock-order inversion (ABBA deadlock)",
+        "FC303": "blocking dispatch while holding a condition variable",
+        "FC304": "split-lock protection with no common lock",
+    }
+    del locks  # rules are stable contract strings, module import is the check
+    for rule, desc in sorted({**dispatch.RULES, **retrace.RULES,
+                              **lock_rules}.items()):
+        print(f"{rule}  {desc}")
+    return 0
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.flowcheck",
+        description="compiled-artifact dispatch/retrace audits + "
+                    "lock-discipline analysis (docs/lint.md)")
+    parser.add_argument("--only", default=None,
+                        help="comma list of analyzers to run "
+                             f"(default: all of {','.join(ANALYZERS)})")
+    parser.add_argument("--paths", nargs="*", default=None,
+                        help="override the locks analyzer's file set")
+    parser.add_argument("--json", dest="json_out", default=None,
+                        help="write the machine-readable report here")
+    parser.add_argument("--baseline", default=None,
+                        help="fingerprint baseline (default: "
+                             "tools/flowcheck/baseline.json under --root)")
+    parser.add_argument("--no-baseline", action="store_true",
+                        help="ignore the committed baseline")
+    parser.add_argument("--update-baseline", action="store_true",
+                        help="absorb current findings into the baseline")
+    parser.add_argument("--list-rules", action="store_true")
+    parser.add_argument("--root", default=".",
+                        help="repo root (default: cwd)")
+    parser.add_argument("--seed-violation", choices=SEEDS, default=None,
+                        help="self-test: inject a known violation and "
+                             "prove the gate fails with the rule named")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        return _list_rules()
+
+    root = Path(args.root).resolve()
+    _ensure_importable(root)
+    selected = (tuple(s.strip() for s in args.only.split(",") if s.strip())
+                if args.only else ANALYZERS)
+    bad = [s for s in selected if s not in ANALYZERS]
+    if bad:
+        print(f"unknown analyzer(s) {bad}; choose from {ANALYZERS}",
+              file=sys.stderr)
+        return 2
+
+    findings_with_text = []   # (Finding, line_text-or-"")
+    stats: dict = {}
+    suppressed = 0
+    try:
+        if "locks" in selected:
+            from .locks import LockChecker
+            paths = args.paths
+            if args.seed_violation == "lock-write":
+                tmp = Path(tempfile.mkdtemp(prefix="flowcheck-seed-"))
+                seeded = tmp / "seeded_service.py"
+                seeded.write_text(_SEEDED_LOCK_SOURCE)
+                paths = (paths or []) + [str(seeded)]
+            pairs, sup, n_classes = LockChecker(root=root).check_paths(paths)
+            findings_with_text.extend(pairs)
+            suppressed += sup
+            stats["locks"] = {"classes_scanned": n_classes}
+        if "dispatch" in selected:
+            from . import dispatch as dmod
+            configs, engine_fn = None, None
+            if args.seed_violation == "extra-dispatch":
+                configs = dmod.SEEDED_CONFIGS["extra-dispatch"]
+            elif args.seed_violation == "double-pallas":
+                configs = dmod.ENTRY_CONFIGS[:1]
+                engine_fn = dmod.seeded_double_pallas_engine
+            pairs, dstats = dmod.audit_dispatch(configs=configs,
+                                                engine_fn=engine_fn)
+            findings_with_text.extend(pairs)
+            stats["dispatch"] = dstats
+        if "retrace" in selected:
+            from . import retrace as rmod
+            configs = None
+            if args.seed_violation == "cache-fork":
+                configs = (rmod.matrix()[:1]
+                           + rmod.SEEDED_CONFIGS["cache-fork"])
+            pairs, rstats = rmod.audit_retrace(configs=configs)
+            findings_with_text.extend(pairs)
+            stats["retrace"] = rstats
+    except Exception:
+        traceback.print_exc()
+        print("flowcheck: internal error (see traceback above)",
+              file=sys.stderr)
+        return 2
+
+    baseline_path = (Path(args.baseline) if args.baseline
+                     else root / "tools" / "flowcheck" / "baseline.json")
+    baseline_fps = [] if args.no_baseline else load_baseline(baseline_path)
+    reported, baselined = apply_baseline(findings_with_text, baseline_fps)
+
+    if args.update_baseline:
+        payload = {
+            "comment": ("grandfathered flowcheck findings (fingerprints); "
+                        "see docs/lint.md — intentional keeps belong in "
+                        "`# flowcheck: disable=` pragmas, not here"),
+            "findings": sorted(fp for fp, _ in reported + baselined),
+        }
+        baseline_path.write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"baseline updated: {len(reported) + len(baselined)} "
+              f"fingerprint(s) -> {baseline_path}")
+
+    if args.json_out:
+        report = {
+            "tool": "flowcheck",
+            "analyzers": list(selected),
+            "findings": [dict(f.as_dict(), fingerprint=fp)
+                         for fp, f in reported],
+            "baselined": len(baselined),
+            "suppressed": suppressed,
+            "stats": stats,
+        }
+        Path(args.json_out).write_text(json.dumps(report, indent=2) + "\n")
+
+    for _, finding in reported:
+        print(finding.render())
+    n = len(reported)
+    extras = []
+    if suppressed:
+        extras.append(f"{suppressed} suppressed by pragma")
+    if baselined:
+        extras.append(f"{len(baselined)} baselined")
+    tail = f" ({', '.join(extras)})" if extras else ""
+    print(f"flowcheck[{','.join(selected)}]: "
+          f"{n} finding(s){tail}")
+    if args.update_baseline:
+        return 0
+    return 1 if n else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,85 @@
+"""Shared plumbing for the flowcheck analyzers: findings, pragmas,
+baseline, and report assembly.
+
+flowcheck is the second-generation static-analysis suite next to
+`tools/repro_lint`: where repro-lint inspects *source text* (AST
+heuristics over what the code says), flowcheck verifies the *compiled
+artifact* (jaxpr / HLO of every fused dispatch), the *compile cache*
+(retrace behavior over the key space) and the *thread interactions*
+(lock discipline of the serving fabric).  It reuses repro-lint's
+engine conventions — same-line pragmas, a committed fingerprint
+baseline, 0/1/2 exit codes, `--json` reports — with its own pragma tag
+(`# flowcheck: disable=FC301`) so each tool's pragmas silence only its
+own rules.
+
+Finding identity:
+
+- lock-discipline findings anchor to a source line; their fingerprint
+  hashes (rule, path, stripped line text) exactly like repro-lint, so
+  baselined entries survive line drift but die with the offending code;
+- dispatch/retrace findings anchor to an entry-point *config* (there is
+  no source line for "the compiled sweep issued two dispatches"); their
+  fingerprint hashes (rule, config name, stable detail key).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import re
+
+# stdlib-only import: the locks analyzer (and this module) must run in
+# the jax-free CI lint job, exactly like tools/repro_lint
+from tools.repro_lint.engine import (  # noqa: F401  (re-exported)
+    FileContext, iter_py_files, load_baseline, write_baseline)
+
+PRAGMA_RE = re.compile(
+    r"#\s*flowcheck:\s*(disable|disable-file)=([A-Z0-9, ]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    where: str         # file path (locks) or entry-point config name
+    line: int          # 1-indexed source line; 0 for config findings
+    col: int
+    message: str
+    key: str = ""      # stable fingerprint detail for config findings
+
+    def fingerprint(self, line_text: str = "") -> str:
+        detail = line_text.strip() if self.line else self.key
+        raw = f"{self.rule}:{self.where}:{detail}"
+        return hashlib.sha1(raw.encode()).hexdigest()[:16]
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        loc = f"{self.where}:{self.line}:{self.col}" if self.line \
+            else self.where
+        return f"{loc}: {self.rule} {self.message}"
+
+
+def flow_context(path, rel: str, source: str) -> FileContext:
+    """A `FileContext` whose pragmas use the flowcheck tag."""
+    return FileContext(path, rel, source, pragma_re=PRAGMA_RE)
+
+
+def apply_baseline(findings_with_ctx, baseline_fps):
+    """Split (finding, line_text) pairs into live vs baselined.
+
+    Mirrors repro-lint's budgeted absorption: each baseline fingerprint
+    absorbs at most as many findings as it occurs in the baseline list.
+    """
+    budget = {}
+    for fp in baseline_fps:
+        budget[fp] = budget.get(fp, 0) + 1
+    reported, baselined = [], []
+    for finding, line_text in findings_with_ctx:
+        fp = finding.fingerprint(line_text)
+        if budget.get(fp, 0) > 0:
+            budget[fp] -= 1
+            baselined.append((fp, finding))
+        else:
+            reported.append((fp, finding))
+    return reported, baselined

@@ -1,0 +1,476 @@
+"""FC3xx — lock-discipline analysis of the serving/runtime thread fabric.
+
+The serving engine (`serving/dse_service.py`) shares memo / window /
+stats state between client threads and the dispatcher thread; the
+runtime fault machinery (`runtime/fault.py`) shares liveness maps.  The
+AST heuristics in repro-lint cannot see thread interactions, so this
+checker *learns* each class's concurrency shape and verifies the
+discipline:
+
+1. **Lock inventory** — attributes assigned in `__init__` from
+   `threading.Lock()` / `RLock()` / `Condition()`.  Classes with no
+   locks are skipped (nothing to be disciplined about).
+2. **Shared mutable attributes** — attributes assigned in `__init__`
+   that are either initialized to a mutable container (list/dict/set
+   literal, `OrderedDict()`, any CapWord class instantiation) or
+   re-assigned in a non-`__init__` method.  Plain config scalars
+   (`self.window_ms = float(...)`) are immutable after construction and
+   exempt.
+3. **Lock-context propagation** — each method body is walked with the
+   set of held `self.<lock>` locks (`with self._cv:` scoping); private
+   methods called only from inside the class inherit the *intersection*
+   of their call sites' held sets (fixpoint), so a helper that is only
+   ever invoked under `self._dispatch_lock` is analyzed as holding it.
+   A method referenced without a call (e.g. `Thread(target=self._run)`)
+   is a fresh thread entry and starts with nothing held.
+
+Rules:
+
+- **FC301** — read/write of a shared mutable attribute with no lock
+  held.  This is the torn-counter / lost-update class of bug.
+- **FC302** — lock-order inversion: the file set acquires lock B while
+  holding A *and* A while holding B (ABBA deadlock).
+- **FC303** — blocking work while holding a `threading.Condition`:
+  a JAX dispatch (`row_cycle_events`, `plan_sweep`, ...) or blocking
+  wait (`.result()`, `.join()`) inside a `with self._cv:` block stalls
+  every producer/consumer sharing the condition for the duration of a
+  fused dispatch.
+- **FC304** — split-lock protection: an attribute accessed under lock A
+  at some sites and lock B at others, with no common lock — mutual
+  exclusion that excludes nothing.
+
+Known limitation (by design, documented in docs/lint.md): aliasing a
+shared attribute into a local (`st = self._stats; st.x += 1`) hides the
+mutation from the checker — the serving code avoids the idiom so every
+shared access is visible as `self.<attr>`.
+
+Stdlib-only: this module must run in the jax-free CI lint job.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+
+from .common import Finding, flow_context, iter_py_files
+
+# Default scan set: the threaded serving engine and the fault runtime.
+DEFAULT_PATHS = (
+    "src/repro/serving/dse_service.py",
+    "src/repro/runtime/fault.py",
+)
+
+LOCK_CONSTRUCTORS = ("Lock", "RLock", "Condition", "Semaphore",
+                     "BoundedSemaphore")
+CONDITION_CONSTRUCTORS = ("Condition",)
+
+MUTABLE_CONSTRUCTORS = ("list", "dict", "set", "bytearray", "deque",
+                        "OrderedDict", "defaultdict", "Counter")
+
+# mutating container methods: calling one on a shared attr is a write
+MUTATOR_METHODS = frozenset({
+    "append", "extend", "insert", "pop", "popitem", "clear", "update",
+    "setdefault", "move_to_end", "add", "remove", "discard", "sort",
+    "reverse", "appendleft", "popleft",
+})
+
+# calls that block or issue a fused JAX dispatch — forbidden while
+# holding a Condition (FC303)
+BLOCKING_CALLS = frozenset({
+    "row_cycle_events", "row_cycle_fused", "row_cycle_fused_sharded",
+    "simulate_row_cycle_many", "simulate_row_cycle_lowered",
+    "simulate_row_cycle_sharded", "sweep", "plan_sweep", "finalize_sweep",
+    "block_until_ready", "result", "join",
+})
+
+
+def _is_self_attr(node) -> str | None:
+    if (isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+def _call_name(node: ast.Call) -> str | None:
+    if isinstance(node.func, ast.Attribute):
+        return node.func.attr
+    if isinstance(node.func, ast.Name):
+        return node.func.id
+    return None
+
+
+def _is_mutable_init(value: ast.expr) -> bool:
+    """Does this `__init__` initializer produce a mutable object?"""
+    if isinstance(value, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                          ast.DictComp, ast.SetComp)):
+        return True
+    if isinstance(value, ast.Call):
+        name = _call_name(value)
+        if name in MUTABLE_CONSTRUCTORS:
+            return True
+        # CapWord call = class instantiation (e.g. ServiceStats()) —
+        # instances are presumed mutable; lock constructors are handled
+        # separately and excluded by the caller.
+        if name and name[0].isupper() and name not in LOCK_CONSTRUCTORS:
+            return True
+    return False
+
+
+@dataclass
+class Access:
+    attr: str
+    held: frozenset
+    lineno: int
+    col: int
+    kind: str          # "read" | "write"
+    method: str
+
+
+@dataclass
+class ClassModel:
+    """Everything learned about one lock-bearing class."""
+    name: str
+    locks: dict = field(default_factory=dict)       # attr -> ctor name
+    shared: set = field(default_factory=set)        # shared mutable attrs
+    accesses: list = field(default_factory=list)    # [Access]
+    nestings: list = field(default_factory=list)    # [(outer, inner, node)]
+    blocking_under_cv: list = field(default_factory=list)  # [(node, name, lock)]
+
+
+class _MethodWalker:
+    """Walk one method body tracking the held-lock set."""
+
+    def __init__(self, model: ClassModel, method: str, entry_held,
+                 call_sites):
+        self.model = model
+        self.method = method
+        self.call_sites = call_sites    # name -> [frozenset held]
+        self.refs = set()               # methods referenced without call
+        self.held0 = frozenset(entry_held)
+
+    def walk(self, body):
+        for stmt in body:
+            self._stmt(stmt, self.held0)
+
+    # -- statements --------------------------------------------------------
+    def _stmt(self, node, held):
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            acquired = []
+            for item in node.items:
+                attr = _is_self_attr(item.context_expr)
+                if attr in self.model.locks:
+                    acquired.append(attr)
+                else:
+                    self._expr(item.context_expr, held, store=False)
+                if item.optional_vars is not None:
+                    self._expr(item.optional_vars, held, store=True)
+            inner = held
+            for lock in acquired:
+                for outer in inner:
+                    self.model.nestings.append((outer, lock, node))
+                inner = inner | {lock}
+            for sub in node.body:
+                self._stmt(sub, inner)
+        elif isinstance(node, (ast.Assign,)):
+            self._expr(node.value, held, store=False)
+            for t in node.targets:
+                self._expr(t, held, store=True)
+        elif isinstance(node, ast.AugAssign):
+            self._expr(node.value, held, store=False)
+            self._expr(node.target, held, store=True)
+        elif isinstance(node, ast.AnnAssign):
+            if node.value is not None:
+                self._expr(node.value, held, store=False)
+            self._expr(node.target, held, store=True)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested def: body runs later, with unknown locks — analyze
+            # with nothing held and treat as a reference-only entry
+            nested = _MethodWalker(self.model, self.method, frozenset(),
+                                   self.call_sites)
+            nested.walk(node.body)
+            self.refs |= nested.refs
+        else:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, ast.expr):
+                    self._expr(child, held, store=False)
+                elif isinstance(child, ast.stmt):
+                    self._stmt(child, held)
+                elif isinstance(child, (ast.withitem, ast.ExceptHandler,
+                                        ast.arguments, ast.keyword)):
+                    for sub in ast.iter_child_nodes(child):
+                        if isinstance(sub, ast.expr):
+                            self._expr(sub, held, store=False)
+                        elif isinstance(sub, ast.stmt):
+                            self._stmt(sub, held)
+
+    # -- expressions -------------------------------------------------------
+    def _expr(self, node, held, store):
+        if node is None:
+            return
+        if isinstance(node, ast.Call):
+            name = _call_name(node)
+            # self.method(...) call site (not a bare reference, so the
+            # func attribute must NOT land in self.refs below)
+            callee = _is_self_attr(node.func)
+            if callee is not None:
+                self.call_sites.setdefault(callee, []).append(held)
+            # blocking / dispatch call while holding a Condition (FC303)
+            cond_held = [lk for lk in held
+                         if self.model.locks.get(lk)
+                         in CONDITION_CONSTRUCTORS]
+            if name in BLOCKING_CALLS and cond_held:
+                target = _is_self_attr(node.func)
+                if target not in self.model.locks:
+                    self.model.blocking_under_cv.append(
+                        (node, name, sorted(cond_held)[0]))
+            # mutator method on a shared attr: self._queue.append(x)
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in MUTATOR_METHODS):
+                owner = _is_self_attr(node.func.value)
+                if owner in self.model.shared:
+                    self._record(node.func.value, owner, held, "write")
+            if callee is None:
+                self._expr(node.func, held, store=False)
+            for a in node.args:
+                self._expr(a, held, store=False)
+            for kw in node.keywords:
+                self._expr(kw.value, held, store=False)
+            return
+        if isinstance(node, ast.Attribute):
+            attr = _is_self_attr(node)
+            if attr is not None:
+                if attr in self.model.shared:
+                    self._record(node, attr, held,
+                                 "write" if store else "read")
+                elif attr not in self.model.locks and not store:
+                    # possible bare method reference (thread target)
+                    self.refs.add(attr)
+                self._expr(node.value, held, store=False)
+                return
+            # store through an attribute/subscript chain writes the base
+            self._expr(node.value, held, store=store)
+            return
+        if isinstance(node, ast.Subscript):
+            self._expr(node.value, held, store=store)
+            self._expr(node.slice, held, store=False)
+            return
+        if isinstance(node, (ast.Tuple, ast.List)):
+            for elt in node.elts:
+                self._expr(elt, held, store=store)
+            return
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                self._expr(child, held, store=False)
+            elif isinstance(child, ast.comprehension):
+                self._expr(child.iter, held, store=False)
+                for cond in child.ifs:
+                    self._expr(cond, held, store=False)
+
+    def _record(self, node, attr, held, kind):
+        for a in self.model.accesses:
+            # one access per site: a mutator call records the write first,
+            # then the generic attribute visit would re-record a read
+            if (a.attr == attr and a.lineno == node.lineno
+                    and a.col == node.col_offset and a.method == self.method):
+                return
+        self.model.accesses.append(Access(
+            attr=attr, held=frozenset(held), lineno=node.lineno,
+            col=node.col_offset, kind=kind, method=self.method))
+
+
+def _build_model(cls: ast.ClassDef) -> ClassModel | None:
+    model = ClassModel(name=cls.name)
+    methods = {n.name: n for n in cls.body
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    init = methods.get("__init__")
+    if init is None:
+        return None
+    init_attrs: dict[str, ast.expr] = {}
+    for node in ast.walk(init):
+        target, value = None, None
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            target, value = node.targets[0], node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            target, value = node.target, node.value
+        if target is not None:
+            attr = _is_self_attr(target)
+            if attr is not None:
+                init_attrs[attr] = value
+    for attr, value in init_attrs.items():
+        if (isinstance(value, ast.Call)
+                and _call_name(value) in LOCK_CONSTRUCTORS):
+            model.locks[attr] = _call_name(value)
+    if not model.locks:
+        return None
+
+    reassigned = set()
+    for name, fn in methods.items():
+        if name == "__init__":
+            continue
+        for node in ast.walk(fn):
+            targets = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                targets = [node.target]
+            for t in targets:
+                for sub in ast.walk(t):
+                    attr = _is_self_attr(sub)
+                    if attr is not None:
+                        reassigned.add(attr)
+    for attr, value in init_attrs.items():
+        if attr in model.locks:
+            continue
+        if _is_mutable_init(value) or attr in reassigned:
+            model.shared.add(attr)
+
+    # -- fixpoint lock-context propagation ---------------------------------
+    held: dict[str, frozenset] = {}
+    all_locks = frozenset(model.locks)
+    for name in methods:
+        # public methods (and dunders) are external entry points
+        held[name] = (all_locks if name.startswith("_")
+                      and not name.startswith("__") else frozenset())
+    for _ in range(len(methods) + 2):
+        call_sites: dict[str, list] = {}
+        refs: set[str] = set()
+        for name, fn in methods.items():
+            if name == "__init__":
+                continue
+            walker = _MethodWalker(ClassModel(name=model.name,
+                                              locks=model.locks,
+                                              shared=model.shared),
+                                   name, held[name], call_sites)
+            walker.walk(fn.body)
+            refs |= walker.refs
+        new_held = dict(held)
+        for name in methods:
+            if name == "__init__":
+                continue
+            if not name.startswith("_") or name.startswith("__"):
+                new_held[name] = frozenset()
+                continue
+            sites = call_sites.get(name, [])
+            entry = frozenset() if name in refs else None
+            if sites:
+                common = frozenset.intersection(*map(frozenset, sites))
+                entry = common if entry is None else entry & common
+            if entry is None:
+                entry = frozenset()   # never called, never referenced
+            new_held[name] = entry
+        if new_held == held:
+            break
+        held = new_held
+
+    # -- final walk collecting accesses/nestings/blocking ------------------
+    call_sites = {}
+    for name, fn in methods.items():
+        if name == "__init__":
+            continue
+        walker = _MethodWalker(model, name, held[name], call_sites)
+        walker.walk(fn.body)
+    return model
+
+
+class LockChecker:
+    """Run the FC3xx analysis over a set of files."""
+
+    def __init__(self, root: Path | None = None):
+        self.root = Path(root) if root else Path.cwd()
+
+    def _relpath(self, path: Path) -> str:
+        try:
+            return path.resolve().relative_to(self.root.resolve()).as_posix()
+        except ValueError:
+            return path.as_posix()
+
+    def check_paths(self, paths=None):
+        """Returns (findings_with_line_text, suppressed, classes_checked)."""
+        paths = paths if paths is not None else [
+            self.root / p for p in DEFAULT_PATHS]
+        out, suppressed, n_classes = [], 0, 0
+        for f in iter_py_files(paths):
+            ctx = flow_context(f, self._relpath(f), f.read_text())
+            for finding in self._check_file(ctx):
+                if ctx.suppressed(finding):
+                    suppressed += 1
+                    continue
+                out.append((finding, ctx.line_text(finding.line)))
+            n_classes += sum(
+                1 for node in ast.walk(ctx.tree)
+                if isinstance(node, ast.ClassDef))
+        return out, suppressed, n_classes
+
+    def _check_file(self, ctx):
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            model = _build_model(node)
+            if model is None:
+                continue
+            yield from self._verdicts(ctx, model)
+
+    def _verdicts(self, ctx, model: ClassModel):
+        def finding(rule, anchor, message):
+            return Finding(rule=rule, where=ctx.rel,
+                           line=anchor.lineno,
+                           col=getattr(anchor, "col_offset", 0),
+                           message=f"[{model.name}] {message}")
+
+        by_attr: dict[str, list] = {}
+        for acc in model.accesses:
+            by_attr.setdefault(acc.attr, []).append(acc)
+
+        for attr, accesses in sorted(by_attr.items()):
+            bare = [a for a in accesses if not a.held]
+            if bare:
+                for a in bare:
+                    yield Finding(
+                        "FC301", ctx.rel, a.lineno, a.col,
+                        f"[{model.name}] {a.kind} of shared mutable "
+                        f"attribute self.{attr} in {a.method}() with no "
+                        "lock held; every cross-thread access must hold "
+                        "the attribute's lock")
+                continue
+            common = frozenset.intersection(
+                *(a.held for a in accesses))
+            if not common and len(accesses) > 1:
+                locks_seen = sorted({lk for a in accesses for lk in a.held})
+                counts: dict[str, int] = {}
+                for a in accesses:
+                    for lk in a.held:
+                        counts[lk] = counts.get(lk, 0) + 1
+                dominant = max(sorted(counts), key=lambda lk: counts[lk])
+                for a in accesses:
+                    if dominant not in a.held:
+                        yield Finding(
+                            "FC304", ctx.rel, a.lineno, a.col,
+                            f"[{model.name}] self.{attr} is protected by "
+                            f"{sorted(a.held)} here but by "
+                            f"['{dominant}'] elsewhere (locks seen: "
+                            f"{locks_seen}); split-lock protection "
+                            "excludes nothing")
+
+        pairs = {(o, i) for o, i, _ in model.nestings}
+        for outer, inner, node in model.nestings:
+            if (inner, outer) in pairs:
+                yield finding(
+                    "FC302", node,
+                    f"acquires self.{inner} while holding self.{outer}, "
+                    f"but the reverse nesting also exists in this class "
+                    "— ABBA deadlock")
+
+        for node, name, lock in model.blocking_under_cv:
+            yield finding(
+                "FC303", node,
+                f"blocking call {name}() while holding the condition "
+                f"variable self.{lock}; a fused dispatch or blocking "
+                "wait under the CV stalls every thread sharing it — "
+                "dispatch outside the lock")
+
+
+def run(paths=None, root=None):
+    """Module-level entry used by `tools.flowcheck.__main__`."""
+    checker = LockChecker(root=root)
+    return checker.check_paths(paths)

@@ -1,0 +1,167 @@
+"""FC2xx — compile-cache retrace auditing of the fused engine.
+
+The warm serving engine's economics rest on ONE property: every sweep
+configuration that *should* share a compiled executable *does*.  The
+padding contract (B_ALIGN multiples up to `b_chunk`) makes nominal,
+replica, MC and mixed-width batches collapse onto a handful of shapes —
+but nothing in jit enforces it.  Weak-type drift (a Python-scalar
+operand giving a `weak_type=True` aval), dtype wobble, or a Python value
+baked per-call can silently fork the cache, and every fork is a full
+engine re-trace + re-compile on the dispatch path.
+
+The audit enumerates the declared key space — backend (auto/ref) x
+b_chunk (64/default) x replica x MC x params width (5/6) — and compares
+`ops.row_cycle_fused._cache_size()` against the number of *distinct*
+(shapes, dtypes, statics) buckets actually dispatched:
+
+- **FC201** — the cache holds MORE entries than distinct dispatch
+  buckets after a config runs: something forked a compiled shape the
+  recorder could not distinguish (the recorder's key deliberately
+  excludes `weak_type`, so drift shows up as excess entries), or a
+  dispatch bypassed the audited seam entirely.
+- **FC202** — re-running the whole matrix against a warm cache grows it:
+  a per-call retrace (Python object identity in a static arg, per-call
+  baked scalars) that the first pass could not see.
+
+Requires jax + repro importable; jax imports are function-local.
+"""
+
+from __future__ import annotations
+
+from .common import Finding
+from .dispatch import record_dispatches
+
+RULES = {
+    "FC201": "compile cache holds more entries than distinct dispatch "
+             "buckets (weak-type drift or unaudited dispatch)",
+    "FC202": "warm re-run of the config matrix re-traced the engine",
+}
+
+
+def _cfg_sweep(space_fn, **kw):
+    def thunk(rec):
+        from repro.core import dse
+        dse.sweep(space_fn(), **kw)
+    return thunk
+
+
+def _space_targets():
+    from repro.core.space import DesignSpace
+    return DesignSpace.paper_targets()
+
+
+def _space_grid():
+    from repro.core.space import DesignSpace
+    return DesignSpace.paper_grid()
+
+
+def _thunk_params5(rec):
+    """Legacy 5-column params width: its own compiled shape, exactly one."""
+    from repro.core import dse, transient
+    from repro.kernels import ops
+    plan = dse.plan_sweep(_space_targets())
+    core = transient._pad_operands(
+        plan.operands[:6],
+        (-int(plan.operands.c.shape[0])) % transient.B_ALIGN)
+    c, g, gc_res, gc_pre, v0, params = [x[:transient.B_ALIGN] for x in core]
+    ops.row_cycle_fused(c, g, gc_res, gc_pre, v0, params[:, :5],
+                        transient.DT_NS, transient.N_ACT_STEPS,
+                        transient.N_RESTORE_STEPS, transient.N_PRE_STEPS,
+                        backend="ref")
+
+
+def matrix():
+    """The declared compile-cache key space, as (name, thunk(rec)) pairs.
+
+    Ordered so shared-shape collapses are exercised: the repeats and the
+    replica/MC variants after their nominal twins must NOT add entries
+    when the padding contract holds.
+    """
+    return (
+        ("auto-targets", _cfg_sweep(_space_targets)),
+        ("auto-targets-repeat", _cfg_sweep(_space_targets)),
+        ("ref-targets", _cfg_sweep(_space_targets, backend="ref")),
+        ("auto-grid", _cfg_sweep(_space_grid)),
+        ("auto-grid-chunk64", _cfg_sweep(_space_grid, b_chunk=64)),
+        ("auto-targets-replica",
+         _cfg_sweep(lambda: _space_targets().with_replica())),
+        ("auto-targets-mc",
+         _cfg_sweep(lambda: _space_targets().with_mc(samples=4, key=0))),
+        ("auto-targets-replica-mc",
+         _cfg_sweep(lambda: _space_targets().with_replica()
+                    .with_mc(samples=4, key=0))),
+        ("ref-params5-direct", _thunk_params5),
+    )
+
+
+def audit_retrace(configs=None):
+    """Run the matrix cold, tracking cache size vs distinct buckets per
+    config (FC201); then re-run it warm (FC202).  Returns
+    (findings_with_line_text, stats_dict)."""
+    import jax
+
+    from repro.kernels import ops
+
+    configs = matrix() if configs is None else tuple(configs)
+    jax.clear_caches()
+    findings = []
+    expected_keys = set()
+    per_config = {}
+    for name, thunk in configs:
+        with record_dispatches() as rec:
+            thunk(rec)
+        expected_keys.update(call.key for call in rec.engine_calls)
+        actual = ops.row_cycle_fused._cache_size()
+        per_config[name] = {"cache": actual, "buckets": len(expected_keys)}
+        if actual > len(expected_keys):
+            findings.append(Finding(
+                "FC201", name, 0, 0,
+                f"after this config the engine cache holds {actual} "
+                f"entries but only {len(expected_keys)} distinct "
+                "(shapes, dtypes, statics) buckets were dispatched — "
+                "weak-type drift or a dispatch outside the audited seam "
+                "forked the compile cache", key="cache-fork"))
+            # resync so one fork doesn't cascade into every later config
+            while len(expected_keys) < actual:
+                expected_keys.add(("resync", len(expected_keys)))
+
+    warm_size = ops.row_cycle_fused._cache_size()
+    for name, thunk in configs:
+        with record_dispatches() as rec:
+            thunk(rec)
+        grown = ops.row_cycle_fused._cache_size()
+        if grown > warm_size:
+            findings.append(Finding(
+                "FC202", name, 0, 0,
+                f"warm re-run re-traced the engine: cache grew "
+                f"{warm_size} -> {grown} on a config already compiled — "
+                "a per-call-baked Python value is defeating the jit "
+                "cache", key="warm-retrace"))
+            warm_size = grown
+
+    stats = {"configs": per_config, "cache_entries": warm_size,
+             "distinct_buckets": len(expected_keys)}
+    return [(f, "") for f in findings], stats
+
+
+# ---------------------------------------------------------------------------
+# Seeded violation: a dispatch that bypasses the audited seam (FC201)
+# ---------------------------------------------------------------------------
+
+def _thunk_seeded_bypass(rec):
+    """Calls the UNPATCHED engine directly on a fresh shape, so the cache
+    gains an entry the recorder never saw — the audit must flag it."""
+    from repro.core import dse, transient
+    plan = dse.plan_sweep(_space_targets())
+    core = transient._pad_operands(
+        plan.operands[:6],
+        (-int(plan.operands.c.shape[0])) % transient.B_ALIGN)
+    chunk = [x[:transient.B_ALIGN] for x in core]
+    rec.orig_engine(*chunk, transient.DT_NS, transient.N_ACT_STEPS,
+                    transient.N_RESTORE_STEPS, transient.N_PRE_STEPS,
+                    backend="ref")
+
+
+SEEDED_CONFIGS = {
+    "cache-fork": (("seeded-bypass-dispatch", _thunk_seeded_bypass),),
+}

@@ -45,9 +45,15 @@ class Finding:
 
 
 class FileContext:
-    """Everything a rule needs about one parsed source file."""
+    """Everything a rule needs about one parsed source file.
 
-    def __init__(self, path: Path, rel: str, source: str):
+    `pragma_re` defaults to the repro-lint pragma tag; sibling analyzers
+    (tools/flowcheck) reuse this context with their own tag so each
+    tool's pragmas only silence its own rules.
+    """
+
+    def __init__(self, path: Path, rel: str, source: str,
+                 pragma_re=PRAGMA_RE):
         self.path = path
         self.rel = rel
         self.source = source
@@ -56,7 +62,7 @@ class FileContext:
         self.line_pragmas: dict[int, set] = {}
         self.file_pragmas: set = set()
         for i, line in enumerate(self.lines, start=1):
-            m = PRAGMA_RE.search(line)
+            m = pragma_re.search(line)
             if not m:
                 continue
             rules = {r.strip() for r in m.group(2).split(",") if r.strip()}
