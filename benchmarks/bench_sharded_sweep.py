@@ -35,15 +35,45 @@ from repro.launch.mesh import make_sweep_mesh
 
 space = DesignSpace.paper_grid().with_mc(samples=%d, key=0)
 mesh = make_sweep_mesh()
-run = lambda: jax.block_until_ready(dse.sweep(space, sharding=mesh).trc_ns)
-run()                                            # compile
+run = lambda: dse.sweep(space, sharding=mesh)
+batch = run()                                    # compile
+jax.block_until_ready(batch.trc_ns)
 ts = []
 for _ in range(3):
     t0 = time.perf_counter()
-    run()
+    jax.block_until_ready(run().trc_ns)
     ts.append(time.perf_counter() - t0)
+pareto = lambda: jax.block_until_ready(dse.pareto_mask(batch, sharding=mesh))
+pareto()                                         # compile
+pts = []
+for _ in range(3):
+    t0 = time.perf_counter()
+    pareto()
+    pts.append(time.perf_counter() - t0)
 print(json.dumps({"ndev": jax.device_count(), "points": len(space),
-                  "wall_s": min(ts)}))
+                  "wall_s": min(ts), "pareto_wall_s": min(pts)}))
+"""
+
+# the elastic driver's deterministic recovery cost: one injected host
+# drop at slab 1 of 4 recomputes exactly one slab -> 0.25, whatever the
+# hardware — a CORRECTNESS-OF-RECOVERY gate (lower is better), not a
+# throughput number
+_ELASTIC_CHILD = """
+import json
+import jax
+from repro.core.space import DesignSpace
+from repro.launch import elastic
+from repro.launch.mesh import make_sweep_mesh
+from repro.runtime.fault import FailureInjector
+
+space = DesignSpace.paper_grid().with_mc(samples=%d, key=0)
+batch, report = elastic.elastic_sweep(
+    space, make_sweep_mesh(),
+    injector=FailureInjector(schedule={1: "drop:host0"}))
+print(json.dumps({"ndev": jax.device_count(),
+                  "resume_overhead_frac": report.resume_overhead_frac,
+                  "restarts": report.restarts,
+                  "device_history": report.device_history}))
 """
 
 
@@ -74,6 +104,7 @@ def main() -> dict:
         assert rec["ndev"] == ndev, rec
         pts_per_s = rec["points"] / rec["wall_s"]
         rec["points_per_s"] = pts_per_s
+        rec["pareto_points_per_s"] = rec["points"] / rec["pareto_wall_s"]
         per_device[str(ndev)] = rec
         emit(f"sharded_sweep_d{ndev}", rec["wall_s"] * 1e6,
              f"points_per_s={pts_per_s:,.0f}")
@@ -84,6 +115,26 @@ def main() -> dict:
     emit("sharded_sweep_scaling", 0.0,
          f"best={best_ndev}dev;vs_1dev={scaling:.2f}x")
 
+    # the gated pareto throughput is the widest mesh's (the config the
+    # sharded dominance engine exists for)
+    max_ndev = str(max(DEVICE_COUNTS))
+    pareto_pts_per_s = per_device[max_ndev]["pareto_points_per_s"]
+    emit(f"sharded_pareto_d{max_ndev}",
+         per_device[max_ndev]["pareto_wall_s"] * 1e6,
+         f"points_per_s={pareto_pts_per_s:,.0f}")
+
+    r = subprocess.run(
+        [sys.executable, "-c", _ELASTIC_CHILD % MC_SAMPLES],
+        capture_output=True, text=True,
+        env=_child_env(max(DEVICE_COUNTS)), timeout=600)
+    if r.returncode != 0:
+        raise RuntimeError(f"elastic bench child failed:\n"
+                           f"{r.stderr[-2000:]}")
+    erec = json.loads(r.stdout.strip().splitlines()[-1])
+    emit("elastic_resume_overhead", 0.0,
+         f"frac={erec['resume_overhead_frac']:.2f};"
+         f"restarts={erec['restarts']}")
+
     return {
         "mc_samples": MC_SAMPLES,
         "points": per_device["1"]["points"],
@@ -91,6 +142,10 @@ def main() -> dict:
         "per_device": per_device,
         "best_device_count": int(best_ndev),
         "best_scaling_vs_1dev": scaling,
+        "sharded_pareto_points_per_s": pareto_pts_per_s,
+        "elastic_resume_overhead_frac": erec["resume_overhead_frac"],
+        "elastic_restarts": erec["restarts"],
+        "elastic_device_history": erec["device_history"],
     }
 
 

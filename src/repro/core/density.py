@@ -7,7 +7,6 @@
 
 from __future__ import annotations
 
-import numpy as np
 import jax.numpy as jnp
 
 from . import calibration as cal
@@ -33,7 +32,7 @@ def bit_density_lowered(view) -> jnp.ndarray:
     baseline = view.tech("baseline_2d")
     area = view.tech("cell_x_nm") * view.tech("cell_y_nm")
     per_layer = (view.tech("array_efficiency")
-                 / np.where(area > 0, area, 1.0) * NM2_PER_MM2 / GBIT)
+                 / jnp.where(area > 0, area, 1.0) * NM2_PER_MM2 / GBIT)
     return jnp.where(baseline, view.tech("fixed_density_gb_mm2"),
                      view.layers * per_layer).astype(jnp.float32)
 

@@ -29,6 +29,7 @@ import warnings
 from dataclasses import dataclass
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from . import calibration as cal
@@ -43,13 +44,14 @@ from .netlist import build_ladder_lowered, effective_cbl_ff
 from .parasitics import bl_parasitics_lowered
 from .routing import SCHEMES, bonding_geometry, bonding_geometry_lowered
 from .sense import sense_margin_lowered, sense_margin_mv
-from .space import MC_AXES, MC_LOG_W, DesignSpace
+from .space import MC_AXES, MC_LOG_W, DesignSpace, SpaceView
 from . import transient
 from .transient import simulate_row_cycle, simulate_row_cycle_many
 
 __all__ = [
     "DesignBatch", "DesignPoint", "DesignSpace",
     "SweepPlan", "plan_sweep", "finalize_sweep",
+    "score_columns", "score_from_events", "assemble_batch",
     "sweep", "pareto_mask", "pareto_front", "best_design", "as_batch",
     "full_sweep", "evaluate_grid", "sweep_combos",
 ]
@@ -116,74 +118,153 @@ def plan_sweep(space: DesignSpace | None = None,
     return SweepPlan(space=space, sp=sp, par=par, operands=operands)
 
 
+def score_columns(view, cbl_ff, trc=None, t_sense=None, t_fire=None,
+                  dv_sense=None) -> dict:
+    """Pure-jnp per-row scoring of a design-space view -> column dict.
+
+    `view` is a `SpaceView` (or any traceable LoweredSpace-protocol
+    object); `cbl_ff` the per-point total BL capacitance from the plan's
+    parasitic decomposition.  The transient columns (`trc`, `t_sense`,
+    `t_fire`, `dv_sense`) are either all given (post-rollup, design-point
+    length) or all None (`with_transient=False`: NaN-filled).
+
+    Every output is an elementwise (B,) array — no cross-row ops — so
+    the function is batch-size independent and runs identically whether
+    jitted whole-batch (the sequential sweep) or inside a per-device
+    `shard_map` body (the sharded sweep).  Keys match `DesignBatch`
+    field names; `assemble_batch` zips them with the host-side identity
+    columns.
+    """
+    cbl = jnp.asarray(cbl_ff, jnp.float32)
+    dens = bit_density_lowered(view)
+    height = stack_height_lowered(view)
+    margin = sense_margin_lowered(view, cbl_ff=cbl)
+    margin_d = sense_margin_lowered(view, with_disturb=True, cbl_ff=cbl)
+    e_wr = write_energy_lowered(view, cbl_ff=cbl)
+    e_rd = read_energy_lowered(view, cbl_ff=cbl)
+    geom = bonding_geometry_lowered(view)
+
+    if trc is not None:
+        # margin actually available at the SA fire: the simulated
+        # developed signal at the enable instant minus the SA offset
+        # (per-sample on MC spaces, calibrated corner otherwise) — the
+        # closed-timing counterpart of the analytic charge-share margin.
+        sa_offset = view.corner("mc_sa_offset_mv", None)
+        if sa_offset is None:
+            sa_offset = jnp.asarray(view.tech("sa_offset_mv"), jnp.float32)
+        margin_fire = (dv_sense * 1e3 - sa_offset).astype(jnp.float32)
+    else:
+        trc = jnp.full((len(view),), jnp.nan, jnp.float32)
+        t_sense = trc
+        t_fire = trc
+        margin_fire = trc
+
+    valid = jnp.asarray(view.valid)
+    feasible = (geom.manufacturable
+                & (margin >= cal.MIN_FUNCTIONAL_MARGIN_MV - 1e-9)
+                & (margin_d >= cal.MIN_DISTURBED_MARGIN_MV - 1e-9)
+                & valid)
+    if dv_sense is not None:
+        # a design whose timing never closed (NaN tRC: a phase timed out,
+        # or the WL ramp starved signal development past the ACT window)
+        # is invalid as a design, not merely slow
+        feasible = feasible & jnp.isfinite(trc)
+
+    return dict(
+        density_gb_mm2=dens, height_um=height, cbl_ff=cbl,
+        margin_mv=margin, margin_disturbed_mv=margin_d,
+        trc_ns=jnp.asarray(trc, jnp.float32),
+        t_sense_ns=jnp.asarray(t_sense, jnp.float32),
+        t_fire_ns=jnp.asarray(t_fire, jnp.float32),
+        margin_fire_mv=margin_fire, e_write_fj=e_wr, e_read_fj=e_rd,
+        hcb_pitch_um=geom.hcb_pitch_um.astype(jnp.float32),
+        blsa_area_um2=geom.blsa_area_um2.astype(jnp.float32),
+        manufacturable=geom.manufacturable, feasible=feasible)
+
+
+def score_from_events(view, cbl_ff, sa_tau_ns, t_overhead_ns, evt) -> dict:
+    """Rollup + scoring from raw fused-engine event columns -> column dict.
+
+    `evt` is the engine's (B_ops, 4) output BEFORE replica de-interleave;
+    `sa_tau_ns` / `t_overhead_ns` are the matching operand-length rollup
+    vectors.  On replica spaces (`view.replica`, static) the main rows
+    sit at odd indices and B_ops == 2 * len(view).
+
+    This is THE scoring program of the sweep: the sequential path runs
+    it under one `jax.jit`, the sharded path runs the same function as a
+    per-device `shard_map` body (`launch.shard`) — identical per-row
+    arithmetic, hence bit-identical columns.
+    """
+    sa_tau = jnp.asarray(sa_tau_ns, jnp.float32)
+    overhead = jnp.asarray(t_overhead_ns, jnp.float32)
+    if view.replica:
+        evt = evt[1::2]
+        sa_tau = sa_tau[1::2]
+        overhead = overhead[1::2]
+    t_sense, _t_restore, trc = transient._regen_and_totals(
+        sa_tau, overhead, evt[:, 0], evt[:, 1], evt[:, 2], evt[:, 3])
+    return score_columns(view, cbl_ff, trc=trc, t_sense=t_sense,
+                         t_fire=evt[:, 0], dv_sense=evt[:, 1])
+
+
+# The ONE compiled scoring program (see score_from_events): module-level
+# so the sequential sweep, the serving finalize, and repeat calls all hit
+# the same jit cache.
+_score_columns_jit = jax.jit(score_columns)
+_score_from_events_jit = jax.jit(score_from_events)
+
+
+def assemble_batch(sp, cols: dict) -> DesignBatch:
+    """Zip scored metric columns with a lowered space's identity columns
+    into the contract-checked `DesignBatch`.
+
+    `cols` is a `score_columns`-shaped dict (device or host arrays —
+    the sharded sweep hands back gathered numpy columns); `sp` supplies
+    the per-point identity (indices, layers, validity, corner values)
+    and the static names/layout.
+    """
+    batch = DesignBatch(
+        tech_idx=jnp.asarray(sp.tech_idx), scheme_idx=jnp.asarray(sp.scheme_idx),
+        layers=sp.layers, valid=jnp.asarray(sp.valid),
+        corners={k: jnp.asarray(v) for k, v in sp.corners.items()},
+        tech_names=sp.tech_names, scheme_names=sp.scheme_names,
+        n_samples=sp.samples, base_len=sp.base_len,
+        **{k: jnp.asarray(v) for k, v in cols.items()})
+    contracts.check_batch(batch, where="dse.sweep")
+    return batch
+
+
 def finalize_sweep(plan: SweepPlan,
                    res: transient.RowCycleResult | None = None) -> DesignBatch:
     """Score a planned sweep into a `DesignBatch`.
 
     `res` is the fused-engine result for `plan.operands` (None iff the
     plan was made with `with_transient=False`).  This is the second half
-    of `sweep`: every non-transient metric is computed here as flat (B,)
-    arrays over the plan's lowered space, then assembled with the
-    transient columns into the batch.
+    of `sweep`: the jitted `score_from_events` program rolls the raw
+    engine events up and scores every metric as flat (B,) arrays over
+    the plan's lowered space — the same program the sharded driver runs
+    per device — then `assemble_batch` zips in the identity columns.
     """
     if plan.with_transient != (res is not None):
         raise ValueError(
             "finalize_sweep needs the fused-engine result exactly when "
             "the plan lowered transient operands (with_transient="
             f"{plan.with_transient}, res={'set' if res is not None else 'None'})")
-    sp = plan.sp
-    cbl = plan.par.c_bl_total_ff
-    dens = bit_density_lowered(sp)
-    height = stack_height_lowered(sp)
-    margin = sense_margin_lowered(sp, cbl_ff=cbl)
-    margin_d = sense_margin_lowered(sp, with_disturb=True, cbl_ff=cbl)
-    e_wr = write_energy_lowered(sp, cbl_ff=cbl)
-    e_rd = read_energy_lowered(sp, cbl_ff=cbl)
-    geom = bonding_geometry_lowered(sp)
-
-    if res is not None:
-        trc, t_sense = res.trc_ns, res.t_sense_ns
-        t_fire = res.t_fire_ns
-        # margin actually available at the SA fire: the simulated
-        # developed signal at the enable instant minus the SA offset
-        # (per-sample on MC spaces, calibrated corner otherwise) — the
-        # closed-timing counterpart of the analytic charge-share margin.
-        sa_offset = sp.corner("mc_sa_offset_mv", None)
-        if sa_offset is None:
-            sa_offset = jnp.asarray(sp.tech("sa_offset_mv"), jnp.float32)
-        margin_fire = (res.dv_sense_v * 1e3 - sa_offset).astype(jnp.float32)
+    view = SpaceView.from_lowered(plan.sp)
+    cbl = jnp.asarray(plan.par.c_bl_total_ff, jnp.float32)
+    if res is None:
+        cols = _score_columns_jit(view, cbl)
+    elif res.events is not None:
+        cols = _score_from_events_jit(
+            view, cbl, plan.operands.sa_tau_ns, plan.operands.t_overhead_ns,
+            res.events)
     else:
-        trc = jnp.full((len(sp),), jnp.nan, jnp.float32)
-        t_sense = trc
-        t_fire = trc
-        margin_fire = trc
-
-    valid = jnp.asarray(sp.valid)
-    feasible = (geom.manufacturable
-                & (margin >= cal.MIN_FUNCTIONAL_MARGIN_MV - 1e-9)
-                & (margin_d >= cal.MIN_DISTURBED_MARGIN_MV - 1e-9)
-                & valid)
-    if res is not None:
-        # a design whose timing never closed (NaN tRC: a phase timed out,
-        # or the WL ramp starved signal development past the ACT window)
-        # is invalid as a design, not merely slow
-        feasible = feasible & jnp.isfinite(trc)
-
-    batch = DesignBatch(
-        tech_idx=jnp.asarray(sp.tech_idx), scheme_idx=jnp.asarray(sp.scheme_idx),
-        layers=sp.layers, density_gb_mm2=dens, height_um=height,
-        cbl_ff=cbl.astype(jnp.float32), margin_mv=margin,
-        margin_disturbed_mv=margin_d, trc_ns=trc, t_sense_ns=t_sense,
-        t_fire_ns=t_fire, margin_fire_mv=margin_fire,
-        e_write_fj=e_wr, e_read_fj=e_rd,
-        hcb_pitch_um=geom.hcb_pitch_um.astype(jnp.float32),
-        blsa_area_um2=geom.blsa_area_um2.astype(jnp.float32),
-        manufacturable=geom.manufacturable, feasible=feasible, valid=valid,
-        corners={k: jnp.asarray(v) for k, v in sp.corners.items()},
-        tech_names=sp.tech_names, scheme_names=sp.scheme_names,
-        n_samples=sp.samples, base_len=sp.base_len)
-    contracts.check_batch(batch, where="dse.sweep")
-    return batch
+        # result built without raw events (legacy construction): score
+        # from the rolled-up columns; matches the events path up to the
+        # compiler's instruction scheduling of the rollup.
+        cols = _score_columns_jit(view, cbl, res.trc_ns, res.t_sense_ns,
+                                  res.t_fire_ns, res.dv_sense_v)
+    return assemble_batch(plan.sp, cols)
 
 
 def sweep(space: DesignSpace | None = None, with_transient: bool = True,
@@ -201,10 +282,12 @@ def sweep(space: DesignSpace | None = None, with_transient: bool = True,
     plans into one shared dispatch and finalize each identically.
 
     `sharding` (a `jax.sharding.Mesh` or `NamedSharding`) distributes
-    that fused dispatch over a device mesh instead — each device (and
-    each host under multi-process JAX) evaluates its own slab of the
-    grid via `repro.launch.shard`, with results bit-identical to the
-    single-host path (which remains the equivalence oracle).
+    BOTH the fused dispatch and the metric scoring over a device mesh —
+    each device (and each host under multi-process JAX) evaluates and
+    scores its own slab of the grid via `repro.launch.shard`, so no
+    per-point intermediate ever materializes host-side; results are
+    bit-identical to the single-host path (which remains the
+    equivalence oracle).
     """
     if sharding is not None and not with_transient:
         raise ValueError(
@@ -212,15 +295,15 @@ def sweep(space: DesignSpace | None = None, with_transient: bool = True,
             "with_transient=False sweep is host-side array ops with "
             "nothing to shard — pass sharding=None")
     plan = plan_sweep(space, with_transient=with_transient)
+    if plan.operands is not None and sharding is not None:
+        from ..launch import shard
+        cols = shard.sharded_sweep_columns(plan, sharding, backend=backend,
+                                           b_chunk=b_chunk)
+        return assemble_batch(plan.sp, cols)
     res = None
     if plan.operands is not None:
-        if sharding is not None:
-            from ..launch import shard
-            res = shard.simulate_row_cycle_sharded(
-                plan.operands, sharding, backend=backend, b_chunk=b_chunk)
-        else:
-            res = simulate_row_cycle_many(plan.operands, backend=backend,
-                                          b_chunk=b_chunk)
+        res = simulate_row_cycle_many(plan.operands, backend=backend,
+                                      b_chunk=b_chunk)
     return finalize_sweep(plan, res)
 
 
@@ -230,7 +313,7 @@ def sweep(space: DesignSpace | None = None, with_transient: bool = True,
 
 def pareto_mask(batch: DesignBatch, require_feasible: bool = True,
                 block: int = 4096, extra_maximize=(),
-                extra_minimize=()) -> jnp.ndarray:
+                extra_minimize=(), sharding=None) -> jnp.ndarray:
     """Non-dominated mask maximizing density & disturbed margin, minimizing
     tRC & read energy.  Pure jnp (jit-compatible): the O(n^2) pairwise
     comparison runs as masked broadcasts over fixed-size dominator blocks,
@@ -242,6 +325,14 @@ def pareto_mask(batch: DesignBatch, require_feasible: bool = True,
     (`batch.mc_summary(...).corners["yield_frac"]`) as a maximized
     objective alongside the nominal metrics.
 
+    `sharding` (Mesh / NamedSharding) distributes the dominator blocks
+    over a device mesh instead of the host loop: each device tests its
+    own dominator slab against the (replicated) full batch and the
+    per-device dominated masks OR-reduce across the mesh
+    (`launch.shard.sharded_pareto_mask`).  Dominance tests are exact
+    comparisons and boolean OR is order-independent, so the sharded mask
+    is bit-identical to the sequential one.
+
     NaN metrics (e.g. tRC with `with_transient=False`) never dominate and
     are never dominated — matching the legacy pairwise semantics.
     """
@@ -252,6 +343,11 @@ def pareto_mask(batch: DesignBatch, require_feasible: bool = True,
                     *(jnp.asarray(x) for x in extra_maximize)], axis=1)
     lo = jnp.stack([batch.trc_ns, batch.e_read_fj,
                     *(jnp.asarray(x) for x in extra_minimize)], axis=1)
+    if sharding is not None:
+        from ..launch import shard
+        dominated = shard.sharded_pareto_dominated(hi, lo, cand, sharding,
+                                                   block=block)
+        return cand & ~jnp.asarray(dominated)
     b = hi.shape[0]
     dominated = jnp.zeros((b,), bool)
     for i0 in range(0, b, block):          # dominator blocks (static count)
@@ -290,16 +386,18 @@ def _legacy_points(points_or_batch):
 
 
 def pareto_front(points_or_batch, require_feasible: bool = True,
-                 extra_maximize=(), extra_minimize=()):
+                 extra_maximize=(), extra_minimize=(), sharding=None):
     """Non-dominated set.  `DesignBatch` in -> filtered `DesignBatch` out;
     legacy `list[DesignPoint]` in -> list out (order preserved), bridged
     through the `as_batch` adapter.  Extra (B,) objective columns (e.g.
-    an MC yield column) pass through to `pareto_mask`."""
+    an MC yield column) and `sharding` (distribute the dominance test
+    over a device mesh) pass through to `pareto_mask`."""
     points = _legacy_points(points_or_batch)
     batch = as_batch(points_or_batch if points is None else points)
     mask = np.asarray(pareto_mask(batch, require_feasible,
                                   extra_maximize=extra_maximize,
-                                  extra_minimize=extra_minimize))
+                                  extra_minimize=extra_minimize,
+                                  sharding=sharding))
     if points is None:
         return batch.select(mask)
     return [p for p, m in zip(points, mask) if m]

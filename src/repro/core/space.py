@@ -48,6 +48,7 @@ import itertools
 from dataclasses import dataclass, field, replace
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from . import calibration as cal
@@ -167,6 +168,118 @@ class LoweredSpace:
         if name in self.corners:
             return jnp.asarray(self.corners[name], jnp.float32)
         return default
+
+
+def _opaque_table(vals: np.ndarray) -> jnp.ndarray:
+    """Calibration table as runtime data, not a foldable constant.
+
+    Inside jit, a registry table baked as a literal lets XLA constant-fold
+    the gather (and arithmetic downstream of it) at compile time — so two
+    spaces whose per-row VALUES are bit-identical but whose (static) name
+    tuples differ would compile to different arithmetic and drift by an
+    ulp.  The barrier makes every compiled program compute from opaque
+    runtime tables, exactly like the eager/host gather path, which is
+    what keeps chunked, sharded and monolithic sweeps bit-identical.
+    """
+    return jax.lax.optimization_barrier(jnp.asarray(vals))
+
+
+@dataclass(frozen=True)
+class SpaceView:
+    """Device-side twin of `LoweredSpace`: the same duck-typed protocol
+    (`layers` / `valid` / `tech()` / `scheme()` / `corner()`), but every
+    per-point array is a jnp leaf and the calibration gathers are jnp
+    ops, so a view can flow through jit / shard_map.  This is what lets
+    the whole DSE metric pipeline run *inside* the sharded dispatch
+    (`repro.launch.shard`), one batch slab per device, instead of
+    materializing host-side (B,) arrays.
+
+    Registered as a pytree: the index/layer/valid/corner arrays are
+    leaves (sharded over the batch axis by the driver); the name tuples
+    and the MC layout are static aux data, so every space with the same
+    structure shares one jit cache entry.  Calibration tables are read
+    from the live registries at trace time through the static name
+    tuples and baked into the compiled program as constants — the same
+    registry values the host path reads.
+    """
+
+    tech_names: tuple
+    scheme_names: tuple
+    tech_idx: jnp.ndarray       # (B,) int32 into tech_names
+    scheme_idx: jnp.ndarray     # (B,) int32 into scheme_names
+    layers: jnp.ndarray         # (B,) float32
+    valid: jnp.ndarray          # (B,) bool
+    corners: dict
+    samples: int = 1
+    replica: bool = False
+
+    @classmethod
+    def from_lowered(cls, sp: "LoweredSpace") -> "SpaceView":
+        return cls(
+            tech_names=tuple(sp.tech_names),
+            scheme_names=tuple(sp.scheme_names),
+            tech_idx=jnp.asarray(sp.tech_idx, jnp.int32),
+            scheme_idx=jnp.asarray(sp.scheme_idx, jnp.int32),
+            layers=jnp.asarray(sp.layers_np, jnp.float32),
+            valid=jnp.asarray(sp.valid),
+            corners={k: jnp.asarray(v, jnp.float32)
+                     for k, v in sp.corners.items()},
+            samples=sp.samples, replica=bool(sp.replica))
+
+    def __len__(self) -> int:
+        return int(self.tech_idx.shape[0])
+
+    @property
+    def base_len(self) -> int:
+        return len(self) // self.samples
+
+    def tech(self, fieldname: str) -> jnp.ndarray:
+        """Per-point gather of a TechCal field (jnp, trace-compatible)."""
+        vals = np.asarray([getattr(cal.get_tech(n), fieldname)
+                           for n in self.tech_names])
+        return _opaque_table(vals)[self.tech_idx]
+
+    def scheme(self, fieldname: str) -> jnp.ndarray:
+        """Per-point gather of a SchemeSpec field (jnp, trace-compatible)."""
+        vals = np.asarray([getattr(routing.scheme_spec(n), fieldname)
+                           for n in self.scheme_names])
+        return _opaque_table(vals)[self.scheme_idx]
+
+    def corner(self, name: str, default):
+        if name in self.corners:
+            return self.corners[name]
+        return default
+
+    def pad_to(self, total: int) -> "SpaceView":
+        """Append inactive rows (valid=False) up to `total` — the view
+        counterpart of `transient._pad_operands`, so a padded dispatch
+        slab scores padding rows with benign finite inputs and drops
+        them on the host slice."""
+        pad = total - len(self)
+        if pad < 0:
+            raise ValueError(f"pad_to({total}) smaller than view ({len(self)})")
+        if pad == 0:
+            return self
+        pad1 = lambda x, v: jnp.pad(x, (0, pad), constant_values=v)
+        return replace(
+            self,
+            tech_idx=pad1(self.tech_idx, 0), scheme_idx=pad1(self.scheme_idx, 0),
+            layers=pad1(self.layers, 1.0), valid=pad1(self.valid, False),
+            corners={k: pad1(v, 0.0) for k, v in self.corners.items()})
+
+    def slice_rows(self, lo: int, hi: int) -> "SpaceView":
+        """Contiguous row slab [lo, hi) — the elastic re-slabbing unit."""
+        return replace(
+            self,
+            tech_idx=self.tech_idx[lo:hi], scheme_idx=self.scheme_idx[lo:hi],
+            layers=self.layers[lo:hi], valid=self.valid[lo:hi],
+            corners={k: v[lo:hi] for k, v in self.corners.items()})
+
+
+jax.tree_util.register_dataclass(
+    SpaceView,
+    data_fields=("tech_idx", "scheme_idx", "layers", "valid", "corners"),
+    meta_fields=("tech_names", "scheme_names", "samples", "replica"))
 
 
 def _gradient_basis(positions: np.ndarray, corr_length: np.ndarray,

@@ -67,6 +67,11 @@ class RowCycleResult:
     traces: dict                  # phase -> (T, B, N) waveforms (phased only)
     t_fire_ns: jnp.ndarray | None = None  # SA-enable fire time (the ACT
     # first-crossing; replica-closed when the replica path is enabled)
+    events: jnp.ndarray | None = None     # raw (B, 4) fused-engine event
+    # columns BEFORE replica de-interleave — the exact engine output.
+    # Carried so `dse.finalize_sweep` can re-derive every scored column
+    # through the one jitted rollup+score program both the sequential
+    # and sharded sweeps run (their bit-equivalence contract).
 
 
 def _first_crossing_ns(trace_ok: jnp.ndarray, dt: float) -> jnp.ndarray:
@@ -360,6 +365,7 @@ def result_from_events(operands: FusedOperands,
     result covers the main rows (odd indices) and has the design-point
     length the caller handed to `lower_design_operands`.
     """
+    raw = evt
     sa_tau, overhead = operands.sa_tau_ns, operands.t_overhead_ns
     if getattr(operands, "replica", False):
         evt = evt[1::2]
@@ -370,7 +376,7 @@ def result_from_events(operands: FusedOperands,
     return RowCycleResult(
         t_sense_ns=t_sense, t_restore_ns=t_restore,
         t_precharge_ns=evt[:, 3], trc_ns=trc,
-        dv_sense_v=evt[:, 1], traces={}, t_fire_ns=evt[:, 0])
+        dv_sense_v=evt[:, 1], traces={}, t_fire_ns=evt[:, 0], events=raw)
 
 
 def row_cycle_events(operands: FusedOperands, backend: str = "auto",

@@ -55,6 +55,7 @@ from .mesh import make_sweep_mesh
 __all__ = [
     "sweep_sharding", "batch_sharding", "put_global",
     "row_cycle_fused_sharded", "simulate_row_cycle_sharded",
+    "sharded_sweep_columns", "sharded_pareto_dominated",
     "sharded_sweep",
 ]
 
@@ -194,6 +195,172 @@ def simulate_row_cycle_sharded(operands: FusedOperands, sharding=None,
     contracts.check_operands(operands, where="shard.simulate_row_cycle_sharded")
     evt, _ = row_cycle_fused_sharded(operands, sharding, backend, b_chunk)
     return transient.result_from_events(operands, evt)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_scorer(mesh: Mesh):
+    """jit(shard_map(...)) of the sweep's rollup+score program, cached per
+    mesh.  The body is `dse.score_from_events` — the IDENTICAL function
+    the sequential `finalize_sweep` runs under a plain `jax.jit` — so the
+    per-row arithmetic (and hence every scored column) is bit-identical;
+    only the slab placement differs.  All per-row ops are elementwise, so
+    no cross-device communication happens here at all."""
+    from ..core import dse
+    axis = mesh.axis_names
+    in_specs = (P(axis), P(axis), P(axis), P(axis), P(axis, None))
+    return jax.jit(shard_map(dse.score_from_events, mesh=mesh,
+                             in_specs=in_specs, out_specs=P(axis),
+                             check_rep=False))
+
+
+def _gather_columns(cols: dict, b: int) -> dict:
+    """Slice scored column shards back to the caller's B rows.
+
+    Fully-addressable results (single process, or a multi-process run
+    dispatching on its local mesh): lazy slices of the sharded arrays —
+    the only host-side materialization of the whole sweep, (B,) per
+    column.  Results sharded across processes: every process needs the
+    full columns to assemble an identical `DesignBatch`, so the
+    addressable shards are allgathered first.
+    """
+    gathered = {}
+    for k, v in cols.items():
+        if not getattr(v, "is_fully_addressable", True):
+            from jax.experimental import multihost_utils
+            v = np.asarray(multihost_utils.process_allgather(v, tiled=True))
+        gathered[k] = v[:b]
+    return gathered
+
+
+def sharded_sweep_columns(plan, sharding=None, backend: str = "auto",
+                          b_chunk: int = transient.DEFAULT_B_CHUNK,
+                          rows: tuple[int, int] | None = None) -> dict:
+    """Device-side scored columns for a planned sweep -> dict of (B,) arrays.
+
+    The end-to-end sharded pipeline of `dse.sweep(space, sharding=...)`:
+    pad the plan's operand batch to identical per-device slabs, run the
+    fused engine under `shard_map` (`_sharded_engine`), keep the raw
+    event columns ON DEVICE as a sharded global array, and run the
+    rollup+score program (`dse.score_from_events`) as a second sharded
+    dispatch over the same slabs — no (B, N)-scale intermediate and no
+    per-metric array ever materializes host-side.  Returns the
+    `dse.score_columns` dict, sliced to the plan's design-point count,
+    ready for `dse.assemble_batch`.
+
+    `rows=(lo, hi)` restricts the dispatch to the design-point slab
+    [lo, hi) — the elastic re-slabbing unit (`launch.elastic`): a slab's
+    columns are computed on whatever mesh the survivors form, and
+    concatenating slab columns in order reproduces the full-range result
+    bit-identically (per-row arithmetic is slab-shape independent).
+    On replica spaces the operand rows are the interleaved
+    [replica, main] pairs of the point range (alignment is safe: every
+    slab boundary is even, B_ALIGN being so).
+    """
+    from ..core.space import SpaceView
+    b_chunk = transient.validate_b_chunk(b_chunk)
+    mesh = _as_mesh(sharding)
+    sharding = sweep_sharding(mesh)
+    operands = plan.operands
+    contracts.check_operands(operands, where="shard.sharded_sweep_columns")
+    factor = 2 if operands.replica else 1
+    view = SpaceView.from_lowered(plan.sp)
+    cbl = jnp.asarray(plan.par.c_bl_total_ff, jnp.float32)
+    sa_tau, overhead = operands.sa_tau_ns, operands.t_overhead_ns
+    core = list(operands[:6])
+    lo, hi = (0, len(view)) if rows is None else rows
+    if not (0 <= lo <= hi <= len(view)):
+        raise ValueError(f"rows={rows} outside the plan's design-point "
+                         f"range [0, {len(view)})")
+    if rows is not None:
+        view = view.slice_rows(lo, hi)
+        cbl = cbl[lo:hi]
+        core = [x[factor * lo:factor * hi] for x in core]
+        sa_tau = sa_tau[factor * lo:factor * hi]
+        overhead = overhead[factor * lo:factor * hi]
+
+    n_dev = int(mesh.devices.size)
+    b_ops = core[0].shape[0]
+    b_pts = hi - lo
+    target_ops = _dispatch_target(b_ops, n_dev, b_chunk)
+    pad_ops = target_ops - b_ops
+    target_pts = target_ops // factor
+
+    padded = transient._pad_operands(core, pad_ops)
+    padded = [put_global(x, sharding) for x in padded]
+    evt, _ = _sharded_engine(mesh, backend, b_chunk)(*padded)
+
+    sa_tau = jnp.pad(sa_tau, (0, pad_ops), constant_values=1.0)
+    overhead = jnp.pad(overhead, (0, pad_ops), constant_values=0.0)
+    view = jax.tree.map(lambda x: put_global(x, sharding),
+                        view.pad_to(target_pts))
+    cbl = put_global(jnp.pad(cbl, (0, target_pts - b_pts),
+                             constant_values=1.0), sharding)
+    sa_tau = put_global(sa_tau, sharding)
+    overhead = put_global(overhead, sharding)
+    cols = _sharded_scorer(mesh)(view, cbl, sa_tau, overhead, evt)
+    return _gather_columns(cols, b_pts)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_pareto_engine(mesh: Mesh, block: int):
+    """jit(shard_map(...)) of the Pareto dominance test, cached per
+    (mesh, block).  Each device sweeps ITS dominator slab over the full
+    (replicated) candidate batch in `block`-row sub-blocks — the exact
+    masked-broadcast body of the sequential `dse.pareto_mask` loop — and
+    the per-device dominated masks OR-reduce across the mesh.  Dominance
+    is pure comparisons + boolean algebra (no rounding anywhere) and OR
+    is commutative, so the reduced mask is bit-identical to the
+    sequential block loop's."""
+    axis = mesh.axis_names
+
+    def device_fn(hi_d, lo_d, cand_d, hi, lo, cand):
+        b = hi.shape[0]
+        dominated = jnp.zeros((b,), bool)
+        nloc = hi_d.shape[0]
+        for i0 in range(0, nloc, block):   # dominator sub-blocks (static)
+            hi_i, lo_i = hi_d[i0:i0 + block], lo_d[i0:i0 + block]
+            cand_i = cand_d[i0:i0 + block]
+            ge = ((hi_i[:, None, :] >= hi[None, :, :]).all(-1)
+                  & (lo_i[:, None, :] <= lo[None, :, :]).all(-1))
+            gt = ((hi_i[:, None, :] > hi[None, :, :]).any(-1)
+                  | (lo_i[:, None, :] < lo[None, :, :]).any(-1))
+            dominated |= (ge & gt & cand_i[:, None] & cand[None, :]).any(axis=0)
+        return jax.lax.psum(dominated.astype(jnp.int32), axis) > 0
+
+    in_specs = (P(axis, None), P(axis, None), P(axis), P(), P(), P())
+    return jax.jit(shard_map(device_fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=P(), check_rep=False))
+
+
+def sharded_pareto_dominated(hi, lo, cand, sharding=None,
+                             block: int = 4096) -> jnp.ndarray:
+    """Sharded dominated-mask for `dse.pareto_mask` -> (B,) bool.
+
+    `hi` / `lo` are the stacked (B, K) maximize/minimize objective
+    columns and `cand` the (B,) candidate mask.  The dominator axis is
+    padded to identical per-device slabs (padding rows carry cand=False,
+    so they dominate nothing) and each device tests its slab against the
+    full batch; a cross-device OR-reduce merges the verdicts.  NaN
+    objectives compare False in every direction, so NaN rows neither
+    dominate nor get spuriously dominated — exactly the sequential
+    semantics.
+    """
+    mesh = _as_mesh(sharding)
+    sharding = sweep_sharding(mesh)
+    replicated = NamedSharding(mesh, P())
+    n_dev = int(mesh.devices.size)
+    hi = jnp.asarray(hi)
+    lo = jnp.asarray(lo)
+    cand = jnp.asarray(cand)
+    b = int(hi.shape[0])
+    pad = -(-b // n_dev) * n_dev - b
+    hi_d = put_global(jnp.pad(hi, ((0, pad), (0, 0))), sharding)
+    lo_d = put_global(jnp.pad(lo, ((0, pad), (0, 0))), sharding)
+    cand_d = put_global(jnp.pad(cand, (0, pad)), sharding)
+    full = [put_global(x, replicated) for x in (hi, lo, cand)]
+    # out_specs=P() -> the mask comes back fully replicated, so it is
+    # addressable (and identical) on every process — no gather needed.
+    return _sharded_pareto_engine(mesh, int(block))(hi_d, lo_d, cand_d, *full)
 
 
 def sharded_sweep(space=None, mesh=None, **sweep_kwargs):

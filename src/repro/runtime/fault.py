@@ -43,7 +43,12 @@ class HeartbeatMonitor:
 @dataclass
 class FailureInjector:
     """Deterministic schedule: {step: kind} with kind in
-    {"crash", "nan", "slow:<worker>"}."""
+    {"crash", "nan", "slow:<worker>", "drop:<worker>"}.
+
+    `FaultTolerantRunner` interprets "crash"/"nan" itself; other kinds
+    are consumer-defined — the elastic sweep driver (`launch.elastic`)
+    keys its schedule by slab index and reads "drop:<host>" as that
+    simulated host ceasing to heartbeat after the slab's dispatch."""
     schedule: dict[int, str] = field(default_factory=dict)
     fired: set = field(default_factory=set)
 

@@ -22,7 +22,8 @@ import bench_check  # noqa: E402  (tools/ is not a package)
 
 
 def record(fused_designs_per_s=50_000.0, sharded_points_per_s=9_000.0,
-           replica_designs_per_s=None):
+           replica_designs_per_s=None, pareto_points_per_s=80_000.0,
+           elastic_frac=0.25):
     # replica throughput tracks the plain fused metric (~half: 2 rows
     # per design) unless a test pins it explicitly
     if replica_designs_per_s is None:
@@ -36,6 +37,8 @@ def record(fused_designs_per_s=50_000.0, sharded_points_per_s=9_000.0,
             "sharded_sweep": {
                 "per_device": {"1": {"points_per_s": sharded_points_per_s}},
                 "best_scaling_vs_1dev": 1.7,
+                "sharded_pareto_points_per_s": pareto_points_per_s,
+                "elastic_resume_overhead_frac": elastic_frac,
             },
         },
         "failed": [],
@@ -109,6 +112,39 @@ class TestGate:
         gone = record()
         del gone["benches"]["sharded_sweep"]
         assert run_main(tmp_path, gone, record()) == 2
+
+    def test_all_broken_metrics_reported_at_once(self, tmp_path, capsys):
+        # TWO unreadable gated metrics -> ONE aggregated error naming
+        # both, so a broken record is fixed in one round trip
+        broken = record()
+        del broken["benches"]["fused_rc"]["designs_per_s"]
+        del broken["benches"]["sharded_sweep"][
+            "sharded_pareto_points_per_s"]
+        assert run_main(tmp_path, broken, record()) == 2
+        err = capsys.readouterr().err
+        assert "fused_rc.designs_per_s" in err
+        assert "sharded_sweep.sharded_pareto_points_per_s" in err
+        assert "2 gated metric(s)" in err
+
+    def test_lower_is_better_metric_gated_in_its_direction(self, tmp_path,
+                                                           capsys):
+        # the elastic recovery-overhead fraction regresses by RISING:
+        # 0.25 -> 0.50 must fail while 0.25 -> 0.0 (an improvement a
+        # higher-is-better gate would flag) must pass
+        assert run_main(tmp_path, record(elastic_frac=0.50),
+                        record(elastic_frac=0.25)) == 1
+        assert ("sharded_sweep.elastic_resume_overhead_frac"
+                in capsys.readouterr().err)
+        assert run_main(tmp_path, record(elastic_frac=0.0),
+                        record(elastic_frac=0.25)) == 0
+
+    def test_zero_cost_baseline_rejects_any_cost(self, tmp_path, capsys):
+        # a 0.0 lower-is-better baseline means the recovery path was
+        # free; any nonzero cost is a regression, not a ratio
+        assert run_main(tmp_path, record(elastic_frac=0.01),
+                        record(elastic_frac=0.0)) == 1
+        assert run_main(tmp_path, record(elastic_frac=0.0),
+                        record(elastic_frac=0.0)) == 0
 
     def test_malformed_json_fails(self, tmp_path, capsys):
         cur = write(tmp_path, "current.json", "{not json")
@@ -191,8 +227,11 @@ class TestSchema:
             merged["benches"].update(
                 bench_check.load_record(path)["benches"])
         for bench, metric_paths in bench_check.GATED_METRICS.items():
-            for mpath in metric_paths:
-                assert bench_check.get_metric(merged, bench, mpath) > 0.0
+            for mpath, direction in metric_paths.items():
+                value = bench_check.get_metric(merged, bench, mpath)
+                assert direction in ("higher", "lower")
+                # throughputs must be positive; costs merely non-negative
+                assert value > 0.0 if direction == "higher" else value >= 0.0
 
     @pytest.mark.slow
     def test_fresh_bench_json_metrics_are_finite(self, tmp_path):

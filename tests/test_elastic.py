@@ -1,7 +1,10 @@
 """Elastic restart: checkpoint written on one mesh restores onto another
-(shrunk) mesh with resharding; perf-lever configs compile multi-device.
+(shrunk) mesh with resharding; perf-lever configs compile multi-device;
+and the elastic SWEEP driver (`launch.elastic`) survives injected host
+drops — re-slabbing onto the survivors' mesh and resuming from the last
+completed slab with a bit-identical DesignBatch.
 
-Runs in a subprocess with 8 forced host devices.
+Runs in subprocesses with 8 forced host devices.
 """
 
 import json
@@ -121,3 +124,79 @@ def test_elastic_restore_onto_smaller_mesh(result):
 def test_opt_levels_compile_multidevice(result):
     assert result["opt7_mamba2-780m"]
     assert result["opt4_deepseek-67b"]
+
+
+# ---------------------------------------------------------------------------
+# Elastic SWEEP driver: injected host drop -> re-slab -> bit-identical
+# ---------------------------------------------------------------------------
+
+ELASTIC_SWEEP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    from repro.core import dse
+    from repro.core.batch import ARRAY_FIELDS
+    from repro.core.space import DesignSpace
+    from repro.launch import elastic
+    from repro.launch.mesh import make_sweep_mesh
+    from repro.runtime.fault import FailureInjector
+
+    space = DesignSpace.paper_grid().with_mc(samples=4, key=0)
+    oracle = dse.sweep(space)
+
+    def identical(batch):
+        return bool(all(np.array_equal(np.asarray(getattr(batch, f)),
+                                       np.asarray(getattr(oracle, f)))
+                        for f in ARRAY_FIELDS))
+
+    out = {}
+    # one host stops heartbeating after slab 1's dispatch: detection ->
+    # replan_mesh over the survivors -> resume from the checkpoint
+    batch, rep = elastic.elastic_sweep(
+        space, make_sweep_mesh(),
+        injector=FailureInjector(schedule={1: "drop:host3"}))
+    out["drop"] = {"ok": identical(batch), "restarts": rep.restarts,
+                   "dropped": rep.dropped_hosts,
+                   "devices": rep.device_history,
+                   "frac": rep.resume_overhead_frac}
+    # pile-up: crash, then a drop, then a nan, then a SECOND drop — the
+    # mesh shrinks twice and the batch must still be bit-identical
+    batch, rep = elastic.elastic_sweep(
+        space, make_sweep_mesh(),
+        injector=FailureInjector(schedule={0: "crash", 1: "drop:host0",
+                                           2: "nan", 3: "drop:host5"}))
+    out["multi"] = {"ok": identical(batch), "restarts": rep.restarts,
+                    "dropped": rep.dropped_hosts,
+                    "devices": rep.device_history}
+    print(json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def elastic_sweep_result():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", ELASTIC_SWEEP_SCRIPT],
+                       capture_output=True, text=True, env=env, timeout=560)
+    assert r.returncode == 0, r.stderr[-3000:]
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def test_host_drop_reslab_bit_identical(elastic_sweep_result):
+    rep = elastic_sweep_result["drop"]
+    assert rep["ok"]                       # every column bit-identical
+    assert rep["restarts"] == 1
+    assert rep["dropped"] == ["host3"]
+    # slab 0 ran on 8 devices; the re-dispatched slab 1 onward on 7
+    assert rep["devices"][0] == 8 and rep["devices"][-1] == 7
+    assert rep["frac"] == pytest.approx(0.25)   # one of four slabs redone
+
+
+def test_fault_pileup_shrinks_twice_still_bit_identical(
+        elastic_sweep_result):
+    rep = elastic_sweep_result["multi"]
+    assert rep["ok"]
+    assert rep["restarts"] == 4
+    assert rep["dropped"] == ["host0", "host5"]
+    assert rep["devices"][0] == 8 and rep["devices"][-1] == 6

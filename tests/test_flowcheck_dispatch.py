@@ -92,7 +92,8 @@ class TestSeededFast:
         assert "2 fused dispatch(es)" in f.message
         assert "contract says 1" in f.message
         cfg = stats["configs"]["seeded-extra-dispatch"]
-        assert cfg == {"expected": 1, "actual": 2, "sharded": 0}
+        assert cfg == {"expected": 1, "actual": 2, "sharded": 0,
+                       "scorer": 0, "pareto": 0}
 
     def test_double_pallas_engine_yields_fc105(self):
         """FC105 is the FIRST finding `analyze_bucket` yields and needs

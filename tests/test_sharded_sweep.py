@@ -144,6 +144,27 @@ MESH8_SCRIPT = textwrap.dedent("""
     except ValueError:
         partial_spec_rejected = True
 
+    # sharded Pareto: dominator blocks distributed over the 8 devices
+    # with a psum OR-reduce must stay bit-identical to the sequential
+    # block loop, for block sizes off and on the device-count grid
+    batch = dse.sweep(DesignSpace.paper_grid(), b_chunk=64)
+    ok_pareto = all(
+        np.array_equal(
+            np.asarray(dse.pareto_mask(batch, sharding=mesh, block=blk)),
+            np.asarray(dse.pareto_mask(batch, block=blk)))
+        for blk in (4096, 17))
+    # NaN objective columns must stay inert (never dominate, never be
+    # dominated into oblivion) under the sharded dominance engine too
+    import dataclasses
+    import jax.numpy as jnp
+    marg = np.asarray(batch.margin_mv).copy()
+    marg[::3] = np.nan
+    nan_batch = dataclasses.replace(batch, margin_mv=jnp.asarray(marg))
+    ok_pareto_nan = np.array_equal(
+        np.asarray(dse.pareto_mask(nan_batch, sharding=mesh,
+                                   require_feasible=False)),
+        np.asarray(dse.pareto_mask(nan_batch, require_feasible=False)))
+
     # b_chunk=64 keeps every dispatch (sharded slabs AND the sequential
     # oracle chunks) on ONE compiled shape — the subprocess stays fast
     out = {
@@ -154,6 +175,8 @@ MESH8_SCRIPT = textwrap.dedent("""
         "ok_replica": identical(DesignSpace.paper_targets().with_replica()
                                 .with_mc(samples=8, key=0), 64),
         "ok_spec_guard": partial_spec_rejected,
+        "ok_pareto": bool(ok_pareto),
+        "ok_pareto_nan": bool(ok_pareto_nan),
     }
     print(json.dumps(out))
 """)
@@ -188,6 +211,14 @@ class TestShardedSweepMesh8:
 
     def test_partial_axis_spec_rejected(self, mesh8_result):
         assert mesh8_result["ok_spec_guard"]
+
+    def test_sharded_pareto_bit_identical(self, mesh8_result):
+        """Dominator blocks sharded over 8 devices + psum OR-reduce give
+        the exact sequential mask, for blocks off the device grid too."""
+        assert mesh8_result["ok_pareto"]
+
+    def test_sharded_pareto_nan_inert(self, mesh8_result):
+        assert mesh8_result["ok_pareto_nan"]
 
 
 # ---------------------------------------------------------------------------
@@ -314,20 +345,8 @@ class TestEmptySegmentYieldNaN:
         assert np.isnan(yf[k])
         assert not bool(np.asarray(summ.feasible)[k])  # NaN frac != feasible
 
-    def _two_point_batch(self):
-        from repro.core.batch import DesignPoint
-        mk = lambda dens, marg, trc, erd: DesignPoint(
-            tech="si", scheme="sel_strap", layers=100,
-            density_gb_mm2=dens, height_um=10.0, cbl_ff=30.0,
-            margin_mv=marg, margin_disturbed_mv=marg, trc_ns=trc,
-            e_write_fj=1.0, e_read_fj=erd, hcb_pitch_um=1.0,
-            blsa_area_um2=1.0, feasible=True)
-        # point 0 strictly beats point 1 on every nominal objective
-        return DesignBatch.from_points([mk(8.0, 120.0, 9.0, 1.0),
-                                        mk(4.0, 80.0, 12.0, 2.0)])
-
     def test_nan_yield_is_never_dominated(self):
-        batch = self._two_point_batch()
+        batch = two_point_batch()
         dominated = np.asarray(dse.pareto_mask(
             batch, extra_maximize=(jnp.asarray([1.0, 0.5]),)))
         np.testing.assert_array_equal(dominated, [True, False])
@@ -338,9 +357,102 @@ class TestEmptySegmentYieldNaN:
         np.testing.assert_array_equal(shielded, [True, True])
 
     def test_nan_yield_never_dominates(self):
-        batch = self._two_point_batch()
+        batch = two_point_batch()
         # the nominal winner carries the NaN: it must not knock out the
         # loser, whose yield estimate is real
         mask = np.asarray(dse.pareto_mask(
             batch, extra_maximize=(jnp.asarray([jnp.nan, 0.5]),)))
         np.testing.assert_array_equal(mask, [True, True])
+
+
+def two_point_batch():
+    from repro.core.batch import DesignPoint
+    mk = lambda dens, marg, trc, erd: DesignPoint(
+        tech="si", scheme="sel_strap", layers=100,
+        density_gb_mm2=dens, height_um=10.0, cbl_ff=30.0,
+        margin_mv=marg, margin_disturbed_mv=marg, trc_ns=trc,
+        e_write_fj=1.0, e_read_fj=erd, hcb_pitch_um=1.0,
+        blsa_area_um2=1.0, feasible=True)
+    # point 0 strictly beats point 1 on every nominal objective
+    return DesignBatch.from_points([mk(8.0, 120.0, 9.0, 1.0),
+                                    mk(4.0, 80.0, 12.0, 2.0)])
+
+
+# ---------------------------------------------------------------------------
+# Sharded Pareto + elastic driver, in-process (fast tier, 1-device mesh)
+# ---------------------------------------------------------------------------
+
+class TestShardedParetoSingleDevice:
+    """`pareto_mask(..., sharding=...)` shards DOMINATOR blocks and
+    OR-reduces across devices; comparisons + boolean algebra are exact,
+    so the mask must be bit-identical whatever the block size.  The
+    8-device distribution runs in TestShardedSweepMesh8."""
+
+    def test_bit_identical_across_block_sizes(self):
+        batch = dse.sweep(base_space().with_mc(samples=16, key=1))
+        mesh = make_sweep_mesh()
+        for blk in (4096, 2):
+            np.testing.assert_array_equal(
+                np.asarray(dse.pareto_mask(batch, sharding=mesh,
+                                           block=blk)),
+                np.asarray(dse.pareto_mask(batch, block=blk)),
+                err_msg=f"block={blk}")
+
+    def test_front_passthrough(self):
+        batch = dse.sweep(base_space())
+        front_sh = dse.pareto_front(batch, require_feasible=False,
+                                    sharding=make_sweep_mesh())
+        front_seq = dse.pareto_front(batch, require_feasible=False)
+        assert_batches_identical(front_sh, front_seq)
+
+    def test_nan_semantics_preserved(self):
+        batch = two_point_batch()
+        mesh = make_sweep_mesh()
+        shielded = np.asarray(dse.pareto_mask(
+            batch, sharding=mesh,
+            extra_maximize=(jnp.asarray([1.0, jnp.nan]),)))
+        np.testing.assert_array_equal(shielded, [True, True])
+        mask = np.asarray(dse.pareto_mask(
+            batch, sharding=mesh,
+            extra_maximize=(jnp.asarray([jnp.nan, 0.5]),)))
+        np.testing.assert_array_equal(mask, [True, True])
+
+
+class TestElasticSweepFast:
+    """Fast-tier elastic coverage on the 1-device mesh: the slab loop,
+    checkpointing and crash/nan recovery without the multi-device drop
+    machinery (that runs @slow in test_elastic.py)."""
+
+    def test_fault_free_bit_identical(self):
+        from repro.launch import elastic
+        space = base_space().with_mc(samples=4, key=0)
+        batch, rep = elastic.elastic_sweep(space, make_sweep_mesh(),
+                                           slab_points=5)
+        assert_batches_identical(batch, dse.sweep(space))
+        assert (rep.restarts, rep.recomputed_points) == (0, 0)
+        assert rep.resume_overhead_frac == 0.0
+        assert rep.n_slabs == 3 and rep.total_points == 12
+
+    def test_crash_and_nan_recovery_bit_identical(self):
+        from repro.launch import elastic
+        from repro.runtime.fault import FailureInjector
+        space = base_space().with_mc(samples=4, key=0)
+        batch, rep = elastic.elastic_sweep(
+            space, make_sweep_mesh(), slab_points=5,
+            injector=FailureInjector(schedule={1: "crash", 2: "nan"}))
+        assert_batches_identical(batch, dse.sweep(space))
+        assert rep.restarts == 2
+        # slab 1 holds 5 points, slab 2 only 2 (12 = 5 + 5 + 2)
+        assert rep.recomputed_points == 7
+        assert rep.resume_overhead_frac == pytest.approx(7 / 12)
+
+    def test_dropping_the_last_host_is_fatal(self):
+        # ClusterLostError is NOT a RuntimeError on purpose: the runner
+        # would otherwise restore-and-retry a sweep with no devices left
+        from repro.launch import elastic
+        from repro.runtime.fault import FailureInjector
+        with pytest.raises(elastic.ClusterLostError,
+                           match="all hosts lost"):
+            elastic.elastic_sweep(
+                base_space(), make_sweep_mesh(),
+                injector=FailureInjector(schedule={0: "drop:host0"}))

@@ -6,12 +6,15 @@ record against a committed baseline.
         --baseline benchmarks/baselines/BENCH_sharded_sweep.json \
         --max-regression 0.35
 
-Each benchmark gates on its throughput metrics (`GATED_METRICS`,
-dotted paths into the record's `benches` section, higher is better): the
-gate FAILS when a fresh metric lands more than `--max-regression`
-(default 35%) below the committed baseline — loose enough to tolerate
-shared-runner noise, tight enough to catch a real hot-path regression.
-Metrics missing from either record, or malformed records, fail loudly.
+Each benchmark gates on its metrics (`GATED_METRICS`, dotted paths into
+the record's `benches` section, each tagged "higher" or "lower" for the
+better direction): the gate FAILS when a fresh metric lands more than
+`--max-regression` (default 35%) worse than the committed baseline —
+loose enough to tolerate shared-runner noise, tight enough to catch a
+real hot-path regression.  Metrics missing from either record, or
+malformed records, fail loudly — and every unreadable gated metric is
+reported in ONE error, not just the first, so a broken record is fixed
+in one round trip.
 
 Baselines live in `benchmarks/baselines/` and are committed on purpose:
 re-baseline (re-run `benchmarks/run.py --only <name> --json` and commit
@@ -27,12 +30,18 @@ import math
 import sys
 from pathlib import Path
 
-# bench name (key under the record's "benches") -> dotted metric paths.
-# All gated metrics are throughputs: HIGHER IS BETTER.
+# bench name (key under the record's "benches") -> {dotted metric path:
+# better direction}.  "higher": a throughput, gate fails when the fresh
+# value drops too far below baseline.  "lower": a cost (e.g. the elastic
+# recovery's recomputed-work fraction), gate fails when it rises too far
+# above baseline.
 GATED_METRICS = {
-    "fused_rc": ("designs_per_s", "replica_designs_per_s"),
-    "sharded_sweep": ("per_device.1.points_per_s",),
-    "serve": ("queries_per_s",),
+    "fused_rc": {"designs_per_s": "higher",
+                 "replica_designs_per_s": "higher"},
+    "sharded_sweep": {"per_device.1.points_per_s": "higher",
+                      "sharded_pareto_points_per_s": "higher",
+                      "elastic_resume_overhead_frac": "lower"},
+    "serve": {"queries_per_s": "higher"},
 }
 
 DEFAULT_MAX_REGRESSION = 0.35
@@ -111,29 +120,57 @@ def check(current: dict, baseline: dict,
           max_regression: float = DEFAULT_MAX_REGRESSION) -> list[dict]:
     """Compare every gated metric present in the BASELINE record against
     the current one.  Returns one result dict per metric; a result with
-    `ok=False` is a regression beyond the tolerance."""
+    `ok=False` is a regression beyond the tolerance.  Unreadable gated
+    metrics are collected and raised as ONE aggregated BenchCheckError
+    naming every failure, not just the first."""
     results = []
-    gated = [(bench, path) for bench, paths in GATED_METRICS.items()
-             for path in paths if bench in baseline["benches"]]
+    errors = []
+    gated = [(bench, path, direction)
+             for bench, paths in GATED_METRICS.items()
+             for path, direction in paths.items()
+             if bench in baseline["benches"]]
     if not gated:
         raise BenchCheckError(
             "baseline record holds none of the gated benches "
             f"({sorted(GATED_METRICS)}); nothing to compare")
-    for bench, path in gated:
-        base = get_metric(baseline, bench, path)
-        cur = get_metric(current, bench, path)
-        if base <= 0.0:
-            raise BenchCheckError(
-                f"baseline metric {bench}.{path} is not positive "
-                f"({base}); re-baseline it")
-        ratio = cur / base
+    for bench, path, direction in gated:
+        try:
+            base = get_metric(baseline, bench, path)
+            cur = get_metric(current, bench, path)
+        except BenchCheckError as e:
+            errors.append(str(e))
+            continue
+        if direction == "higher":
+            if base <= 0.0:
+                errors.append(f"baseline metric {bench}.{path} is not "
+                              f"positive ({base}); re-baseline it")
+                continue
+            ratio = cur / base
+            ok = ratio >= 1.0 - max_regression
+        else:   # "lower": a cost — regression means it ROSE past baseline
+            if base < 0.0:
+                errors.append(f"baseline metric {bench}.{path} is negative "
+                              f"({base}); re-baseline it")
+                continue
+            if base > 0.0:
+                ratio = cur / base
+                ok = cur <= base * (1.0 + max_regression)
+            else:
+                # zero-cost baseline: any nonzero cost is a regression
+                ratio = math.inf if cur > 0.0 else 1.0
+                ok = cur <= 0.0
         results.append({
             "metric": f"{bench}.{path}",
+            "direction": direction,
             "baseline": base,
             "current": cur,
             "ratio": ratio,
-            "ok": ratio >= 1.0 - max_regression,
+            "ok": ok,
         })
+    if errors:
+        raise BenchCheckError(
+            f"{len(errors)} gated metric(s) unreadable/invalid:\n  "
+            + "\n  ".join(errors))
     return results
 
 
@@ -170,18 +207,23 @@ def main(argv=None) -> int:
     failed = [r for r in results if not r["ok"]]
     for r in results:
         verdict = "OK" if r["ok"] else "REGRESSED"
+        arrow = "higher=better" if r["direction"] == "higher" \
+            else "lower=better"
         print(f"bench_check: {verdict} {r['metric']}: "
-              f"{r['current']:,.1f} vs baseline {r['baseline']:,.1f} "
-              f"({r['ratio']:.2f}x)")
-        if r["ratio"] >= 1.0 + args.max_regression:
-            print(f"bench_check: note - {r['metric']} improved "
-                  f"{r['ratio']:.2f}x over the baseline; consider "
+              f"{r['current']:,.4g} vs baseline {r['baseline']:,.4g} "
+              f"({r['ratio']:.2f}x, {arrow})")
+        improved = (r["ratio"] >= 1.0 + args.max_regression
+                    if r["direction"] == "higher"
+                    else r["ratio"] <= 1.0 - args.max_regression)
+        if improved:
+            print(f"bench_check: note - {r['metric']} improved to "
+                  f"{r['ratio']:.2f}x of the baseline; consider "
                   "re-baselining (see ROADMAP.md conventions)")
     if failed:
         names = ", ".join(r["metric"] for r in failed)
-        print(f"bench_check: FAIL - throughput regression beyond "
+        print(f"bench_check: FAIL - regression beyond "
               f"{args.max_regression:.0%} tolerance on: {names} "
-              f"(re-run locally; if the slowdown is intentional, "
+              f"(re-run locally; if the change is intentional, "
               f"re-baseline per ROADMAP.md)", file=sys.stderr)
         return 1
     print(f"bench_check: OK ({len(results)} metric(s) within "

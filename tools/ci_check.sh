@@ -78,6 +78,14 @@ JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}" \
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m repro.launch.serve --smoke
 
+# the two-process jax.distributed smoke spawns real child processes, so
+# it is opt-in locally (CI runs it as its own job: multiprocess-smoke)
+if [[ "${MULTIPROC_SMOKE:-0}" == "1" ]]; then
+    echo "== multi-process smoke (2-process jax.distributed cluster) =="
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m repro.launch.multiproc --smoke
+fi
+
 if [[ "${1:-}" == "--slow" ]]; then
     echo "== slow test tier =="
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q -m slow \

@@ -80,11 +80,14 @@ class DispatchRecorder:
     def __init__(self):
         self.engine_calls: list[EngineCall] = []
         self.sharded_calls: list[tuple] = []
+        self.scorer_calls: list[tuple] = []   # device-side rollup+score
+        self.pareto_calls: list[tuple] = []   # sharded dominance engine
         self.orig_engine = None      # unpatched ops.row_cycle_fused
 
     @property
     def total(self) -> int:
-        return len(self.engine_calls) + len(self.sharded_calls)
+        return (len(self.engine_calls) + len(self.sharded_calls)
+                + len(self.scorer_calls) + len(self.pareto_calls))
 
 
 @contextlib.contextmanager
@@ -92,11 +95,13 @@ def record_dispatches():
     """Patch the two dispatch seams and yield a `DispatchRecorder`.
 
     Seams: `ops.row_cycle_fused` (every sequential/chunked/serving path
-    funnels through this module attribute) and `shard._sharded_engine`
-    (lru-cached jit(shard_map); the per-call wrapper counts invocations
-    even when the cached engine is reused).  Tracer-valued calls — the
-    sharded engine re-entering the patched op during its own trace — are
-    not dispatches and are skipped.
+    funnels through this module attribute) and the three lru-cached
+    jit(shard_map) engines of `launch.shard` — `_sharded_engine` (fused
+    kernel), `_sharded_scorer` (device-side rollup+score) and
+    `_sharded_pareto_engine` (distributed dominance) — whose per-call
+    wrappers count invocations even when the cached engine is reused.
+    Tracer-valued calls — the sharded engine re-entering the patched op
+    during its own trace — are not dispatches and are skipped.
     """
     import jax
 
@@ -120,6 +125,8 @@ def record_dispatches():
                     n_pre, backend=backend)
 
     orig_sharded = shard._sharded_engine
+    orig_scorer = shard._sharded_scorer
+    orig_pareto = shard._sharded_pareto_engine
 
     def counted_sharded(mesh, backend, b_chunk):
         inner = orig_sharded(mesh, backend, b_chunk)
@@ -130,13 +137,33 @@ def record_dispatches():
             return inner(*args)
         return run
 
+    def counted_scorer(mesh):
+        inner = orig_scorer(mesh)
+
+        def run(*args):
+            rec.scorer_calls.append((tuple(mesh.shape.items()),))
+            return inner(*args)
+        return run
+
+    def counted_pareto(mesh, block):
+        inner = orig_pareto(mesh, block)
+
+        def run(*args):
+            rec.pareto_calls.append((tuple(mesh.shape.items()), int(block)))
+            return inner(*args)
+        return run
+
     ops.row_cycle_fused = counted
     shard._sharded_engine = counted_sharded
+    shard._sharded_scorer = counted_scorer
+    shard._sharded_pareto_engine = counted_pareto
     try:
         yield rec
     finally:
         ops.row_cycle_fused = orig
         shard._sharded_engine = orig_sharded
+        shard._sharded_scorer = orig_scorer
+        shard._sharded_pareto_engine = orig_pareto
 
 
 # ---------------------------------------------------------------------------
@@ -255,11 +282,16 @@ def _run_service_mixed_replica(rec):
 
 
 def _run_sharded(rec):
+    """Full sharded fabric: one engine dispatch + one device-side scorer
+    dispatch for the sweep, then one sharded dominance dispatch for the
+    Pareto mask — exactly three, never a host-side fallback."""
     from repro.core import dse
     from repro.core.space import DesignSpace
     from repro.launch.mesh import make_sweep_mesh
-    dse.sweep(DesignSpace.paper_targets(), sharding=make_sweep_mesh())
-    return 1
+    mesh = make_sweep_mesh()
+    batch = dse.sweep(DesignSpace.paper_targets(), sharding=mesh)
+    dse.pareto_mask(batch, sharding=mesh)
+    return 3
 
 
 def _run_legacy_params5(rec):
@@ -434,13 +466,17 @@ def audit_dispatch(configs=None, engine_fn=None):
         with record_dispatches() as rec:
             expected = runner(rec)
         per_config[name] = {"expected": expected, "actual": rec.total,
-                            "sharded": len(rec.sharded_calls)}
+                            "sharded": len(rec.sharded_calls),
+                            "scorer": len(rec.scorer_calls),
+                            "pareto": len(rec.pareto_calls)}
         if rec.total != expected:
             findings.append(Finding(
                 "FC101", name, 0, 0,
                 f"entry point issued {rec.total} fused dispatch(es) "
                 f"(engine {len(rec.engine_calls)} + sharded "
-                f"{len(rec.sharded_calls)}), contract says {expected}",
+                f"{len(rec.sharded_calls)} + scorer "
+                f"{len(rec.scorer_calls)} + pareto "
+                f"{len(rec.pareto_calls)}), contract says {expected}",
                 key="dispatch-count"))
         for call in rec.engine_calls:
             buckets.setdefault(call.key, call)
